@@ -1,0 +1,100 @@
+"""Shared benchmark harness: one trained small model reused by every table.
+
+The paper evaluates compression of *pretrained* checkpoints; offline we
+train a ~1M-param llama-style MHA model on the copy-rich synthetic corpus
+(copy spans make held-out loss sensitive to KV fidelity) and cache it under
+experiments/bench_model so repeated benchmark runs skip training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.models.compress as C
+from repro import checkpoint as ckpt
+from repro.core import ReCalKVConfig
+from repro.data import DataConfig, batch as data_batch
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.runtime import TrainConfig, train_loop
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench_model")
+
+CFG = ModelConfig(
+    name="bench-110m-proxy", family="dense",
+    num_layers=4, d_model=128, num_heads=8, num_kv_heads=8, d_head=16,
+    d_ff=352, vocab_size=512, dtype=jnp.float32, scan_layers=False,
+    remat=False, attn_chunk=64, tie_embeddings=True,
+)
+DC = DataConfig(vocab_size=CFG.vocab_size, seq_len=128, copy_frac=0.6)
+TRAIN_STEPS = 300
+
+
+def _batch(split, step, bs=8):
+    return {k: jnp.asarray(v) for k, v in data_batch(DC, split, step, bs).items()}
+
+
+def get_trained(steps: int = TRAIN_STEPS):
+    """Train (or load cached) the shared dense benchmark model."""
+    params0 = T.init_params(CFG, jax.random.PRNGKey(0))
+    latest = ckpt.latest_step(BENCH_DIR)
+    if latest == steps:
+        return ckpt.restore(BENCH_DIR, steps, {"params": params0})["params"]
+    out = train_loop(
+        CFG, AdamWConfig(lr=3e-3),
+        TrainConfig(microbatches=1, warmup_steps=20, total_steps=steps,
+                    schedule="cosine"),
+        lambda s: _batch("train", s), logger=lambda *_: None)
+    ckpt.save(BENCH_DIR, steps, {"params": out["params"]}, keep_last=1)
+    return out["params"]
+
+
+def calibration_stats(params, num_batches: int = 6):
+    calib = [_batch("calib", s, 4) for s in range(num_batches)]
+    return C.capture_calibration(CFG, params, calib), calib
+
+
+def eval_ppl(cfg, params, num_batches: int = 8) -> float:
+    tot = cnt = 0.0
+    for s in range(num_batches):
+        b = _batch("valid", s)
+        hidden, _ = T.forward_hidden(cfg, params, b["tokens"])
+        t, c = T.chunked_xent(cfg, params, hidden, b["labels"])
+        tot += float(t)
+        cnt += float(c)
+    return float(jnp.exp(tot / cnt))
+
+
+def compress_with(params, stats, *, keep_ratio, use_hsr=True,
+                  use_calibration=True, use_whitening=True, group_size=4,
+                  fisher=None):
+    rc = ReCalKVConfig(keep_ratio=keep_ratio, group_size=group_size,
+                       use_hsr=use_hsr, use_calibration=use_calibration,
+                       use_whitening=use_whitening,
+                       use_fisher=fisher is not None,
+                       min_rank=8)
+    fk, fv = fisher if fisher is not None else (None, None)
+    return C.compress_model(CFG, params, stats, rc, fk, fv)
+
+
+def timed(fn, *args, repeats=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, out)
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def emit(rows):
+    """Print the required ``name,us_per_call,derived`` CSV."""
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', 0):.1f},{r['derived']}")

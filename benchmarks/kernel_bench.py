@@ -1,0 +1,107 @@
+"""Kernel microbenchmarks (paper's efficiency figures).
+
+Two views, because this container has no TPU:
+  * WALL: XLA-path decode step timings on CPU — latent (ReCalKV) vs dense
+    cache at the same model size; the ratio tracks the bytes ratio on
+    bandwidth-bound hardware.
+  * ANALYTIC: per-call FLOPs / HBM bytes / arithmetic intensity of each
+    Pallas kernel at production shapes (what the TPU roofline sees).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.models import transformer as T
+
+
+def decode_bench(arch="qwen3-4b", S=256, B=4):
+    rows = []
+    timings = {}
+    for tag, kw in {"dense": {}, "recalkv": {"recalkv_ratio": 0.5}}.items():
+        cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
+                                  dtype=jnp.float32)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        cache = T.init_decode_cache(cfg, B, S)
+        toks = jnp.zeros((B,), jnp.int32)
+        cur = jnp.full((B,), S - 1, jnp.int32)
+        step = jax.jit(lambda p, c, t, u: T.decode_step(cfg, p, c, t, u))
+        us = common.timed(lambda: step(params, cache, toks, cur), repeats=5)
+        cache_bytes = sum(l.size * l.dtype.itemsize
+                          for l in jax.tree.leaves(cache))
+        timings[tag] = us
+        rows.append({"name": f"kernel/decode_step/{tag}",
+                     "us_per_call": us,
+                     "derived": f"cache_bytes={cache_bytes}"})
+    rows.append({"name": "kernel/decode_step/latent_vs_dense_ratio",
+                 "us_per_call": 0,
+                 "derived": f"{timings['recalkv'] / timings['dense']:.3f}"})
+    return rows
+
+
+def analytic_rows():
+    """Roofline terms for the latent_decode kernel at production shapes."""
+    rows = []
+    cases = {
+        # arch-like: (B, S, G, rk, rv, s, qpk, dh)
+        "danube_decode32k": (128, 4096, 2, 160, 160, 4, 4, 80),
+        "qwen3moe_decode32k": (128, 32768, 1, 256, 256, 4, 16, 128),
+        "gemma3_global32k": (128, 32768, 2, 512, 512, 4, 2, 256),
+    }
+    for name, (B, S, G, rk, rv, s, qpk, dh) in cases.items():
+        Hg = s * qpk
+        bytes_latent = B * S * G * (rk + rv) * 2           # the cache read
+        bytes_dense = B * S * G * s * dh * 2 * 2           # dense k+v read
+        flops_recon = 2 * B * S * G * rk * s * dh          # zk @ R_k
+        flops_attn = 2 * B * S * G * Hg * dh + 2 * B * S * G * Hg * rv
+        flops = flops_recon + flops_attn
+        t_mem = bytes_latent / 819e9
+        t_cmp = flops / 197e12
+        ai = flops / bytes_latent
+        rows.append({
+            "name": f"kernel/latent_decode/{name}",
+            "us_per_call": t_mem * 1e6 if t_mem > t_cmp else t_cmp * 1e6,
+            "derived": (f"ai={ai:.0f}flops/B bytes_vs_dense="
+                        f"{bytes_latent/bytes_dense:.2f} "
+                        f"bound={'mem' if t_mem > t_cmp else 'compute'}"),
+        })
+    return rows
+
+
+def interpret_validation_rows():
+    """Record that every kernel matches its oracle (quick re-check)."""
+    from repro.kernels import ops, ref
+    from repro.kernels.latent_decode import latent_decode_attention
+    rng = np.random.default_rng(0)
+    B, S, G, rk, rv, s, qpk, dh = 2, 256, 2, 32, 32, 2, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, G, s * qpk, dh)), jnp.float32)
+    zk = jnp.asarray(rng.normal(size=(B, S, G, rk)), jnp.float32)
+    zv = jnp.asarray(rng.normal(size=(B, S, G, rv)), jnp.float32)
+    r_k = jnp.asarray(rng.normal(size=(G, rk, s * dh)) * rk ** -0.5, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cos, sin = ops.rope_tables_for(pos, dh, 1e4)
+    bias = ops.decode_bias(pos, jnp.full((B,), S - 1), None)
+    o_ref = ref.latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, 0.25)
+    o_ker = latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
+                                    scale=0.25, block_s=128, interpret=True)
+    err = float(jnp.max(jnp.abs(o_ref - o_ker)))
+    return [{"name": "kernel/latent_decode/interpret_allclose",
+             "us_per_call": 0, "derived": f"max_err={err:.2e}"}]
+
+
+def run(fast: bool = False):
+    rows = []
+    rows += decode_bench()
+    rows += analytic_rows()
+    rows += interpret_validation_rows()
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,81 @@
+"""Roofline reporting: reads experiments/dryrun.jsonl, emits the per-cell
+three-term table (also rendered to experiments/roofline.md for
+EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun.jsonl")
+
+
+def load(mesh="16x16"):
+    if not os.path.exists(DRYRUN):
+        return []
+    best: dict[tuple, dict] = {}
+    with open(DRYRUN) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("mesh") != mesh:
+                continue
+            best[(r["arch"], r["shape"])] = r   # last write wins (re-runs)
+    return list(best.values())
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | variant | t_compute | t_memory | t_collective |"
+           " bottleneck | useful/HLO | MFU bound | HBM GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skipped: {r['reason']} | — | — | — |\n")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('variant','?')} "
+                       f"| ERROR | | | {r.get('error','')[:60]} | | | |\n")
+            continue
+        f = r["roofline"]
+        mem = r["memory"].get("total_hbm_bytes", 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} "
+            f"| {f['t_compute_s']:.2e} | {f['t_memory_s']:.2e} "
+            f"| {f['t_collective_s']:.2e} | **{f['bottleneck']}** "
+            f"| {f['useful_flops_frac']:.2f} | {f['mfu_bound']:.3f} "
+            f"| {mem:.1f} |\n")
+    return "".join(out)
+
+
+def run(fast: bool = False):
+    rows = load()
+    csv = []
+    for r in rows:
+        if r["status"] != "ok":
+            csv.append({"name": f"roofline/{r['arch']}/{r['shape']}",
+                        "us_per_call": 0,
+                        "derived": r["status"] + ":" + r.get("reason", r.get("error", ""))[:40]})
+            continue
+        f = r["roofline"]
+        dom = max(f["t_compute_s"], f["t_memory_s"], f["t_collective_s"])
+        csv.append({"name": f"roofline/{r['arch']}/{r['shape']}/{r['variant']}",
+                    "us_per_call": dom * 1e6,
+                    "derived": (f"bottleneck={f['bottleneck']} "
+                                f"mfu_bound={f['mfu_bound']:.3f} "
+                                f"useful={f['useful_flops_frac']:.2f}")})
+    md_path = os.path.join(os.path.dirname(DRYRUN), "roofline.md")
+    if rows:
+        with open(md_path, "w") as fh:
+            fh.write("## Roofline (single-pod 16x16, per-device terms)\n\n")
+            fh.write(markdown_table(rows))
+    return csv
+
+
+if __name__ == "__main__":
+    from benchmarks import common
+    common.emit(run())

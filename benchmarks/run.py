@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table + kernels + roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast] [--only tableN]``
+prints ``name,us_per_call,derived`` CSV for every row of every table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import common
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer ratios/batches (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes, e.g. table1,roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (kernel_bench, roofline, table1_quality,
+                            table2_longcontext, table3_ablation, table4_quant)
+    modules = {
+        "table1": table1_quality,
+        "table2": table2_longcontext,
+        "table3": table3_ablation,
+        "table4": table4_quant,
+        "kernels": kernel_bench,
+        "roofline": roofline,
+    }
+    if args.only:
+        keep = {s.strip() for s in args.only.split(",")}
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules.items():
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=args.fast)
+            common.emit(rows)
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:  # noqa: BLE001 — keep the suite running
+            failures += 1
+            print(f"{name}/ERROR,0,{traceback.format_exc(limit=1).splitlines()[-1]}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Table 3: ablation at a fixed aggressive ratio — HSR / calibration / both.
+
+Paper anchor (ordering): none > hsr-only ~ calib-only > both, in PPL."""
+
+from __future__ import annotations
+
+from benchmarks import common
+
+VARIANTS = {
+    "none": dict(use_hsr=False, use_calibration=False),
+    "hsr_only": dict(use_hsr=True, use_calibration=False),
+    "calib_only": dict(use_hsr=False, use_calibration=True),
+    "both": dict(use_hsr=True, use_calibration=True),
+}
+
+
+def run(fast: bool = False):
+    params = common.get_trained()
+    stats, _ = common.calibration_stats(params)
+    keep = 0.3  # paper uses 80% compression; 70% keeps the tiny model sane
+    rows = []
+    ppls = {}
+    # NOTE: whitening OFF for the ablation base — whitened SVD is already
+    # the global optimum of the calibration objective (ALS then adds ~0;
+    # see test_calibrate_matches_whitened_svd_quality), so the paper's
+    # "calibration helps" row is only visible against an unwhitened base,
+    # matching the paper's own plain-SVD ablation baseline.
+    for name, kw in VARIANTS.items():
+        ccfg, cp = common.compress_with(params, stats, keep_ratio=keep,
+                                        use_whitening=False, **kw)
+        ppls[name] = common.eval_ppl(ccfg, cp, 4 if fast else 8)
+        rows.append({"name": f"table3/{name}/ppl", "us_per_call": 0,
+                     "derived": f"{ppls[name]:.3f}"})
+    ok = (ppls["both"] <= ppls["hsr_only"] * 1.02
+          and ppls["both"] <= ppls["calib_only"] * 1.02
+          and ppls["hsr_only"] <= ppls["none"] * 1.02
+          and ppls["calib_only"] <= ppls["none"] * 1.02)
+    rows.append({"name": "table3/ordering_components_help", "us_per_call": 0,
+                 "derived": "PASS" if ok else "FAIL"})
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

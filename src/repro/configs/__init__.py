@@ -1,0 +1,101 @@
+"""Architecture registry: the 10 assigned configs + smoke variants + shapes.
+
+``get_config(arch)`` returns the exact published configuration;
+``get_config(arch, smoke=True)`` returns a reduced same-family config for
+CPU tests; ``get_config(arch, recalkv_ratio=0.5)`` attaches a uniform-rank
+ReCalKV latent cache at the given *kept* fraction (None where the technique
+is inapplicable — see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.core.svd import effective_rank_for_ratio
+from repro.models.config import ModelConfig, ReCalKVRuntime
+
+ARCHS: tuple[str, ...] = (
+    "llama-3.2-vision-11b",
+    "h2o-danube-1.8b",
+    "qwen3-4b",
+    "gemma3-12b",
+    "minicpm-2b",
+    "whisper-small",
+    "falcon-mamba-7b",
+    "deepseek-v3-671b",
+    "qwen3-moe-235b-a22b",
+    "recurrentgemma-9b",
+)
+
+_MODULES = {
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "h2o-danube-1.8b": "h2o_danube_1p8b",
+    "qwen3-4b": "qwen3_4b",
+    "gemma3-12b": "gemma3_12b",
+    "minicpm-2b": "minicpm_2b",
+    "whisper-small": "whisper_small",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+# ReCalKV applies to archs with cached RoPE'd attention; Mamba has no
+# attention, DeepSeek's MLA is already a (trained) latent cache.
+RECALKV_APPLICABLE = {
+    "llama-3.2-vision-11b": True,
+    "h2o-danube-1.8b": True,
+    "qwen3-4b": True,
+    "gemma3-12b": True,
+    "minicpm-2b": True,
+    "whisper-small": True,
+    "falcon-mamba-7b": False,
+    "deepseek-v3-671b": False,
+    "qwen3-moe-235b-a22b": True,
+    "recurrentgemma-9b": True,
+}
+
+# (seq_len, global_batch, kind); kind: "train" lowers train_step,
+# "decode" lowers serve_step (one token against a seq_len cache).
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# long_500k requires a sub-quadratic cache: SSM / hybrid / windowed archs
+# run it; pure full-attention archs (and the 448-position whisper decoder)
+# skip it, per the assignment rule (DESIGN.md §4).
+LONG_CONTEXT_ARCHS = {
+    "falcon-mamba-7b", "recurrentgemma-9b", "gemma3-12b", "h2o-danube-1.8b",
+}
+
+
+def shape_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "pure full-attention arch: 500k decode is quadratic-cost"
+    return True, ""
+
+
+def get_config(arch: str, *, smoke: bool = False,
+               recalkv_ratio: float | None = None) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    cfg: ModelConfig = mod.SMOKE if smoke else mod.FULL
+    if recalkv_ratio is not None:
+        if not RECALKV_APPLICABLE[arch]:
+            raise ValueError(
+                f"ReCalKV inapplicable to {arch} (see DESIGN.md §Arch-applicability)")
+        s = max(1, min(4, cfg.num_kv_heads))
+        width = s * cfg.d_head
+        rank = effective_rank_for_ratio(width, recalkv_ratio)
+        cfg = dataclasses.replace(
+            cfg, recalkv=ReCalKVRuntime(rank_k=rank, rank_v=rank, group_size=s))
+    return cfg
+
+
+def all_configs(smoke: bool = False) -> dict[str, ModelConfig]:
+    return {a: get_config(a, smoke=smoke) for a in ARCHS}

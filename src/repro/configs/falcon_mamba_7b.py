@@ -1,0 +1,40 @@
+"""falcon-mamba-7b [ssm] — 64L d_model=4096 (attention-free) vocab=65024,
+ssm_state=16, Mamba-1 architecture.  [arXiv:2410.05355; unverified]
+
+ReCalKV is INAPPLICABLE (DESIGN.md §Arch-applicability): there is no KV
+cache; the recurrent state (B, d_inner, d_state) is already O(1) in
+sequence length.  Implemented natively with the chunked selective scan.
+head/d_ff fields are placeholders (no attention / no separate FFN).
+"""
+
+from repro.models.config import MambaConfig, ModelConfig
+
+FULL = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    num_layers=64,
+    d_model=4096,
+    num_heads=1,
+    num_kv_heads=1,
+    d_head=64,
+    d_ff=0,
+    vocab_size=65024,
+    layer_pattern=("mamba",),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-7b-smoke",
+    family="ssm",
+    num_layers=3,
+    d_model=64,
+    num_heads=1,
+    num_kv_heads=1,
+    d_head=16,
+    d_ff=0,
+    vocab_size=257,
+    layer_pattern=("mamba",),
+    mamba=MambaConfig(d_state=4, d_conv=4, expand=2),
+    attn_chunk=16,
+)

@@ -1,0 +1,46 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000, RG-LRU + local attention in a (recurrent, recurrent, attn)
+pattern.  [arXiv:2402.19427; unverified]
+
+38 layers = 12 periods of (rglru, rglru, local) + 2 trailing rglru blocks
+(handled by the unrolled suffix).  kv=1 (MQA) makes HSR grouping degenerate
+(one head -> one group of 1): those layers get plain truncated+calibrated
+SVD; OCMF fully applies (DESIGN.md §Arch-applicability).  RG-LRU layers are
+attention-free.  Qualifies for long_500k (bounded 2048-window cache).
+"""
+
+from repro.models.config import ModelConfig, RGLRUConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_head=256,
+    d_ff=12288,
+    vocab_size=256000,
+    layer_pattern=("rglru", "rglru", "local"),
+    sliding_window=2048,
+    rglru=RGLRUConfig(lru_width=4096, conv_width=4),
+    embed_scale=True,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-9b-smoke",
+    family="hybrid",
+    num_layers=5,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    d_head=16,
+    d_ff=128,
+    vocab_size=257,
+    layer_pattern=("rglru", "rglru", "local"),
+    sliding_window=16,
+    rglru=RGLRUConfig(lru_width=64, conv_width=4),
+    embed_scale=True,
+    attn_chunk=16,
+)

@@ -1,0 +1,51 @@
+"""ReCalKV core — the paper's contribution as composable JAX modules.
+
+Offline (compression-time) components:
+  svd        truncated / whitened / grouped SVD primitives
+  cka        head-similarity metrics (covariance-based linear CKA)
+  reorder    greedy HSR head grouping
+  calibrate  alternating closed-form factor refinement (OCMF part 1)
+  fusion     block fusion of R_v into W_o + permutation folding (OCMF part 2)
+  fisher     empirical Fisher + water-filling rank allocation
+  pipeline   Algorithm 1 end-to-end
+"""
+
+from repro.core.calibrate import CalibrationResult, calibrate_factors
+from repro.core.cka import head_cka_from_cov, head_cka_matrix, linear_cka
+from repro.core.fisher import RankAllocation, allocate, allocate_ratios, empirical_fisher
+from repro.core.fusion import (
+    fold_head_permutation,
+    fuse_output_projection,
+    fused_output_apply,
+    inverse_permutation,
+)
+from repro.core.pipeline import (
+    AttnWeights,
+    CalibStats,
+    CompressedAttention,
+    ReCalKVConfig,
+    collect_stats,
+    compress_attention_layer,
+    compress_model_layers,
+    merge_stats,
+)
+from repro.core.reorder import greedy_group_heads, groups_to_permutation, identity_groups
+from repro.core.svd import (
+    LowRankFactors,
+    effective_rank_for_ratio,
+    grouped_svd,
+    truncated_svd,
+    whitened_svd,
+)
+
+__all__ = [
+    "AttnWeights", "CalibStats", "CalibrationResult", "CompressedAttention",
+    "LowRankFactors", "RankAllocation", "ReCalKVConfig",
+    "allocate", "allocate_ratios", "calibrate_factors", "collect_stats",
+    "compress_attention_layer", "compress_model_layers",
+    "effective_rank_for_ratio", "empirical_fisher", "fold_head_permutation",
+    "fuse_output_projection", "fused_output_apply", "greedy_group_heads",
+    "grouped_svd", "groups_to_permutation", "head_cka_from_cov",
+    "head_cka_matrix", "identity_groups", "inverse_permutation", "linear_cka",
+    "merge_stats", "truncated_svd", "whitened_svd",
+]

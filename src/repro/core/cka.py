@@ -1,0 +1,66 @@
+"""Centered Kernel Alignment between attention-head representations.
+
+We use the feature-space form of *linear* CKA (Kornblith et al., 2019):
+
+    CKA(X, Y) = ||Yc^T Xc||_F^2 / (||Xc^T Xc||_F ||Yc^T Yc||_F)
+
+which is identical to the Gram/HSIC formulation in the paper (eqs. (2)-(3))
+but avoids materializing N x N Gram matrices for N calibration tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_cka(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """CKA between two representation matrices (N, d1), (N, d2)."""
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    Xc = X - X.mean(axis=0, keepdims=True)
+    Yc = Y - Y.mean(axis=0, keepdims=True)
+    hsic_xy = jnp.sum((Yc.T @ Xc) ** 2)
+    hsic_xx = jnp.sqrt(jnp.sum((Xc.T @ Xc) ** 2))
+    hsic_yy = jnp.sqrt(jnp.sum((Yc.T @ Yc) ** 2))
+    return hsic_xy / (hsic_xx * hsic_yy + 1e-12)
+
+
+def head_cka_from_cov(W: jax.Array, cov_centered: jax.Array, num_heads: int) -> jax.Array:
+    """Pairwise head CKA computed from the *centered input covariance* only.
+
+    For per-head key features ``Z_h = Xc @ W_h`` (Xc token-centered), the
+    linear-CKA cross term is ``||Z_j^T Z_i||_F^2 = ||W_i^T C W_j||_F^2`` with
+    ``C = Xc^T Xc``.  This avoids ever materializing the (N, d_h) features --
+    the calibration pass only accumulates C (d_model, d_model).
+
+    W: (d_model, H * d_h) key projection;  cov_centered: (d_model, d_model).
+    Returns the symmetric (H, H) CKA matrix with unit diagonal.
+    """
+    C = cov_centered.astype(jnp.float32)
+    m, n = W.shape
+    d_h = n // num_heads
+    Wh = W.astype(jnp.float32).reshape(m, num_heads, d_h).transpose(1, 0, 2)  # (H, m, d_h)
+    CW = jnp.einsum("mk,hkd->hmd", C, Wh)          # (H, m, d_h) = C @ W_h
+    G = jnp.einsum("imd,jme->ijde", Wh, CW)        # (H, H, d_h, d_h) = W_i^T C W_j
+    cross = jnp.sum(G**2, axis=(2, 3))             # (H, H)
+    norms = jnp.sqrt(jnp.diagonal(cross))
+    return cross / (norms[:, None] * norms[None, :] + 1e-12)
+
+
+def head_cka_matrix(head_reps: jax.Array) -> jax.Array:
+    """Pairwise CKA similarity matrix (eq. (5)).
+
+    head_reps: (H, N, d_h) -- per-head key representations on calibration
+    tokens.  Returns a symmetric (H, H) matrix with unit diagonal.
+
+    Vectorized: for centered per-head features Zh, CKA(i, j) depends on the
+    cross products Zi^T Zj; we compute all H^2 of them in one einsum.
+    """
+    Z = head_reps.astype(jnp.float32)
+    Z = Z - Z.mean(axis=1, keepdims=True)  # center over tokens
+    # cross[i, j] = ||Zj^T Zi||_F^2  (symmetric in i, j)
+    G = jnp.einsum("ind,jne->ijde", Z, Z)  # (H, H, d, d) cross-covariances
+    cross = jnp.sum(G**2, axis=(2, 3))  # (H, H)
+    norms = jnp.sqrt(jnp.diagonal(cross))  # ||Zi^T Zi||_F
+    return cross / (norms[:, None] * norms[None, :] + 1e-12)

@@ -1,0 +1,140 @@
+"""Fisher-information-guided compression-ratio allocation (Palu-style).
+
+The paper (§3.4, Algorithm 1 lines 4-5) follows Palu: estimate the empirical
+Fisher information of each K/V projection layer from calibration gradients,
+
+    F(W) = sum_i  (dL/dW)_i^2        (diagonal empirical Fisher, summed)
+
+and allocate *more rank* (a gentler compression ratio) to layers with higher
+Fisher score, subject to a global target cache budget.
+
+Allocation is a water-filling problem: find per-layer keep-ratios rho_l in
+[rho_min, rho_max] proportional to normalized importance w_l = F_l^alpha
+such that sum_l rho_l * n_l = target_ratio * sum_l n_l (n_l = layer cache
+width).  We solve it with a scaling + clip + redistribute loop, then round
+each rank to a TPU-friendly multiple.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RankAllocation:
+    """Per-layer keep-ratios and ranks for one projection kind (K or V)."""
+
+    ratios: tuple[float, ...]          # per-layer keep ratio in (0, 1]
+    ranks: tuple[int, ...]             # per-group rank, rounded
+    fisher: tuple[float, ...]          # the scores that produced them
+
+    def mean_ratio(self) -> float:
+        return float(np.mean(self.ratios))
+
+
+def empirical_fisher(
+    loss_fn: Callable[..., jax.Array],
+    params,
+    batches: Sequence,
+) -> dict:
+    """Diagonal empirical Fisher of ``params`` under ``loss_fn``.
+
+    loss_fn(params, batch) -> scalar.  Returns a pytree matching ``params``
+    with summed squared gradients accumulated over ``batches``.
+    """
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    fisher = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    for batch in batches:
+        g = grad_fn(params, batch)
+        fisher = jax.tree.map(
+            lambda f, gi: f + gi.astype(jnp.float32) ** 2, fisher, g
+        )
+    return fisher
+
+
+def layer_scores(fisher_tree: Mapping[str, jax.Array]) -> dict[str, float]:
+    """Collapse each layer's Fisher tensor to a scalar importance score."""
+    return {k: float(jnp.sum(v)) for k, v in fisher_tree.items()}
+
+
+def allocate_ratios(
+    scores: Sequence[float],
+    target_ratio: float,
+    *,
+    alpha: float = 0.5,
+    rho_min: float = 0.0625,
+    rho_max: float = 1.0,
+    max_iters: int = 64,
+) -> list[float]:
+    """Water-filling: keep-ratios proportional to scores^alpha, meeting the
+    global budget exactly (up to clipping feasibility).
+
+    ``target_ratio`` is the *kept* fraction of the cache (1 - compression).
+    """
+    n = len(scores)
+    if n == 0:
+        return []
+    if not (0.0 < target_ratio <= 1.0):
+        raise ValueError(f"target_ratio must be in (0, 1], got {target_ratio}")
+    s = np.asarray(scores, dtype=np.float64)
+    s = np.maximum(s, 1e-30) ** alpha
+    w = s / s.mean()
+
+    lo_feasible = rho_min
+    hi_feasible = rho_max
+    if not (lo_feasible <= target_ratio <= hi_feasible):
+        # Budget outside the clip box: everything saturates.
+        rho = np.full(n, np.clip(target_ratio, rho_min, rho_max))
+        return rho.tolist()
+
+    rho = np.clip(target_ratio * w, rho_min, rho_max)
+    for _ in range(max_iters):
+        deficit = target_ratio * n - rho.sum()
+        if abs(deficit) < 1e-9 * n:
+            break
+        free = (rho > rho_min + 1e-12) if deficit < 0 else (rho < rho_max - 1e-12)
+        if not free.any():
+            break
+        rho[free] += deficit / free.sum()
+        rho = np.clip(rho, rho_min, rho_max)
+    return rho.tolist()
+
+
+def ratios_to_ranks(
+    ratios: Sequence[float],
+    group_width: int,
+    *,
+    multiple: int = 8,
+    min_rank: int = 8,
+) -> list[int]:
+    """Convert keep-ratios to per-group ranks rounded for MXU tiling."""
+    ranks = []
+    for rho in ratios:
+        r = int(round(group_width * rho / multiple)) * multiple
+        ranks.append(max(min_rank, min(group_width, r)))
+    return ranks
+
+
+def allocate(
+    scores: Sequence[float],
+    target_ratio: float,
+    group_width: int,
+    **kwargs,
+) -> RankAllocation:
+    """Scores -> ratios -> rounded ranks, re-deriving the achieved ratios."""
+    ratios = allocate_ratios(scores, target_ratio, **{
+        k: v for k, v in kwargs.items() if k in ("alpha", "rho_min", "rho_max")
+    })
+    ranks = ratios_to_ranks(
+        ratios, group_width,
+        multiple=kwargs.get("multiple", 8), min_rank=kwargs.get("min_rank", 8),
+    )
+    achieved = [r / group_width for r in ranks]
+    return RankAllocation(
+        ratios=tuple(achieved), ranks=tuple(ranks), fisher=tuple(float(x) for x in scores)
+    )

@@ -1,0 +1,124 @@
+"""Matrix Fusion (OCMF, second half) + offline head-permutation folding.
+
+Fusion (paper eq. (9)-(11)). With grouped value factors
+``W_v[:, group g] ~= L_g R_g`` the cache stores the group latent
+``z_g = x @ L_g`` and per-query-head attention output lives in latent space:
+``o_h = A_h @ z_{g(h)}  (r_v floats)``.  The exact identity
+
+    Output = sum_h (A_h V_h) W_o^{(h)}
+           = sum_h (A_h z_{g(h)}) (R^{(h)} W_o^{(h)})
+
+lets us precompute the *block-fused* output projection
+
+    W~_o[h] = R_{g(h)}[:, head-slice of h] @ W_o[rows of head h]   (r_v, d)
+
+so decode never reconstructs values (DESIGN.md §1.1: fusion must keep the
+per-head block structure; a dense ``R_v W_o`` only type-checks single-head).
+
+Permutation folding (Fig. 3, done offline).  HSR yields a kv-head permutation
+``perm`` (new position -> old head index).  Instead of permuting activations
+at runtime we permute the *weights* once:
+
+  * W_k columns: kv-head blocks reordered by ``perm``;
+  * W_v columns: same ``perm`` (K and V share the kv-head index, so value
+    grouping rides on the same ordering — see DESIGN.md deviation #1);
+  * W_q columns: each kv head serves a contiguous block of q_per_kv query
+    heads; blocks follow ``perm``;
+  * W_o rows: query-head blocks follow the same order.
+
+Attention is permutation-equivariant over heads (the head sum commutes), so
+the folded model is numerically identical up to float reassociation.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def head_slices(n_heads: int, d_h: int) -> list[slice]:
+    return [slice(h * d_h, (h + 1) * d_h) for h in range(n_heads)]
+
+
+def fuse_output_projection(
+    R_v: jax.Array,            # (G, r_v, s * d_h) grouped value right-factors
+    W_o: jax.Array,            # (H_q * d_h, d_model)
+    num_q_heads: int,
+    num_kv_heads: int,
+) -> jax.Array:
+    """Block-fused output projection W~_o: (H_q, r_v, d_model).
+
+    Query head h reads value kv-head ``kv(h) = h // q_per_kv``; that head
+    lives in group ``g = kv(h) // s`` at within-group slot ``j = kv(h) % s``.
+    """
+    G, r_v, sdh = R_v.shape
+    d_model = W_o.shape[1]
+    d_h = W_o.shape[0] // num_q_heads
+    s = sdh // d_h
+    if G * s != num_kv_heads:
+        raise ValueError(f"R_v groups {G}x{s} != kv heads {num_kv_heads}")
+    q_per_kv = num_q_heads // num_kv_heads
+
+    blocks = []
+    for h in range(num_q_heads):
+        kv = h // q_per_kv
+        g, j = kv // s, kv % s
+        Rh = R_v[g, :, j * d_h : (j + 1) * d_h]          # (r_v, d_h)
+        Woh = W_o[h * d_h : (h + 1) * d_h, :]            # (d_h, d_model)
+        blocks.append(Rh @ Woh)
+    return jnp.stack(blocks)                              # (H_q, r_v, d_model)
+
+
+def fused_output_apply(o_latent: jax.Array, W_o_fused: jax.Array) -> jax.Array:
+    """Apply the fused projection: (..., H_q, r_v) x (H_q, r_v, d) -> (..., d)."""
+    return jnp.einsum("...hr,hrd->...d", o_latent, W_o_fused)
+
+
+# ---------------------------------------------------------------------------
+# Offline permutation folding
+# ---------------------------------------------------------------------------
+
+def _permute_blocks(W: jax.Array, perm: np.ndarray, block: int, axis: int) -> jax.Array:
+    """Permute contiguous ``block``-sized chunks of ``W`` along ``axis``."""
+    n = W.shape[axis]
+    if n % block != 0:
+        raise ValueError(f"axis size {n} not divisible by block {block}")
+    nb = n // block
+    if len(perm) != nb:
+        raise ValueError(f"perm length {len(perm)} != num blocks {nb}")
+    shape = list(W.shape)
+    shape[axis : axis + 1] = [nb, block]
+    Wb = W.reshape(shape)
+    Wp = jnp.take(Wb, jnp.asarray(perm), axis=axis)
+    return Wp.reshape(W.shape)
+
+
+def fold_head_permutation(
+    W_q: jax.Array,            # (d_model, H_q * d_h)
+    W_k: jax.Array,            # (d_model, H_kv * d_h)
+    W_v: jax.Array,            # (d_model, H_kv * d_h)
+    W_o: jax.Array,            # (H_q * d_h, d_model)
+    perm: Sequence[int],       # kv-head permutation, new position -> old index
+    num_q_heads: int,
+    num_kv_heads: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Bake the HSR kv-head permutation into the attention weights."""
+    perm = np.asarray(perm, dtype=np.int64)
+    d_h = W_k.shape[1] // num_kv_heads
+    q_per_kv = num_q_heads // num_kv_heads
+    Wk = _permute_blocks(W_k, perm, d_h, axis=1)
+    Wv = _permute_blocks(W_v, perm, d_h, axis=1)
+    # Query heads move in kv-sized blocks of q_per_kv heads.
+    Wq = _permute_blocks(W_q, perm, q_per_kv * d_h, axis=1)
+    Wo = _permute_blocks(W_o, perm, q_per_kv * d_h, axis=0)
+    return Wq, Wk, Wv, Wo
+
+
+def inverse_permutation(perm: Sequence[int]) -> np.ndarray:
+    perm = np.asarray(perm, dtype=np.int64)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    return inv

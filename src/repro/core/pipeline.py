@@ -1,0 +1,249 @@
+"""ReCalKV Algorithm 1 — end-to-end post-training compression pipeline.
+
+Consumes per-layer attention weights + calibration statistics, produces
+``CompressedAttention`` weight bundles that the model zoo plugs into its
+latent-cache decode path.  Everything here runs *offline* (compression
+time); the artifacts it emits add zero runtime branching.
+
+Pipeline per layer (paper Algorithm 1):
+  Keys   : CKA(head sim) -> greedy HSR grouping -> fold permutation into
+           (W_q, W_k, W_v, W_o) -> grouped (whitened) SVD -> (L_k, R_k)
+  Values : grouped SVD (key-aligned groups, DESIGN.md §1.1) -> offline
+           ALS calibration -> block fusion of R_v into W_o -> (L_v, W~_o)
+  Ranks  : Fisher-guided water-filling across layers (fisher.py)
+
+Calibration statistics are summarized as second moments (cov = X^T X plus
+the token mean), so the capture pass is O(d_model^2) memory per layer --
+no activations are retained (see cka.head_cka_from_cov).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibrate as _calibrate
+from repro.core import cka as _cka
+from repro.core import fisher as _fisher
+from repro.core import fusion as _fusion
+from repro.core import reorder as _reorder
+from repro.core import svd as _svd
+
+
+@dataclasses.dataclass(frozen=True)
+class ReCalKVConfig:
+    """Knobs for the compression pipeline.
+
+    ``keep_ratio`` is the *kept* fraction of KV-cache bytes; the paper's
+    "50% compression ratio" is ``keep_ratio=0.5``.
+    """
+
+    keep_ratio: float = 0.5
+    group_size: int = 4
+    use_hsr: bool = True            # CKA reordering for key groups
+    use_calibration: bool = True    # ALS refinement of value factors
+    use_whitening: bool = True      # SVD-LLM whitening before truncation
+    use_fisher: bool = True         # per-layer rank allocation
+    calib_iters: int = 8
+    rank_multiple: int = 8
+    min_rank: int = 8
+    alpha: float = 0.5
+    rho_min: float = 0.0625
+    rho_max: float = 1.0
+
+    def effective_group_size(self, num_kv_heads: int) -> int:
+        return max(1, min(self.group_size, num_kv_heads))
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnWeights:
+    """Dense attention weights for one layer (row-vector convention)."""
+
+    W_q: jax.Array   # (d_model, H_q * d_h)
+    W_k: jax.Array   # (d_model, H_kv * d_h)
+    W_v: jax.Array   # (d_model, H_kv * d_h)
+    W_o: jax.Array   # (H_q * d_h, d_model)
+    num_q_heads: int
+    num_kv_heads: int
+
+    @property
+    def d_head(self) -> int:
+        return self.W_k.shape[1] // self.num_kv_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibStats:
+    """Second-moment summary of one layer's attention input activations."""
+
+    cov: jax.Array     # (d_model, d_model) = X^T X (uncentered)
+    mean: jax.Array    # (d_model,)
+    count: int         # number of tokens accumulated
+
+    def centered_cov(self) -> jax.Array:
+        mu = self.mean.astype(jnp.float32)
+        return self.cov.astype(jnp.float32) - self.count * jnp.outer(mu, mu)
+
+    @classmethod
+    def identity(cls, d_model: int) -> "CalibStats":
+        return cls(cov=jnp.eye(d_model, dtype=jnp.float32),
+                   mean=jnp.zeros((d_model,), jnp.float32), count=1)
+
+
+def collect_stats(activations: jax.Array) -> CalibStats:
+    """Summarize a (N, d_model) activation matrix."""
+    X = activations.reshape(-1, activations.shape[-1]).astype(jnp.float32)
+    return CalibStats(cov=X.T @ X, mean=X.mean(axis=0), count=X.shape[0])
+
+
+def merge_stats(a: CalibStats, b: CalibStats) -> CalibStats:
+    n = a.count + b.count
+    return CalibStats(
+        cov=a.cov + b.cov,
+        mean=(a.mean * a.count + b.mean * b.count) / n,
+        count=n,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedAttention:
+    """Artifacts replacing one layer's dense K/V path.
+
+    The kv-head permutation is already folded into every weight here;
+    runtime code never permutes activations.
+    """
+
+    W_q: jax.Array        # (d_model, H_q * d_h)   permuted query projection
+    L_k: jax.Array        # (G, d_model, r_k)      key latent down-projection
+    R_k: jax.Array        # (G, r_k, s * d_h)      key reconstruction factor
+    L_v: jax.Array        # (G, d_model, r_v)      value latent down-projection
+    W_o_fused: jax.Array  # (H_q, r_v, d_model)    R_v folded into W_o
+    perm: tuple[int, ...]  # kv-head permutation that was folded in
+    rank_k: int
+    rank_v: int
+    num_q_heads: int
+    num_kv_heads: int
+    group_size: int
+
+    @property
+    def num_groups(self) -> int:
+        return self.L_k.shape[0]
+
+    def cache_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        return self.num_groups * (self.rank_k + self.rank_v) * dtype_bytes
+
+    def dense_cache_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        d_h = self.W_q.shape[1] // self.num_q_heads
+        return 2 * self.num_kv_heads * d_h * dtype_bytes
+
+
+def compress_attention_layer(
+    w: AttnWeights,
+    stats: CalibStats,
+    cfg: ReCalKVConfig,
+    rank_k: int,
+    rank_v: int,
+) -> CompressedAttention:
+    """Run HSR + OCMF on a single attention layer."""
+    s = cfg.effective_group_size(w.num_kv_heads)
+    H_kv = w.num_kv_heads
+    if H_kv % s:
+        raise ValueError(f"kv heads {H_kv} not divisible by group size {s}")
+    cov = stats.cov.astype(jnp.float32)
+
+    # --- Keys: HSR grouping -------------------------------------------------
+    if cfg.use_hsr and s > 1:
+        sim = np.asarray(_cka.head_cka_from_cov(w.W_k, stats.centered_cov(), H_kv))
+        groups = _reorder.greedy_group_heads(sim, s)
+    else:
+        groups = _reorder.identity_groups(H_kv, s)
+    perm = _reorder.groups_to_permutation(groups)
+
+    # Fold the permutation into the weights; groups are contiguous afterwards.
+    W_q, W_k, W_v, W_o = _fusion.fold_head_permutation(
+        w.W_q, w.W_k, w.W_v, w.W_o, perm, w.num_q_heads, w.num_kv_heads
+    )
+    contiguous = _reorder.identity_groups(H_kv, s)
+
+    # --- Keys: grouped (whitened) SVD ---------------------------------------
+    k_factors = _svd.grouped_svd(
+        W_k, contiguous, [rank_k] * len(contiguous), H_kv,
+        cov=cov if cfg.use_whitening else None,
+    )
+    L_k, R_k = _svd.stack_group_factors(k_factors)
+
+    # --- Values: grouped SVD + offline calibration --------------------------
+    v_factors = _svd.grouped_svd(
+        W_v, contiguous, [rank_v] * len(contiguous), H_kv,
+        cov=cov if cfg.use_whitening else None,
+    )
+    if cfg.use_calibration:
+        per_head = _svd.head_columns(W_v, H_kv)
+        calibrated = []
+        for g, f in zip(contiguous, v_factors, strict=True):
+            Wg = jnp.concatenate([per_head[h] for h in g], axis=1)
+            res = _calibrate.calibrate_factors(
+                Wg, cov, f, num_iters=cfg.calib_iters
+            )
+            calibrated.append(res.factors)
+        v_factors = calibrated
+    L_v, R_v = _svd.stack_group_factors(v_factors)
+
+    # --- Values: fuse R_v into the output projection ------------------------
+    W_o_fused = _fusion.fuse_output_projection(
+        R_v, W_o, w.num_q_heads, w.num_kv_heads
+    )
+
+    return CompressedAttention(
+        W_q=W_q, L_k=L_k, R_k=R_k, L_v=L_v, W_o_fused=W_o_fused,
+        perm=tuple(int(p) for p in perm),
+        rank_k=int(rank_k), rank_v=int(rank_v),
+        num_q_heads=w.num_q_heads, num_kv_heads=w.num_kv_heads, group_size=s,
+    )
+
+
+def allocate_layer_ranks(
+    cfg: ReCalKVConfig,
+    num_layers: int,
+    group_width: int,
+    fisher_k: Sequence[float] | None = None,
+    fisher_v: Sequence[float] | None = None,
+) -> tuple[list[int], list[int]]:
+    """Fisher-guided per-layer rank allocation for K and V (Algorithm 1 l.4-5)."""
+    if not cfg.use_fisher or fisher_k is None or fisher_v is None:
+        r = _svd.effective_rank_for_ratio(
+            group_width, cfg.keep_ratio, cfg.rank_multiple, cfg.min_rank
+        )
+        return [r] * num_layers, [r] * num_layers
+    kw = dict(alpha=cfg.alpha, rho_min=cfg.rho_min, rho_max=cfg.rho_max,
+              multiple=cfg.rank_multiple, min_rank=cfg.min_rank)
+    alloc_k = _fisher.allocate(fisher_k, cfg.keep_ratio, group_width, **kw)
+    alloc_v = _fisher.allocate(fisher_v, cfg.keep_ratio, group_width, **kw)
+    return list(alloc_k.ranks), list(alloc_v.ranks)
+
+
+def compress_model_layers(
+    layers: Sequence[AttnWeights],
+    stats: Sequence[CalibStats],
+    cfg: ReCalKVConfig,
+    fisher_k: Sequence[float] | None = None,
+    fisher_v: Sequence[float] | None = None,
+) -> list[CompressedAttention]:
+    """Algorithm 1 over all attention layers of a model."""
+    if len(layers) != len(stats):
+        raise ValueError("one CalibStats required per layer")
+    if not layers:
+        return []
+    w0 = layers[0]
+    s = cfg.effective_group_size(w0.num_kv_heads)
+    group_width = s * w0.d_head
+    ranks_k, ranks_v = allocate_layer_ranks(
+        cfg, len(layers), group_width, fisher_k, fisher_v
+    )
+    return [
+        compress_attention_layer(w, st, cfg, rk, rv)
+        for w, st, rk, rv in zip(layers, stats, ranks_k, ranks_v, strict=True)
+    ]

@@ -1,0 +1,132 @@
+"""Truncated / whitened / grouped SVD primitives for ReCalKV.
+
+Conventions (row-vector, JAX-style):
+  activations  X  : (N, m)   -- N calibration tokens, m = input feature dim
+  weight       W  : (m, n)   -- y = x @ W
+  factors      W ~= L @ R,  L: (m, r), R: (r, n); the cache stores z = x @ L.
+
+Whitening follows SVD-LLM: minimizing ||X W - X L R||_F is equivalent to
+plain truncated SVD of (S^T W) where C = X^T X = S S^T (Cholesky).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankFactors:
+    """A rank-r factorization W ~= L @ R."""
+
+    L: jax.Array  # (m, r)
+    R: jax.Array  # (r, n)
+
+    @property
+    def rank(self) -> int:
+        return self.L.shape[1]
+
+    def reconstruct(self) -> jax.Array:
+        return self.L @ self.R
+
+
+def truncated_svd(W: jax.Array, rank: int) -> LowRankFactors:
+    """Plain Eckart-Young truncated SVD, split symmetrically (eq. (1))."""
+    W = W.astype(jnp.float32)
+    U, s, Vt = jnp.linalg.svd(W, full_matrices=False)
+    r = int(rank)
+    sqrt_s = jnp.sqrt(s[:r])
+    L = U[:, :r] * sqrt_s[None, :]
+    R = sqrt_s[:, None] * Vt[:r, :]
+    return LowRankFactors(L=L, R=R)
+
+
+def _safe_cholesky(C: jax.Array, eps_scale: float = 1e-6) -> jax.Array:
+    """Cholesky of a PSD covariance with adaptive diagonal jitter."""
+    C = C.astype(jnp.float32)
+    m = C.shape[0]
+    jitter = eps_scale * (jnp.trace(C) / m + 1e-30)
+    return jnp.linalg.cholesky(C + jitter * jnp.eye(m, dtype=C.dtype))
+
+
+def whitened_svd(W: jax.Array, cov: jax.Array, rank: int) -> LowRankFactors:
+    """Data-aware truncated SVD (SVD-LLM whitening).
+
+    Minimizes ||X W - X L R||_F exactly for the rank budget, where
+    cov = X^T X.  With cov = I this reduces to ``truncated_svd``.
+    """
+    W = W.astype(jnp.float32)
+    S = _safe_cholesky(cov)  # C = S S^T, S lower-triangular
+    SW = S.T @ W  # whitened weight
+    U, s, Vt = jnp.linalg.svd(SW, full_matrices=False)
+    r = int(rank)
+    sqrt_s = jnp.sqrt(s[:r])
+    # L = S^{-T} U_r sqrt(Sigma_r): solve S^T L = U_r * sqrt_s
+    L = jax.scipy.linalg.solve_triangular(
+        S.T, U[:, :r] * sqrt_s[None, :], lower=False
+    )
+    R = sqrt_s[:, None] * Vt[:r, :]
+    return LowRankFactors(L=L, R=R)
+
+
+def data_weighted_error(W: jax.Array, f: LowRankFactors, cov: jax.Array) -> jax.Array:
+    """||X W - X L R||_F^2 expressed through cov = X^T X (no data needed)."""
+    D = (f.L @ f.R - W).astype(jnp.float32)
+    return jnp.einsum("ij,ik,kj->", D, cov.astype(jnp.float32), D)
+
+
+def frobenius_error(W: jax.Array, f: LowRankFactors) -> jax.Array:
+    return jnp.sum((f.reconstruct() - W.astype(jnp.float32)) ** 2)
+
+
+def head_columns(W: jax.Array, num_heads: int) -> jax.Array:
+    """Reshape (m, H*d_h) -> (H, m, d_h)."""
+    m, n = W.shape
+    d_h = n // num_heads
+    return W.reshape(m, num_heads, d_h).transpose(1, 0, 2)
+
+
+def grouped_svd(
+    W: jax.Array,
+    groups: Sequence[Sequence[int]],
+    ranks: Sequence[int],
+    num_heads: int,
+    cov: jax.Array | None = None,
+) -> list[LowRankFactors]:
+    """Grouped low-rank decomposition (Palu G-LRD, eq. (4)).
+
+    ``groups`` is a list of head-index tuples (the HSR ordering); for group g
+    the columns of the listed heads are concatenated and factorized to
+    ``ranks[g]``.  Whitened when ``cov`` is given.
+    """
+    per_head = head_columns(W, num_heads)  # (H, m, d_h)
+    out: list[LowRankFactors] = []
+    for g, r in zip(groups, ranks, strict=True):
+        Wg = jnp.concatenate([per_head[h] for h in g], axis=1)  # (m, s*d_h)
+        if cov is not None:
+            out.append(whitened_svd(Wg, cov, r))
+        else:
+            out.append(truncated_svd(Wg, r))
+    return out
+
+
+def stack_group_factors(factors: Sequence[LowRankFactors]) -> tuple[jax.Array, jax.Array]:
+    """Stack uniform-rank group factors: (G, m, r) and (G, r, s*d_h)."""
+    ranks = {f.rank for f in factors}
+    if len(ranks) != 1:
+        raise ValueError(f"groups must share a rank to stack, got {sorted(ranks)}")
+    L = jnp.stack([f.L for f in factors])
+    R = jnp.stack([f.R for f in factors])
+    return L, R
+
+
+def effective_rank_for_ratio(
+    width: int, keep_ratio: float, multiple: int = 8, min_rank: int = 8
+) -> int:
+    """Rank giving a ``keep_ratio`` cache footprint, rounded for TPU tiling."""
+    r = int(round(width * keep_ratio / multiple)) * multiple
+    return max(min_rank, min(width, r))

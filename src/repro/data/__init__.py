@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, batch, batches, sequence
+
+__all__ = ["DataConfig", "batch", "batches", "sequence"]

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot-spots ReCalKV touches.
+
+  latent_decode    ReCalKV flash decode over the latent cache (in-VMEM key
+                   reconstruction — never materializes K in HBM)
+  latent_decode_q  the same, over int8 latents (Table-4 quantized cache)
+  flash_prefill    causal / sliding-window flash attention
+
+Each kernel has a pure-jnp oracle in ref.py and a jit wrapper in ops.py.
+Validated with interpret=True on CPU; lowered via Mosaic on TPU.
+"""
+
+from repro.kernels.flash_prefill import flash_prefill_attention
+from repro.kernels.latent_decode import latent_decode_attention
+from repro.kernels.latent_decode_q import latent_decode_attention_quant
+
+__all__ = [
+    "flash_prefill_attention",
+    "latent_decode_attention",
+    "latent_decode_attention_quant",
+]

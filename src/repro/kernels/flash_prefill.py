@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: causal / sliding-window flash-attention prefill.
+
+Standard online-softmax tiling: grid (B, H, nQ, nK) with the key axis
+minor-most; (m, l, acc) scratch carries the running softmax across key
+tiles of one query tile.  GQA folds into the key/value index map
+(kv head = h // q_per_kv).  Sliding windows just tighten the in-block
+position mask; fully-masked key tiles are skipped with @pl.when (no MXU
+work issued) — the TPU analogue of the paper's bounded-reconstruction
+concern for keys.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, causal, window, block_q, block_k, n_k, seq_len):
+    i_q = pl.program_id(2)
+    i_k = pl.program_id(3)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = i_q * block_q
+    k_start = i_k * block_k
+    # static-ish skip bounds (depend only on grid indices)
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32)          # (Bq, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)          # (Bk, dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)          # (Bk, dv)
+        s = (q @ k.T) * scale                           # (Bq, Bk)
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kp < seq_len
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= kp > qp - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[:, 0] = l_prev * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[:, 0] = m_new
+
+    @pl.when(i_k == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, :, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_prefill_attention(q, k, v, *, causal: bool = True,
+                            window: int | None = None, scale: float | None = None,
+                            block_q: int = 256, block_k: int = 256,
+                            interpret: bool = False):
+    """q: (B, T, H, dh); k/v: (B, T, Hkv, d).  Returns (B, T, H, dv)."""
+    B, T, H, dh = q.shape
+    Hkv, dv = k.shape[2], v.shape[3]
+    qpk = H // Hkv
+    scale = scale if scale is not None else dh ** -0.5
+    bq, bk = min(block_q, T), min(block_k, T)
+    if T % bq or T % bk:
+        raise ValueError(f"T={T} must divide block sizes ({bq}, {bk})")
+    n_q, n_k = T // bq, T // bk
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, n_k=n_k, seq_len=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b, h, iq, ik, qpk=qpk: (b, ik, h // qpk, 0)),
+            pl.BlockSpec((1, bk, 1, dv),
+                         lambda b, h, iq, ik, qpk=qpk: (b, ik, h // qpk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dv), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: ReCalKV latent-cache flash decode.
+
+The paper's GPU flow reconstructs K into global memory, then runs attention.
+The TPU-native version never materializes K in HBM: each grid step streams a
+(Sb, r_k) latent tile into VMEM, reconstructs the key tile with an MXU
+matmul against the resident R_k factor, applies RoPE from precomputed
+cos/sin (stored-position) tables, runs online-softmax flash decoding, and
+accumulates A @ z_v directly in value-latent space.  The fused W~_o
+projection happens outside (one dense matmul on (B, Hq, r_v)).
+
+Memory traffic per step ~= S * G * (r_k + r_v) bytes — exactly the
+compressed cache size; the reconstruction FLOPs ride under the bandwidth
+roofline (DESIGN.md §2).
+
+Grid: (B, G, nS) — nS minor-most, so the VMEM scratch (m, l, acc) carries
+the online softmax across key tiles of one (batch, group).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, zk_ref, zv_ref, rk_ref, cos_ref, sin_ref, bias_ref,
+            o_ref, m_ref, l_ref, acc_ref, *, scale, s, qpk, dh, n_s):
+    i_s = pl.program_id(2)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (Hg, dh), Hg = s*qpk
+    zk = zk_ref[0, :, 0].astype(jnp.float32)       # (Sb, r_k)
+    rk = rk_ref[0].astype(jnp.float32)             # (r_k, s*dh)
+    k = zk @ rk                                    # (Sb, s*dh)  reconstruct
+    sb = k.shape[0]
+    k = k.reshape(sb, s, dh)
+
+    half = dh // 2
+    cos = cos_ref[0].astype(jnp.float32)[:, None, :]   # (Sb, 1, dh/2)
+    sin = sin_ref[0].astype(jnp.float32)[:, None, :]
+    k1, k2 = k[..., :half], k[..., half:]
+    kr = jnp.concatenate([k1 * cos - k2 * sin, k2 * cos + k1 * sin], axis=-1)
+
+    qg = q.reshape(s, qpk, dh)
+    # one MXU matmul per group-slot (s <= 4, unrolled statically)
+    scores = jnp.concatenate(
+        [qg[si] @ kr[:, si, :].T for si in range(s)], axis=0
+    ) * scale                                       # (Hg, Sb)
+    scores = scores + bias_ref[0][None, :].astype(jnp.float32)
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])            # (Hg, Sb)
+    l_new = l_prev * corr + p.sum(axis=-1)
+
+    zv = zv_ref[0, :, 0].astype(jnp.float32)        # (Sb, r_v)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ zv
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(i_s == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_s", "interpret"),
+)
+def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
+                            scale: float, block_s: int = 256,
+                            interpret: bool = False):
+    """q: (B, G, Hg, dh); zk: (B, S, G, r_k); zv: (B, S, G, r_v);
+    r_k: (G, r_k, s*dh); cos/sin: (B, S, dh/2); bias: (B, S).
+    Returns (B, G, Hg, r_v) latent outputs (feed to the fused W~_o)."""
+    B, G, Hg, dh = q.shape
+    S, rk = zk.shape[1], zk.shape[3]
+    rv = zv.shape[3]
+    sdh = r_k.shape[-1]
+    s = sdh // dh
+    qpk = Hg // s
+    bs = min(block_s, S)
+    if S % bs:
+        raise ValueError(f"S={S} not divisible by block_s={bs}")
+    n_s = S // bs
+    half = dh // 2
+
+    grid = (B, G, n_s)
+    kernel = functools.partial(
+        _kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Hg, dh), lambda b, g, i: (b, g, 0, 0)),
+            pl.BlockSpec((1, bs, 1, rk), lambda b, g, i: (b, i, g, 0)),
+            pl.BlockSpec((1, bs, 1, rv), lambda b, g, i: (b, i, g, 0)),
+            pl.BlockSpec((1, rk, sdh), lambda b, g, i: (g, 0, 0)),
+            pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
+            pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
+            pl.BlockSpec((1, bs), lambda b, g, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hg, rv), lambda b, g, i: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G, Hg, rv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hg, 1), jnp.float32),
+            pltpu.VMEM((Hg, 1), jnp.float32),
+            pltpu.VMEM((Hg, rv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, zk, zv, r_k, cos, sin, bias)

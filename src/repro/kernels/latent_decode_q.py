@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: int8-quantized latent-cache flash decode.
+
+Identical dataflow to ``latent_decode`` but the cache tiles arrive as int8
+latents with per-token/per-group scales (Table 4 integration: ReCalKV x
+per-token quantization).  Dequantization happens in VMEM right before the
+reconstruction matmul, so HBM traffic drops by another ~2x vs bf16 latents.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, zkq_ref, zks_ref, zvq_ref, zvs_ref, rk_ref,
+            cos_ref, sin_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, s, qpk, dh, n_s):
+    i_s = pl.program_id(2)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (Hg, dh)
+    zk = (zkq_ref[0, :, 0].astype(jnp.float32)
+          * zks_ref[0, :, 0][:, None].astype(jnp.float32))   # dequant (Sb, r_k)
+    rk = rk_ref[0].astype(jnp.float32)
+    k = zk @ rk
+    sb = k.shape[0]
+    k = k.reshape(sb, s, dh)
+
+    half = dh // 2
+    cos = cos_ref[0].astype(jnp.float32)[:, None, :]
+    sin = sin_ref[0].astype(jnp.float32)[:, None, :]
+    k1, k2 = k[..., :half], k[..., half:]
+    kr = jnp.concatenate([k1 * cos - k2 * sin, k2 * cos + k1 * sin], axis=-1)
+
+    qg = q.reshape(s, qpk, dh)
+    scores = jnp.concatenate(
+        [qg[si] @ kr[:, si, :].T for si in range(s)], axis=0
+    ) * scale
+    scores = scores + bias_ref[0][None, :].astype(jnp.float32)
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    l_new = l_prev * corr + p.sum(axis=-1)
+
+    zv = (zvq_ref[0, :, 0].astype(jnp.float32)
+          * zvs_ref[0, :, 0][:, None].astype(jnp.float32))
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ zv
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(i_s == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_s", "interpret"))
+def latent_decode_attention_quant(q, zk_q, zk_scale, zv_q, zv_scale, r_k,
+                                  cos, sin, bias, *, scale: float,
+                                  block_s: int = 256, interpret: bool = False):
+    """zk_q/zv_q: int8 (B, S, G, r); zk_scale/zv_scale: (B, S, G) f32."""
+    B, G, Hg, dh = q.shape
+    S, rk = zk_q.shape[1], zk_q.shape[3]
+    rv = zv_q.shape[3]
+    sdh = r_k.shape[-1]
+    s = sdh // dh
+    qpk = Hg // s
+    bs = min(block_s, S)
+    if S % bs:
+        raise ValueError(f"S={S} not divisible by block_s={bs}")
+    n_s = S // bs
+    half = dh // 2
+
+    kernel = functools.partial(
+        _kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, G, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hg, dh), lambda b, g, i: (b, g, 0, 0)),
+            pl.BlockSpec((1, bs, 1, rk), lambda b, g, i: (b, i, g, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, g, i: (b, i, g)),
+            pl.BlockSpec((1, bs, 1, rv), lambda b, g, i: (b, i, g, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, g, i: (b, i, g)),
+            pl.BlockSpec((1, rk, sdh), lambda b, g, i: (g, 0, 0)),
+            pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
+            pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
+            pl.BlockSpec((1, bs), lambda b, g, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hg, rv), lambda b, g, i: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G, Hg, rv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hg, 1), jnp.float32),
+            pltpu.VMEM((Hg, 1), jnp.float32),
+            pltpu.VMEM((Hg, rv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, zk_q, zk_scale, zv_q, zv_scale, r_k, cos, sin, bias)

@@ -1,0 +1,76 @@
+"""Jit'd convenience wrappers around the Pallas kernels.
+
+These adapt model-layer tensors (cache dicts, position arrays) to kernel
+calling conventions and pick block sizes.  ``interpret=True`` runs the
+kernel bodies in Python on CPU — the validation mode used by every test;
+on a real TPU the same calls lower through Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill_attention
+from repro.kernels.latent_decode import latent_decode_attention
+from repro.kernels.latent_decode_q import latent_decode_attention_quant
+
+
+def decode_bias(pos: jax.Array, cur: jax.Array, window: int | None) -> jax.Array:
+    """Additive (B, S) mask from stored slot positions + current position."""
+    valid = (pos >= 0) & (pos <= cur[:, None])
+    if window is not None:
+        valid &= pos > (cur[:, None] - window)
+    return jnp.where(valid, 0.0, -1e30).astype(jnp.float32)
+
+
+def rope_tables_for(pos: jax.Array, dh: int, theta: float):
+    """cos/sin (B, S, dh/2) for stored (clamped) positions."""
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.maximum(pos, 0).astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def group_queries(q: jax.Array, num_groups: int) -> jax.Array:
+    """(B, H, dh) -> (B, G, Hg, dh) in kernel head order (kv-major)."""
+    B, H, dh = q.shape
+    return q.reshape(B, num_groups, H // num_groups, dh)
+
+
+def ungroup_outputs(o: jax.Array) -> jax.Array:
+    """(B, G, Hg, rv) -> (B, H, rv)."""
+    B, G, Hg, rv = o.shape
+    return o.reshape(B, G * Hg, rv)
+
+
+def latent_decode(q, cache, r_k, cur, *, theta: float, window: int | None,
+                  scale: float, block_s: int = 256, use_kernel: bool = True,
+                  interpret: bool = True):
+    """End-to-end latent decode from a model cache dict.
+
+    q: (B, H, dh) post-RoPE grouped-orderable queries;
+    cache: {"zk","zv","pos"} as produced by the model layer.
+    Returns (B, H, r_v) latent outputs.
+    """
+    zk, zv, pos = cache["zk"], cache["zv"], cache["pos"]
+    B, S, G, _ = zk.shape
+    dh = q.shape[-1]
+    cos, sin = rope_tables_for(pos, dh, theta)
+    bias = decode_bias(pos, cur, window)
+    qg = group_queries(q, G)
+    if use_kernel:
+        o = latent_decode_attention(qg, zk, zv, r_k, cos, sin, bias,
+                                    scale=scale, block_s=min(block_s, S),
+                                    interpret=interpret)
+    else:
+        o = ref.latent_decode_attention(qg, zk, zv, r_k, cos, sin, bias, scale)
+    return ungroup_outputs(o)
+
+
+__all__ = [
+    "decode_bias", "rope_tables_for", "group_queries", "ungroup_outputs",
+    "latent_decode", "latent_decode_attention", "latent_decode_attention_quant",
+    "flash_prefill_attention",
+]

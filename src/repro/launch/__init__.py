@@ -1,0 +1,10 @@
+"""Launchers: mesh construction, multi-pod dry-run, train & serve CLIs.
+
+NOTE: do not import repro.launch.dryrun from library code — it sets
+XLA_FLAGS for 512 placeholder devices at import time (by design; the spec
+requires it before any jax initialization).
+"""
+
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

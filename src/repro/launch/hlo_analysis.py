@@ -1,0 +1,177 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and bytes but NOT collective
+bytes; we parse the optimized (per-partition) HLO text and sum operand
+sizes of every communication op.  Shapes in post-SPMD HLO are already
+per-device, so the sums feed the per-chip roofline directly.
+
+Conventions per op kind (operand bytes actually crossing links):
+  all-reduce          operand size (ring: ~2x, but we report operand bytes
+                      and keep the 2(n-1)/n factor in the roofline model)
+  all-gather          output / group_size * (group_size - 1) ~ output bytes
+  reduce-scatter      input ~ output * group_size
+  all-to-all          operand size
+  collective-permute  operand size
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by = {k: 0 for k in _COLLECTIVES}
+    count_by = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        size = _shape_bytes(out_shape)
+        gm = _GROUPS_RE.search(line)
+        gsize = len(gm.group(1).split(",")) if gm else 1
+        if kind == "all-gather" and gsize > 1:
+            size = size * (gsize - 1) // gsize       # operand-sized chunks moved
+        elif kind == "reduce-scatter" and gsize > 1:
+            size = size * (gsize - 1)                # input = out * g, moved (g-1) chunks
+        bytes_by[kind] += size
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+# ---- TPU v5e hardware model ------------------------------------------------
+
+PEAK_BF16_FLOPS = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~3 links usable per axis)
+
+
+@dataclasses.dataclass
+class Roofline:
+    hlo_flops: float            # per-device
+    hlo_bytes: float            # per-device HBM traffic
+    collective_bytes: float     # per-device link traffic
+    model_flops: float          # 6*N*D (dense) / 6*N_active*D (MoE), global
+    num_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_BF16_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        total = self.hlo_flops * self.num_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization if the dominant term were the wall clock."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.num_chips * PEAK_BF16_FLOPS * t)
+
+    def as_dict(self) -> dict:
+        return {
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "num_chips": self.num_chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def memory_report(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_hbm_bytes"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def cost_report(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}

@@ -1,0 +1,346 @@
+"""Trip-count-aware HLO cost model (the dry-run 'profiler').
+
+``compiled.cost_analysis()`` visits each computation ONCE — a while loop
+body (every jax.lax.scan: layer stack, microbatches, attention chunks)
+is counted a single time, under-reporting FLOPs/bytes/collective traffic
+by the product of trip counts.  This module re-walks the optimized
+post-SPMD HLO text with loop multipliers:
+
+  cost(computation) = sum over instructions of
+      op_cost + trip_count * cost(while body/cond)
+               + cost(called computation)          (call / fusion: x1)
+               + max(cost(branches))               (conditional)
+
+FLOPs: dot ops (2 * result_elems * contracted_elems), traversing into
+fusions.  Bytes: per-instruction operand+result bytes at the *fusion
+boundary* (a fusion's internals stay in registers/VMEM); slice-type and
+shape ops count only what they write; gather/scatter count moved slices,
+not the whole table.  Collectives: operand-bytes by kind, x trips.
+
+All shapes in post-SPMD HLO are per-partition, so sums are per-device —
+exactly what the per-chip roofline terms need.  This is a *model*, not a
+measurement: elementwise FLOPs are ignored (matmul-dominated programs)
+and byte counts assume every fusion boundary hits HBM.  It is consistent
+across iterations, which is what the §Perf loop needs.
+
+Also exposes ``top_costs`` — the per-op-name aggregation used as the
+profile when hillclimbing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_NO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "custom-call", "partition-id",
+    "replica-id", "rng-get-and-update-state", "opt-barrier",
+}
+_RESULT_ONLY = {"broadcast", "iota", "copy", "reshape", "transpose",
+                "convert", "reverse", "pad", "slice", "dynamic-slice",
+                "reduce", "rng", "rng-bit-generator"}
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}\s]+?))\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_HEAD_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _type_bytes_elems(type_str: str) -> tuple[int, int]:
+    total_b = total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    if not total_e and type_str.strip().split("[")[0] in _DTYPE_BYTES:
+        total_e, total_b = 1, _DTYPE_BYTES[type_str.strip().split("[")[0]]
+    return total_b, total_e
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _meta_key(ins: "Instr") -> str:
+    """Aggregation key: trailing jax scope path if present, else name stem."""
+    m = _OPNAME_RE.search(ins.rest)
+    if m:
+        path = m.group(1)
+        path = re.sub(r"\[.*", "", path)          # drop eqn params
+        parts = [p for p in path.split("/") if p]
+        return "/".join(parts[-3:])
+    return re.sub(r"\.\d+$", "", ins.name)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # everything after the opening paren
+    bytes_: int
+    elems: int
+
+
+@dataclasses.dataclass
+class CostResult:
+    flops: float
+    bytes: float
+    collective_bytes: dict[str, float]
+    top_flops: list[tuple[str, float]]
+    top_bytes: list[tuple[str, float]]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[Instr]] = {}
+        self.shape_of: dict[str, str] = {}
+        self._parse(hlo_text)
+        self._memo: dict[str, tuple] = {}
+        self.flops_by_meta: dict[str, float] = defaultdict(float)
+        self.bytes_by_meta: dict[str, float] = defaultdict(float)
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            h = _COMP_HEAD_RE.match(line)
+            if h and ("->" in line):
+                cur = h.group(1)
+                self.comps[cur] = []
+                continue
+            m = _INSTR_RE.match(line)
+            if m and cur is not None:
+                name, type_str, opcode, rest = m.groups()
+                b, e = _type_bytes_elems(type_str)
+                ins = Instr(name, type_str, opcode, rest, b, e)
+                self.comps[cur].append(ins)
+                self.shape_of[name] = type_str
+
+    # -- helpers ------------------------------------------------------------
+
+    def _operand_names(self, ins: Instr) -> list[str]:
+        # operands appear before the closing paren of the op call
+        depth, out = 1, []
+        for i, ch in enumerate(ins.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    out = _OPERAND_RE.findall(ins.rest[:i])
+                    break
+        else:
+            out = _OPERAND_RE.findall(ins.rest)
+        return out
+
+    def _operand_bytes(self, ins: Instr) -> int:
+        return sum(_type_bytes_elems(self.shape_of.get(o, ""))[0]
+                   for o in self._operand_names(ins))
+
+    def _instr(self, name: str) -> "Instr | None":
+        if not hasattr(self, "_by_name"):
+            self._by_name = {}
+            for instrs in self.comps.values():
+                for ins in instrs:
+                    self._by_name[ins.name] = ins
+        return self._by_name.get(name)
+
+    def _trip_count(self, cond_name: str, init_name: str | None = None) -> int:
+        """Scan bound for a lowered while loop.
+
+        jax scans carry the bound as an s32 scalar in the init tuple and
+        compare the induction variable against it in the condition.  We
+        take the max of (a) s32 constants in the condition (and computations
+        it fuses), (b) s32 constants feeding the init tuple."""
+        def s32_const(ins: Instr) -> int | None:
+            if (ins.opcode == "constant"
+                    and ins.type_str.strip().startswith("s32[]")):
+                m = re.match(r"(\d+)", ins.rest)
+                if m:
+                    return int(m.group(1))
+            return None
+
+        best = 1
+        for ins in self.comps.get(cond_name, []):
+            v = s32_const(ins)
+            if v is not None:
+                best = max(best, v)
+            cm = _CALLS_RE.search(ins.rest)
+            if cm:
+                for sub in self.comps.get(cm.group(1), []):
+                    v = s32_const(sub)
+                    if v is not None:
+                        best = max(best, v)
+        if init_name:
+            init = self._instr(init_name)
+            if init is not None and init.opcode == "tuple":
+                for op_name in self._operand_names(init):
+                    d = self._instr(op_name)
+                    if (d is not None and d.opcode == "constant"
+                            and d.type_str.strip().startswith("s32[]")):
+                        m = re.match(r"(\d+)", d.rest)
+                        if m:
+                            best = max(best, int(m.group(1)))
+        return best
+
+    def _dot_flops(self, ins: Instr) -> float:
+        ops = self._operand_names(ins)
+        if not ops:
+            return 0.0
+        lhs_shape = self.shape_of.get(ops[0], "")
+        dims_m = _SHAPE_RE.search(lhs_shape)
+        if not dims_m:
+            return 0.0
+        lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+        cm = _CONTRACT_RE.search(ins.rest)
+        contracted = 1
+        if cm:
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contracted *= lhs_dims[int(idx)]
+        return 2.0 * ins.elems * contracted
+
+    # -- traversal ----------------------------------------------------------
+
+    def cost_of(self, comp_name: str, mult: float = 1.0,
+                count_bytes: bool = True, _depth: int = 0):
+        """(flops, bytes, collective_bytes dict) for one computation,
+        scaled by the chained loop multiplier ``mult`` (so per-op
+        attribution in *_by_meta carries trip counts correctly)."""
+        if _depth > 64:  # malformed recursion guard
+            return 0.0, 0.0, {}
+        f, b = 0.0, 0.0
+        c: dict[str, float] = defaultdict(float)
+
+        def merge(sub):
+            nonlocal f, b
+            sf, sb, sc = sub
+            f += sf
+            b += sb
+            for k, v in sc.items():
+                c[k] += v
+
+        for ins in self.comps.get(comp_name, []):
+            op = ins.opcode
+            kind = next((k for k in _COLLECTIVES
+                         if op == k or op == k + "-start"), None)
+            if kind is not None:
+                size = self._operand_bytes(ins)
+                c[kind] += size * mult
+                b += (size + ins.bytes_) * mult
+                continue
+            if op == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                init = (self._operand_names(ins) or [None])[0]
+                trips = (self._trip_count(cond.group(1), init)
+                         if cond else 1)
+                if body:
+                    merge(self.cost_of(body.group(1), mult * trips,
+                                       count_bytes, _depth + 1))
+                continue
+            if op == "conditional":
+                bm = _BRANCH_RE.search(ins.rest)
+                if bm:
+                    branches = _OPERAND_RE.findall(bm.group(1))
+                    costs = [self.cost_of(br, mult, count_bytes, _depth + 1)
+                             for br in branches]
+                    if costs:
+                        merge(max(costs, key=lambda t: t[0] + t[1]))
+                continue
+            if op in ("call", "async-start"):
+                cm2 = _CALLS_RE.search(ins.rest)
+                if cm2:
+                    merge(self.cost_of(cm2.group(1), mult, count_bytes,
+                                       _depth + 1))
+                continue
+            if op == "fusion":
+                cm2 = _CALLS_RE.search(ins.rest)
+                if cm2:
+                    # flops from inside; bytes at the fusion boundary
+                    merge(self.cost_of(cm2.group(1), mult, False, _depth + 1))
+                fb = (ins.bytes_ + self._operand_bytes(ins)) * mult
+                if count_bytes:
+                    b += fb
+                    self.bytes_by_meta[_meta_key(ins)] += fb
+                continue
+            if op == "dot":
+                df = self._dot_flops(ins) * mult
+                f += df
+                self.flops_by_meta[_meta_key(ins)] += df
+                if count_bytes:
+                    db = (ins.bytes_ + self._operand_bytes(ins)) * mult
+                    b += db
+                    self.bytes_by_meta[_meta_key(ins)] += db
+                continue
+            if op in _NO_COST:
+                continue
+            if not count_bytes:
+                continue
+            if op in _RESULT_ONLY:
+                b += ins.bytes_ * mult
+                continue
+            if op == "gather":
+                ops_ = self._operand_names(ins)
+                idx_b = (_type_bytes_elems(self.shape_of.get(
+                    ops_[1], ""))[0] if len(ops_) > 1 else 0)
+                b += (ins.bytes_ + idx_b) * mult
+                continue
+            if op in ("scatter", "dynamic-update-slice"):
+                ops_ = self._operand_names(ins)
+                upd = sum(_type_bytes_elems(self.shape_of.get(o, ""))[0]
+                          for o in ops_[1:])
+                b += upd * 2 * mult
+                continue
+            # generic compute op: operands + result
+            gb = (ins.bytes_ + self._operand_bytes(ins)) * mult
+            b += gb
+            self.bytes_by_meta[_meta_key(ins)] += gb
+        return f, b, dict(c)
+
+    def entry(self) -> str:
+        # jax modules name the entry main.N; fall back to the largest comp
+        for name in self.comps:
+            if name.startswith("main"):
+                return name
+        if not self.comps:
+            return ""
+        return max(self.comps, key=lambda n: len(self.comps[n]))
+
+
+def analyze(hlo_text: str, top_k: int = 12) -> CostResult:
+    model = HloCostModel(hlo_text)
+    f, b, c = model.cost_of(model.entry())
+    top_f = sorted(model.flops_by_meta.items(), key=lambda kv: -kv[1])[:top_k]
+    top_b = sorted(model.bytes_by_meta.items(), key=lambda kv: -kv[1])[:top_k]
+    return CostResult(flops=f, bytes=b, collective_bytes=c,
+                      top_flops=top_f, top_bytes=top_b)

@@ -1,0 +1,24 @@
+"""Model zoo: one functional transformer covering all assigned families."""
+
+from repro.models.config import (
+    MLAConfig,
+    MambaConfig,
+    MoEConfig,
+    ModelConfig,
+    RGLRUConfig,
+    ReCalKVRuntime,
+)
+from repro.models.transformer import (
+    decode_step,
+    forward_hidden,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "MLAConfig", "MambaConfig", "MoEConfig", "ModelConfig", "RGLRUConfig",
+    "ReCalKVRuntime", "decode_step", "forward_hidden", "init_decode_cache",
+    "init_params", "loss_fn", "prefill",
+]

@@ -1,0 +1,367 @@
+"""KV-cache structures + single-step decode attention readers.
+
+Cache variants (all per block, batch-major):
+  dense attn   {"k","v": (B, L, Hkv, dh), "pos": (B, L) int32}   post-RoPE keys
+  latent attn  {"zk": (B, L, G, r_k), "zv": (B, L, G, r_v), "pos"}  pre-RoPE
+  MLA          {"ckv": (B, L, r_kv), "krope": (B, L, dr), "pos"}  shared heads
+  mamba        {"h": (B, d_inner, d_state) f32, "conv": (B, K-1, d_inner)}
+  rglru        {"h": (B, W) f32, "conv": (B, K-1, W)}
+  cross        dense {"k","v": (B, S_src, Hkv, dh)} / latent {"zk","zv"}
+
+L is the ring length: min(window, max_len) for sliding-window blocks, else
+max_len.  ``pos`` stores the absolute position held in each slot (−1 =
+empty); masking and RoPE reconstruction read it, so ring wraparound needs
+no extra bookkeeping.  Writes go to slot ``cur_pos % L`` per sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+NEG_INF = L.NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def init_self_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    dtype=None, layer_idx: int | None = None) -> Params:
+    dtype = dtype or cfg.dtype
+    Lr = cfg.cache_len(kind, max_len)
+    pos = jnp.full((batch, Lr), -1, jnp.int32)
+    if cfg.mla is not None and kind in ("attn", "attn_dense"):
+        a = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, Lr, a.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, Lr, a.qk_rope_dim), dtype),
+            "pos": pos,
+        }
+    if cfg.recalkv is not None:
+        rt = cfg.recalkv
+        G = rt.num_groups(cfg.num_kv_heads)
+        rk, rv = rt.ranks_for(layer_idx)
+        return {
+            "zk": jnp.zeros((batch, Lr, G, rk), dtype),
+            "zv": jnp.zeros((batch, Lr, G, rv), dtype),
+            "pos": pos,
+        }
+    return {
+        "k": jnp.zeros((batch, Lr, cfg.num_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, Lr, cfg.num_kv_heads, cfg.d_head), dtype),
+        "pos": pos,
+    }
+
+
+def init_cross_cache(cfg: ModelConfig, batch: int, dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    S = cfg.cross_source_len
+    if cfg.recalkv is not None:
+        rt = cfg.recalkv
+        G = rt.num_groups(cfg.num_kv_heads)
+        return {
+            "zk": jnp.zeros((batch, S, G, rt.rank_k), dtype),
+            "zv": jnp.zeros((batch, S, G, rt.rank_v), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.d_head), dtype),
+    }
+
+
+def init_state_cache(cfg: ModelConfig, kind: str, batch: int) -> Params:
+    if kind == "mamba":
+        di = cfg.mamba_d_inner
+        return {
+            "h": jnp.zeros((batch, di, cfg.mamba.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.mamba.d_conv - 1, di), cfg.dtype),
+        }
+    if kind == "rglru":
+        W = cfg.lru_width
+        return {
+            "h": jnp.zeros((batch, W), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, W), cfg.dtype),
+        }
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     layer_idx: int | None = None) -> Params:
+    if kind in ("mamba", "rglru"):
+        return init_state_cache(cfg, kind, batch)
+    if kind == "cross":
+        return {"cross": init_cross_cache(cfg, batch)}
+    if kind == "attn_cross":
+        return {
+            "self": init_self_cache(cfg, kind, batch, max_len,
+                                    layer_idx=layer_idx),
+            "cross": init_cross_cache(cfg, batch),
+        }
+    return {"self": init_self_cache(cfg, kind, batch, max_len,
+                                    layer_idx=layer_idx)}
+
+
+# ---------------------------------------------------------------------------
+# Writes
+# ---------------------------------------------------------------------------
+
+def _ring_write(cache_arr: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write one entry per sequence.  new: (B, ...), slot: (B,) int32.
+
+    Implemented as iota-compare + select rather than a batched scatter:
+    per-batch dynamic scatter indices defeat the SPMD partitioner on the
+    sequence-sharded ring (it falls back to full rematerialization —
+    replicating the entire cache per device).  The select form is purely
+    elementwise over (B, L, ...), so the cache stays sequence-sharded and
+    the update costs one masked read-modify-write of the local shard
+    (EXPERIMENTS.md §Perf iteration 1)."""
+    B, L = cache_arr.shape[:2]
+    hit = jnp.arange(L, dtype=slot.dtype)[None, :] == slot[:, None]  # (B, L)
+    hit = hit.reshape((B, L) + (1,) * (cache_arr.ndim - 2))
+    return jnp.where(hit, new.astype(cache_arr.dtype)[:, None], cache_arr)
+
+
+def write_prefill(cache_arr: jax.Array, values: jax.Array) -> jax.Array:
+    """Bulk-write prefill values (B, T, ...) into slots (pos % L), keeping
+    only the last L positions when T exceeds the ring."""
+    T, Lr = values.shape[1], cache_arr.shape[1]
+    if T > Lr:
+        values = values[:, T - Lr:]
+        slots = (jnp.arange(T - Lr, T) % Lr)
+    else:
+        slots = jnp.arange(T)
+    return cache_arr.at[:, slots].set(values.astype(cache_arr.dtype))
+
+
+def prefill_pos(lengths: jax.Array, T: int, Lr: int) -> jax.Array:
+    """Position array after an aligned right-padded prefill of length T.
+    Mirrors ``write_prefill``'s slot mapping exactly (ring wraparound)."""
+    B = lengths.shape[0]
+    idx = jnp.arange(T)
+    vals = jnp.where(idx[None, :] < lengths[:, None], idx[None, :], -1)
+    cache = jnp.full((B, Lr), -1, jnp.int32)
+    return write_prefill(cache, vals.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Decode readers (single new token, x: (B, 1, d))
+# ---------------------------------------------------------------------------
+
+def _decode_mask(pos: jax.Array, cur: jax.Array, window: int | None) -> jax.Array:
+    """(B, S) validity mask for cache slots at decode time."""
+    m = (pos >= 0) & (pos <= cur[:, None])
+    if window is not None:
+        m &= pos > (cur[:, None] - window)
+    return m
+
+
+def _two_part_softmax(logits_c: jax.Array, logits_s: jax.Array):
+    """Softmax over [cache columns | self column] WITHOUT concatenating.
+
+    Concatenation would make the (sequence-sharded) column axis length
+    S+1 — indivisible, so SPMD replicates the whole softmax.  The online
+    merge keeps every reduction on the sharded S axis (§Perf iteration 4).
+    logits_c: (..., S);  logits_s: (..., 1).  Returns (w_c, w_s) summing
+    to 1 jointly."""
+    m = jnp.maximum(jnp.max(logits_c, axis=-1, keepdims=True), logits_s)
+    e_c = jnp.exp(logits_c - m)
+    e_s = jnp.exp(logits_s - m)
+    denom = jnp.sum(e_c, axis=-1, keepdims=True) + e_s
+    return e_c / denom, e_s / denom
+
+
+def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
+                      cur: jax.Array, window: int | None,
+                      theta: float | None = None):
+    """Dense decode with DEFERRED cache writes (§Perf iteration 3).
+
+    The new token's K/V enter the softmax as an explicit self column; the
+    ring write happens once per step outside the layer scan
+    (apply_decode_writes), so the scan carries only (B, Hkv, dh) updates.
+    Masking stays correct: the slot being overwritten holds either an
+    empty entry (pos=-1) or one that just fell out of the window."""
+    B = x.shape[0]
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    g = H // Hkv
+    q = (x @ p["wq"]).reshape(B, 1, H, dh)
+    k_new = (x @ p["wk"]).reshape(B, Hkv, dh)
+    v_new = (x @ p["wv"]).reshape(B, Hkv, dh)
+    q = L.maybe_head_norm(q, p.get("q_norm"), cfg.norm_eps)
+    k_new = L.maybe_head_norm(k_new, p.get("k_norm"), cfg.norm_eps)
+    cos, sin = L.rope_tables(cur[:, None], dh, theta or cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k_new = L.apply_rope(k_new[:, None], cos, sin)[:, 0]
+
+    qr = q[:, 0].reshape(B, Hkv, g, dh)
+    k_c = cache["k"].astype(x.dtype)
+    scale = dh ** -0.5
+    logits_c = jnp.einsum("bkgd,bskd->bkgs", qr, k_c).astype(jnp.float32) * scale
+    mask = _decode_mask(cache["pos"], cur, window)[:, None, None, :]
+    logits_c = jnp.where(mask, logits_c, NEG_INF)
+    logits_s = (jnp.einsum("bkgd,bkd->bkg", qr, k_new)
+                .astype(jnp.float32) * scale)[..., None]
+    w_c, w_s = _two_part_softmax(logits_c, logits_s)
+    w_c, w_s = w_c.astype(x.dtype), w_s.astype(x.dtype)
+    o = (jnp.einsum("bkgs,bskd->bkgd", w_c, cache["v"].astype(x.dtype))
+         + w_s * v_new[:, :, None, :])
+    y = o.reshape(B, 1, H * dh) @ p["wo"]
+    return y, {"k": k_new, "v": v_new, "pos": cur.astype(jnp.int32)}
+
+
+def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
+                       cur: jax.Array, window: int | None,
+                       theta: float | None = None):
+    """ReCalKV decode: reconstruct keys from the latent ring, RoPE by stored
+    positions, keep values latent, project through the fused W~_o.
+    Deferred-write form (see decode_attn_dense)."""
+    theta = theta or cfg.rope_theta
+    B = x.shape[0]
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    rt = cfg.recalkv
+    s = max(1, min(rt.group_size, Hkv))
+    G = Hkv // s
+    g = H // Hkv
+    q = (x @ p["wq"]).reshape(B, 1, H, dh)
+    q = L.maybe_head_norm(q, p.get("q_norm"), cfg.norm_eps)
+    cos_q, sin_q = L.rope_tables(cur[:, None], dh, theta)
+    q = L.apply_rope(q, cos_q, sin_q)
+    qr = q[:, 0].reshape(B, Hkv, g, dh)
+
+    zk_new = jnp.einsum("bd,gdr->bgr", x[:, 0], p["l_k"]).astype(x.dtype)
+    zv_new = jnp.einsum("bd,gdr->bgr", x[:, 0], p["l_v"]).astype(x.dtype)
+
+    # Reconstruct cached keys (the paper's RoPE-forced reconstruction).
+    k = L.reconstruct_keys(cache["zk"].astype(x.dtype), p["r_k"], Hkv, dh)
+    k = L.maybe_head_norm(k, p.get("k_norm"), cfg.norm_eps)
+    cos_k, sin_k = L.rope_tables(jnp.maximum(cache["pos"], 0), dh, theta)
+    k = L.apply_rope(k, cos_k, sin_k)
+    # ... and the self key from the fresh latent.
+    k_self = L.reconstruct_keys(zk_new[:, None], p["r_k"], Hkv, dh)
+    k_self = L.maybe_head_norm(k_self, p.get("k_norm"), cfg.norm_eps)
+    k_self = L.apply_rope(k_self, cos_q, sin_q)[:, 0]       # (B, Hkv, dh)
+
+    scale = dh ** -0.5
+    logits_c = jnp.einsum("bkgd,bskd->bkgs", qr, k).astype(jnp.float32) * scale
+    mask = _decode_mask(cache["pos"], cur, window)[:, None, None, :]
+    logits_c = jnp.where(mask, logits_c, NEG_INF)
+    logits_s = (jnp.einsum("bkgd,bkd->bkg", qr, k_self)
+                .astype(jnp.float32) * scale)[..., None]
+    w_c, w_s = _two_part_softmax(logits_c, logits_s)
+    w_c = w_c.astype(x.dtype).reshape(B, G, s * g, -1)
+    w_s = w_s.astype(x.dtype).reshape(B, G, s * g, 1)
+    o_lat = (jnp.einsum("bGhs,bsGr->bGhr", w_c, cache["zv"].astype(x.dtype))
+             + w_s * zv_new[:, :, None, :])
+    o_lat = o_lat.reshape(B, 1, H, -1)
+    y = jnp.einsum("bthr,hrd->btd", o_lat, p["wo_fused"])
+    return y, {"zk": zk_new, "zv": zv_new, "pos": cur.astype(jnp.int32)}
+
+
+def decode_attn_mla(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
+                    cur: jax.Array):
+    """Absorbed MLA decode: scores/outputs computed in the c_kv latent space
+    (never reconstructing per-head K/V) — the built-in analogue of OCMF.
+    Deferred-write form (see decode_attn_dense)."""
+    a = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv = a.qk_nope_dim, a.qk_rope_dim, a.v_head_dim
+    q_lat = L.rmsnorm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, 1, H, dn + dr)
+    cos, sin = L.rope_tables(cur[:, None], dr, cfg.rope_theta)
+    q_pe = L.apply_rope(q[..., dn:], cos, sin)[:, 0]       # (B, H, dr)
+    q_nope = q[..., :dn][:, 0]                             # (B, H, dn)
+
+    kv_a = x[:, 0] @ p["wkv_a"]
+    ckv_new = L.rmsnorm(kv_a[..., : a.kv_lora_rank], p["kv_a_norm"],
+                        cfg.norm_eps).astype(x.dtype)
+    kr_new = L.apply_rope(
+        kv_a[..., a.kv_lora_rank:][:, None, None, :], cos, sin)[:, 0, 0]
+    kr_new = kr_new.astype(x.dtype)
+
+    wkv_b = p["wkv_b"].reshape(a.kv_lora_rank, H, dn + dv)
+    w_k = wkv_b[..., :dn]                                  # (r, H, dn)
+    w_v = wkv_b[..., dn:]                                  # (r, H, dv)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope, w_k)
+    scale = (dn + dr) ** -0.5
+    logits_c = (
+        jnp.einsum("bhr,bsr->bhs", q_abs, cache["ckv"].astype(x.dtype))
+        + jnp.einsum("bhd,bsd->bhs", q_pe, cache["krope"].astype(x.dtype))
+    ).astype(jnp.float32) * scale
+    mask = _decode_mask(cache["pos"], cur, None)[:, None, :]
+    logits_c = jnp.where(mask, logits_c, NEG_INF)
+    logits_s = ((jnp.einsum("bhr,br->bh", q_abs, ckv_new)
+                 + jnp.einsum("bhd,bd->bh", q_pe, kr_new))
+                .astype(jnp.float32) * scale)[..., None]
+    w_c, w_s = _two_part_softmax(logits_c, logits_s)
+    w_c, w_s = w_c.astype(x.dtype), w_s.astype(x.dtype)
+    o_lat = (jnp.einsum("bhs,bsr->bhr", w_c, cache["ckv"].astype(x.dtype))
+             + w_s * ckv_new[:, None, :])
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_v)
+    y = o.reshape(B, 1, H * dv) @ p["wo"]
+    return y, {"ckv": ckv_new, "krope": kr_new, "pos": cur.astype(jnp.int32)}
+
+
+def _merge_leaf(cache_leaf, upd, cur: jax.Array, stacked: bool):
+    if upd is None:
+        return cache_leaf
+    if upd.ndim == cache_leaf.ndim:
+        return upd.astype(cache_leaf.dtype)                  # state replace
+    b_ax = 1 if stacked else 0
+    Lr = cache_leaf.shape[b_ax + 1]
+    B = cache_leaf.shape[b_ax]
+    slot = (cur % Lr).astype(jnp.int32)                      # (B,)
+    hit = jnp.arange(Lr, dtype=jnp.int32)[None, :] == slot[:, None]
+    shape = [1] * cache_leaf.ndim
+    shape[b_ax], shape[b_ax + 1] = B, Lr
+    hit = hit.reshape(shape)
+    new = jnp.expand_dims(upd, axis=b_ax + 1)                # slot axis
+    return jnp.where(hit, new.astype(cache_leaf.dtype), cache_leaf)
+
+
+def _merge(caches, updates, cur, stacked: bool):
+    if updates is None:
+        return caches
+    if isinstance(caches, dict):
+        return {k: _merge(v, updates.get(k), cur, stacked)
+                for k, v in caches.items()}
+    if isinstance(caches, (tuple, list)):
+        return type(caches)(
+            _merge(c, u, cur, stacked) for c, u in zip(caches, updates))
+    return _merge_leaf(caches, updates, cur, stacked)
+
+
+def apply_decode_writes(caches: Params, updates: Params, cur: jax.Array) -> Params:
+    """Merge deferred per-layer decode updates into the caches (§Perf it. 3).
+
+    One vectorized pass after the layer scan: update leaves are slot
+    entries (one dim short of the cache leaf — ring-written at cur %% L),
+    full replacements (recurrent states, equal ndim), or None (static
+    cross caches, kept as-is)."""
+    return {
+        "prefix": _merge(caches["prefix"], updates["prefix"], cur, False),
+        "blocks": _merge(caches["blocks"], updates["blocks"], cur, True),
+        "suffix": _merge(caches["suffix"], updates["suffix"], cur, False),
+    }
+
+
+def decode_cross_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig):
+    B = x.shape[0]
+    H, dh = cfg.num_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(B, 1, H, dh)
+    q = L.maybe_head_norm(q, p.get("q_norm"), cfg.norm_eps)
+    o = L._attend(q, cache["k"].astype(x.dtype), cache["v"].astype(x.dtype),
+                  None, dh ** -0.5)
+    return o.reshape(B, 1, H * dh) @ p["wo"], cache
+
+
+def decode_cross_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig):
+    y = L.cross_attention_latent(
+        p, x, (cache["zk"].astype(x.dtype), cache["zv"].astype(x.dtype)), cfg)
+    return y, cache

@@ -1,0 +1,14 @@
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+from repro.optim.grad_compress import (
+    compressed_psum,
+    dequantize_leaf,
+    quantize_leaf,
+    with_error_feedback,
+)
+from repro.optim.schedule import SCHEDULES, cosine, wsd
+
+__all__ = [
+    "AdamWConfig", "SCHEDULES", "apply_updates", "compressed_psum", "cosine",
+    "dequantize_leaf", "init_state", "quantize_leaf", "with_error_feedback",
+    "wsd",
+]

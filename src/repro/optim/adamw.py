@@ -1,0 +1,92 @@
+"""AdamW with optional bf16 moments (+ deterministic stochastic rounding).
+
+Self-contained (no optax dependency in the container).  Moments live in
+``moment_dtype``; f32 is exact, bf16 halves optimizer HBM — required to fit
+the 671B-class archs (DESIGN.md §7).  Stochastic rounding uses a
+counter-keyed hash of the update step so restarts stay deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                 # peak; scaled by the schedule fn
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+def init_state(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _stochastic_round(x: jax.Array, dtype, key) -> jax.Array:
+    """Round f32 -> bf16 stochastically (unbiased moment accumulation)."""
+    if dtype == jnp.float32:
+        return x
+    noise = jax.random.uniform(key, x.shape, jnp.float32) - 0.5
+    as_int = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    ulp = jax.lax.bitcast_convert_type(
+        (as_int & jnp.uint32(0xFFFF0000)) + jnp.uint32(0x10000), jnp.float32
+    ) - jax.lax.bitcast_convert_type(as_int & jnp.uint32(0xFFFF0000), jnp.float32)
+    return (x + noise * ulp).astype(dtype)
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    base = jax.random.PRNGKey(0)
+    key = jax.random.fold_in(base, step)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+
+    new_p, new_mu, new_nu = [], [], []
+    for i, (p, g, mu, nu) in enumerate(zip(flat_p, flat_g, flat_mu, flat_nu)):
+        g = g.astype(jnp.float32) * clip
+        mu_f = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_f = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        upd = (mu_f / bc1) / (jnp.sqrt(nu_f / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled decay on matrices only
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        k = jax.random.fold_in(key, i)
+        new_p.append(p_new)
+        new_mu.append(_stochastic_round(mu_f, cfg.moment_dtype, k))
+        new_nu.append(_stochastic_round(nu_f, cfg.moment_dtype,
+                                        jax.random.fold_in(k, 1)))
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {"mu": jax.tree.unflatten(treedef, new_mu),
+         "nu": jax.tree.unflatten(treedef, new_nu),
+         "step": step},
+        {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)},
+    )

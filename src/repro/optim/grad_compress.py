@@ -1,0 +1,69 @@
+"""Int8 gradient all-reduce with error feedback — cross-pod DP compression.
+
+At 512+ chips the pod-to-pod data-parallel all-reduce runs over the slower
+inter-pod links; quantizing the summands to int8 (per-leaf scale) cuts that
+traffic 4x vs f32 / 2x vs bf16.  Error feedback (residual carried in the
+train state) keeps the compression unbiased over steps.
+
+``compressed_psum`` is shard_map-friendly: quantize -> integer psum ->
+dequantize, so what crosses the links is int8 (+ one f32 scale).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_leaf(g: jax.Array):
+    """Symmetric per-leaf int8 quantization.  Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, axis_name: str):
+    """Quantized psum over ``axis_name`` (call inside shard_map).
+
+    int8 summands are widened to int32 for the reduction (no overflow for
+    <= 2^23 participants); scales are max-reduced so dequantization is
+    conservative."""
+    def one(g):
+        q, scale = quantize_leaf(g)
+        scale = lax.pmax(scale, axis_name)
+        q32 = lax.psum(q.astype(jnp.int32), axis_name)
+        n = lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (q32.astype(jnp.float32) * scale / n).astype(g.dtype)
+    return jax.tree.map(one, grads)
+
+
+def with_error_feedback(grads, residual):
+    """Add the carried residual, quantize, carry the new residual.
+
+    Returns (decompressed_grads, new_residual) — simulates what arrives on
+    the other side of a compressed all-reduce while staying pjit-friendly
+    (the actual int8 psum path is ``compressed_psum`` under shard_map)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def deq_leaf(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize_leaf(g32)
+        return dequantize_leaf(q, scale).astype(g.dtype)
+
+    def res_leaf(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize_leaf(g32)
+        return g32 - dequantize_leaf(q, scale)
+
+    # two passes (XLA CSEs the duplicate quantization) — keeps leaves as
+    # arrays so empty-tuple subtrees in params never confuse tree mapping
+    return (jax.tree.map(deq_leaf, grads, residual),
+            jax.tree.map(res_leaf, grads, residual))

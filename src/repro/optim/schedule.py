@@ -1,0 +1,34 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM's schedule).
+
+All return a multiplicative scale in [0, 1] applied to the peak LR, as a
+jittable function of the (traced) step.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, warmup: int, total: int, min_scale: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    frac = (step - warmup) / jnp.maximum(total - warmup, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = min_scale + (1 - min_scale) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, warmup: int, total: int, decay_frac: float = 0.1,
+        min_scale: float = 0.01):
+    """Warmup -> stable plateau -> sharp decay (arXiv:2404.06395)."""
+    step = step.astype(jnp.float32)
+    decay_start = total * (1 - decay_frac)
+    warm = step / jnp.maximum(warmup, 1)
+    decay = 1.0 - (1 - min_scale) * (step - decay_start) / jnp.maximum(
+        total - decay_start, 1)
+    scale = jnp.where(step < warmup, warm,
+                      jnp.where(step < decay_start, 1.0, decay))
+    return jnp.clip(scale, min_scale, 1.0)
+
+
+SCHEDULES = {"cosine": cosine, "wsd": wsd}

@@ -1,0 +1,5 @@
+from repro.quant.hadamard import fwht, hadamard_inverse, hadamard_transform
+from repro.quant.int_quant import dequantize, fake_quant, quantize
+
+__all__ = ["dequantize", "fake_quant", "fwht", "hadamard_inverse",
+           "hadamard_transform", "quantize"]

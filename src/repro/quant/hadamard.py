@@ -1,0 +1,55 @@
+"""Randomized Hadamard transform for latent pre-conditioning (Table 4).
+
+Per-token quantization suffers from outlier channels; rotating by a
+(randomized) Hadamard matrix flattens the distribution (Palu §quant, QuIP,
+etc.).  For dim = 2^k * m we apply H_{2^k} (x) I_m — the fast Walsh-
+Hadamard transform over the largest power-of-two factor — after a fixed
++-1 diagonal (seeded, so the inverse is reproducible everywhere).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pow2_factor(n: int) -> int:
+    p = 1
+    while n % (2 * p) == 0:
+        p *= 2
+    return p
+
+
+def rademacher_diag(dim: int, seed: int = 7) -> np.ndarray:
+    g = np.random.Generator(np.random.Philox(key=[seed, dim]))
+    return (g.integers(0, 2, size=dim) * 2 - 1).astype(np.float32)
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Fast Walsh-Hadamard over the last axis (power-of-two blocks)."""
+    n = x.shape[-1]
+    p = _pow2_factor(n)
+    m = n // p
+    y = x.astype(jnp.float32).reshape(x.shape[:-1] + (m, p))
+    h = 1
+    while h < p:
+        y = y.reshape(x.shape[:-1] + (m, p // (2 * h), 2, h))
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    y = y.reshape(x.shape[:-1] + (m, p)) / jnp.sqrt(jnp.float32(p))
+    return y.reshape(x.shape).astype(x.dtype)
+
+
+def hadamard_transform(x: jax.Array, seed: int = 7) -> jax.Array:
+    """Randomized orthogonal transform: diag(+-1) then FWHT."""
+    d = jnp.asarray(rademacher_diag(x.shape[-1], seed), x.dtype)
+    return fwht(x * d)
+
+
+def hadamard_inverse(y: jax.Array, seed: int = 7) -> jax.Array:
+    """FWHT is an involution (orthonormal); undo the diagonal after."""
+    d = jnp.asarray(rademacher_diag(y.shape[-1], seed), y.dtype)
+    return fwht(y) * d

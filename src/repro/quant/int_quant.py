@@ -1,0 +1,31 @@
+"""Per-token symmetric integer quantization of cache latents (Table 4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, bits: int = 8):
+    """Symmetric per-token (last-axis) quantization.
+
+    Returns (q int8, scale f32 broadcastable).  4-bit values live in
+    [-7, 7] inside int8 storage (packing is a serving-layer detail)."""
+    if bits not in (3, 4, 8):
+        raise ValueError(bits)
+    qmax = {8: 127, 4: 7, 3: 3}[bits]
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / qmax, 1e-30)
+    q = jnp.clip(jnp.round(x32 / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quant(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Quantize-dequantize round trip (quality evaluation path)."""
+    q, s = quantize(x, bits)
+    return dequantize(q, s, x.dtype)

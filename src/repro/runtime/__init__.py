@@ -1,0 +1,10 @@
+from repro.runtime.train_loop import (
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+    train_loop,
+)
+from repro.runtime.watchdog import Watchdog, WatchdogTimeout
+
+__all__ = ["TrainConfig", "Watchdog", "WatchdogTimeout", "init_train_state",
+           "make_train_step", "train_loop"]

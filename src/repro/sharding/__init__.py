@@ -1,0 +1,11 @@
+from repro.sharding.rules import (
+    batch_axes,
+    batch_specs,
+    cache_specs,
+    opt_specs,
+    param_specs,
+    to_named,
+)
+
+__all__ = ["batch_axes", "batch_specs", "cache_specs", "opt_specs",
+           "param_specs", "to_named"]

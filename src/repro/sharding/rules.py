@@ -1,0 +1,214 @@
+"""Rule-based PartitionSpec assignment for every pytree in the system.
+
+Philosophy: *best-effort preference lists* per leaf name.  Each rule is an
+ordered list of (mesh_axis, dim) assignments; an assignment is applied only
+if the dim is divisible by the axis size (and, for the FSDP axis, only if
+the leaf is big enough to be worth gathering).  Whatever doesn't fit stays
+replicated — so the same rules drive every architecture, including the
+awkward ones (36-head MHA, 1500-frame cross caches), without special cases.
+
+Key choices (see DESIGN.md §2/§7):
+  * TP ("model") shards attention heads / FFN width / MoE experts / vocab.
+  * FSDP ("data") shards a second dim of large parameters; XLA inserts the
+    per-layer all-gather / reduce-scatter pairs.
+  * Decode caches shard the SEQUENCE axis over "model" — kv-head counts are
+    never divisible by 16, but S always is.  Under pjit this yields
+    sequence-parallel flash decoding automatically: the softmax reduction
+    over the sharded S axis becomes the (max, sum) psum pair (the LSE
+    merge), and the latent A @ z_v contraction psums a tiny (B, H, r_v).
+    This also makes batch=1 long_500k decode 16-way parallel.
+  * Multi-pod: "pod" joins the batch axes (pure DP across pods); params
+    stay pod-replicated unless enormous (the 671B case is reported in
+    EXPERIMENTS.md with pod-sharded optimizer state).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (axis, dim) preference lists.  dim indexes the *logical* tensor; leaves
+# under the scanned "blocks" subtree carry a leading n_periods dim that the
+# resolver skips automatically.
+_OUT = (("model", -1), ("data", 0))      # y = x @ W: shard W's output dim
+_IN = (("model", 0), ("data", -1))       # shard W's input (contraction) dim
+
+PARAM_RULES: dict[str, tuple] = {
+    # embeddings / head
+    "embed": (("model", 0), ("data", 1)),
+    "lm_head": (("model", 1), ("data", 0)),
+    # attention
+    "wq": _OUT, "wk": _OUT, "wv": _OUT,
+    "wo": _IN,
+    # MLA
+    "wq_a": _OUT, "wq_b": _OUT, "wkv_a": _OUT, "wkv_b": _OUT,
+    # ReCalKV latent factors: small; replicated (the cache shards on S)
+    "l_k": (), "r_k": (), "l_v": (),
+    "wo_fused": (("model", 0), ("data", 2)),
+    # dense FFN
+    "wi": (("model", -1), ("data", 0)),
+    "wg": (("model", -1), ("data", 0)),
+    # mamba
+    "in_proj": _OUT, "x_proj": _IN, "dt_proj": _OUT, "out_proj": _IN,
+    "conv_w": (("model", -1),),
+    "A_log": (("model", 0),),
+    # rglru
+    "in_main": _OUT, "in_gate": _OUT, "w_a": _IN, "w_x": _IN,
+    # router: tiny, and its output feeds a global top-k -> replicate
+    "router": (),
+}
+
+# 3D MoE expert weights: experts over model (EP), fsdp over dim1.
+MOE_RULES = {
+    "wi": (("model", 0), ("data", 1)),
+    "wg": (("model", 0), ("data", 1)),
+    "wo": (("model", 0), ("data", 1)),
+}
+
+CACHE_RULES: dict[str, tuple] = {
+    "k": (("batch", 0), ("model", 1)),
+    "v": (("batch", 0), ("model", 1)),
+    "zk": (("batch", 0), ("model", 1)),
+    "zv": (("batch", 0), ("model", 1)),
+    "pos": (("batch", 0), ("model", 1)),
+    "ckv": (("batch", 0), ("model", 1)),
+    "krope": (("batch", 0), ("model", 1)),
+    "h": (("batch", 0), ("model", 1)),
+    "conv": (("batch", 0), ("model", 2)),
+}
+
+FSDP_THRESHOLD_BYTES = 1 << 24          # 16 MiB (post-TP) triggers FSDP
+ZERO3_THRESHOLD_BYTES = 1 << 28         # 256 MiB: FSDP spans pods too
+                                        # (671B-class experts; ZeRO-3 across
+                                        # the slower inter-pod links is the
+                                        # only way optimizer state fits)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return out
+
+
+def _leaf_bytes(shape, dtype) -> int:
+    return math.prod(shape) * np.dtype(dtype).itemsize
+
+
+def _resolve(prefs, shape, dtype, mesh: Mesh, offset: int):
+    """Apply a preference list with divisibility + size checks."""
+    ndim = len(shape)
+    spec: list[Any] = [None] * ndim
+    size = _leaf_bytes(shape, dtype)
+    for axis, dim in prefs:
+        # logical dim -> physical dim (skip the scan-stack leading axis)
+        d = dim + offset if dim >= 0 else ndim + dim
+        if not (offset <= d < ndim) or spec[d] is not None:
+            continue
+        if axis == "batch":
+            names = batch_axes(mesh)
+            n = math.prod(mesh.shape[a] for a in names)
+            if names and shape[d] % n == 0:
+                spec[d] = names if len(names) > 1 else names[0]
+                size //= n
+            continue
+        if axis not in mesh.shape:
+            continue
+        n = mesh.shape[axis]
+        if axis == "data":
+            if size < FSDP_THRESHOLD_BYTES:
+                continue  # FSDP only pays off for big leaves
+            if size >= ZERO3_THRESHOLD_BYTES and "pod" in mesh.shape:
+                np_ = n * mesh.shape["pod"]
+                if shape[d] % np_ == 0:
+                    spec[d] = ("data", "pod")
+                    size //= np_
+                    continue
+        if shape[d] % n != 0:
+            continue
+        spec[d] = axis
+        size //= n
+    return P(*spec)
+
+
+def _spec_for(path, leaf, mesh: Mesh, rules, default=()):
+    names = _path_names(path)
+    name = names[-1]
+    # scanned stack: params/caches under top-level "blocks" carry (n_periods,)
+    offset = 1 if (names and names[0] == "blocks") else 0
+    shape, dtype = leaf.shape, leaf.dtype
+    if rules is CACHE_RULES:
+        prefs = rules.get(name, (("batch", 0),))
+    else:
+        if name in MOE_RULES and len(shape) - offset == 3 and "mlp" in names:
+            prefs = MOE_RULES[name]
+        else:
+            prefs = rules.get(name, default)
+    if len(shape) - offset < 1 or not prefs:
+        return P()
+    return _resolve(prefs, shape, dtype, mesh, offset)
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec tree for a parameter pytree (shapes or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, mesh, PARAM_RULES), params)
+
+
+def cache_specs(caches, mesh: Mesh):
+    """PartitionSpec tree for decode caches (sequence-sharded rings)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, mesh, CACHE_RULES), caches)
+
+
+def opt_specs(opt_state, params_spec, mesh: Mesh):
+    """Optimizer state mirrors parameter sharding; scalars replicate."""
+    def one(path, leaf):
+        names = _path_names(path)
+        if names and names[0] in ("mu", "nu", "residual"):
+            sub = jax.tree_util.tree_map_with_path(
+                lambda p, l: _spec_for(p, l, mesh, PARAM_RULES), leaf)
+            return sub
+        return P()
+    out = {}
+    for k, v in opt_state.items():
+        if k in ("mu", "nu", "residual"):
+            out[k] = jax.tree_util.tree_map_with_path(
+                lambda p, l: _spec_for(p, l, mesh, PARAM_RULES), v)
+        else:
+            out[k] = P()
+    return out
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Inputs: leading dim over (pod, data)."""
+    names = batch_axes(mesh)
+    dp = names if len(names) > 1 else (names[0] if names else None)
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        n = math.prod(mesh.shape[a] for a in batch_axes(mesh))
+        if leaf.shape[0] % n == 0 and dp is not None:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def to_named(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

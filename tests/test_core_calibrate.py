@@ -1,0 +1,60 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import calibrate, svd
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(3)
+
+
+def setup(rng, m=24, n=32, N=500, subspace=6):
+    W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    basis = rng.normal(size=(subspace, m))
+    X = jnp.asarray(rng.normal(size=(N, subspace)) @ basis
+                    + 0.1 * rng.normal(size=(N, m)), jnp.float32)
+    return W, X, X.T @ X
+
+
+class TestCalibration:
+    def test_error_monotonically_decreases(self, rng):
+        W, X, C = setup(rng)
+        init = svd.truncated_svd(W, 8)
+        res = calibrate.calibrate_factors(W, C, init, num_iters=6)
+        errs = list(res.errors)
+        assert all(a >= b - 1e-2 for a, b in zip(errs, errs[1:])), errs
+
+    def test_beats_plain_svd_on_data(self, rng):
+        """The paper's core claim for OCMF: calibrated factors have lower
+        data-weighted error than plain truncated SVD (eq. 6)."""
+        W, X, C = setup(rng)
+        init = svd.truncated_svd(W, 8)
+        res = calibrate.calibrate_factors(W, C, init)
+        e_plain = float(calibrate.weighted_error(W, init.L, init.R, C))
+        assert float(res.final_error) <= e_plain
+        # strictly better when data is anisotropic
+        assert float(res.final_error) < 0.999 * e_plain
+
+    def test_matches_whitened_svd_quality(self, rng):
+        """ALS from a plain-SVD start should approach whitened-SVD quality
+        (both minimize the same objective; whitened SVD is the global opt
+        of the rank constraint)."""
+        W, X, C = setup(rng)
+        res = calibrate.calibrate_factors(W, C, svd.truncated_svd(W, 8),
+                                          num_iters=16)
+        ew = float(svd.data_weighted_error(W, svd.whitened_svd(W, C, 8), C))
+        assert float(res.final_error) <= ew * 1.05
+
+    def test_full_rank_is_exact(self, rng):
+        W, X, C = setup(rng, m=12, n=12)
+        res = calibrate.calibrate_factors(W, C, svd.truncated_svd(W, 12))
+        assert float(res.final_error) < 1e-3
+
+    def test_rank_deficient_cov_is_stable(self, rng):
+        """Ridge keeps the normal equations solvable when N < m."""
+        W = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+        X = jnp.asarray(rng.normal(size=(5, 24)), jnp.float32)  # rank 5
+        res = calibrate.calibrate_factors(W, X.T @ X, svd.truncated_svd(W, 8))
+        assert np.isfinite(float(res.final_error))

@@ -1,0 +1,71 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cka
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1)
+
+
+class TestLinearCKA:
+    def test_self_similarity_is_one(self, rng):
+        X = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+        assert float(cka.linear_cka(X, X)) == pytest.approx(1.0, abs=1e-5)
+
+    def test_range_and_symmetry(self, rng):
+        X = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+        Y = jnp.asarray(rng.normal(size=(64, 12)), jnp.float32)
+        v = float(cka.linear_cka(X, Y))
+        assert 0.0 <= v <= 1.0
+        assert v == pytest.approx(float(cka.linear_cka(Y, X)), abs=1e-6)
+
+    def test_orthogonal_invariance(self, rng):
+        """CKA is invariant to rotations of either representation."""
+        X = jnp.asarray(rng.normal(size=(48, 6)), jnp.float32)
+        Y = jnp.asarray(rng.normal(size=(48, 6)), jnp.float32)
+        Q, _ = np.linalg.qr(rng.normal(size=(6, 6)))
+        v1 = float(cka.linear_cka(X, Y))
+        v2 = float(cka.linear_cka(X @ jnp.asarray(Q, jnp.float32), Y))
+        assert v1 == pytest.approx(v2, abs=1e-4)
+
+    def test_correlated_beats_independent(self, rng):
+        X = jnp.asarray(rng.normal(size=(128, 8)), jnp.float32)
+        Y_corr = X @ jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+        Y_ind = jnp.asarray(rng.normal(size=(128, 8)), jnp.float32)
+        assert float(cka.linear_cka(X, Y_corr)) > float(cka.linear_cka(X, Y_ind))
+
+
+class TestHeadCKA:
+    def test_matrix_properties(self, rng):
+        reps = jnp.asarray(rng.normal(size=(6, 100, 8)), jnp.float32)
+        S = np.asarray(cka.head_cka_matrix(reps))
+        assert S.shape == (6, 6)
+        np.testing.assert_allclose(S, S.T, atol=1e-5)
+        np.testing.assert_allclose(np.diag(S), 1.0, atol=1e-4)
+        assert (S >= -1e-5).all() and (S <= 1 + 1e-5).all()
+
+    def test_cov_form_matches_feature_form(self, rng):
+        """head_cka_from_cov(W, Xc^T Xc) == head_cka_matrix(Xc @ W_h)."""
+        m, H, dh, N = 16, 4, 6, 200
+        W = jnp.asarray(rng.normal(size=(m, H * dh)), jnp.float32)
+        X = jnp.asarray(rng.normal(size=(N, m)) + 0.5, jnp.float32)
+        Xc = X - X.mean(axis=0, keepdims=True)
+        feats = jnp.stack([
+            Xc @ W[:, h * dh:(h + 1) * dh] for h in range(H)])
+        S_feat = np.asarray(cka.head_cka_matrix(feats))
+        S_cov = np.asarray(cka.head_cka_from_cov(W, Xc.T @ Xc, H))
+        np.testing.assert_allclose(S_cov, S_feat, rtol=1e-3, atol=1e-4)
+
+    def test_duplicate_heads_max_similarity(self, rng):
+        m, dh = 12, 4
+        Wh = rng.normal(size=(m, dh))
+        W = jnp.asarray(np.concatenate([Wh, Wh, rng.normal(size=(m, dh))],
+                                       axis=1), jnp.float32)
+        X = jnp.asarray(rng.normal(size=(300, m)), jnp.float32)
+        Xc = X - X.mean(0, keepdims=True)
+        S = np.asarray(cka.head_cka_from_cov(W, Xc.T @ Xc, 3))
+        assert S[0, 1] == pytest.approx(1.0, abs=1e-4)
+        assert S[0, 2] < 0.99

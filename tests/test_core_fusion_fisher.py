@@ -1,0 +1,111 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fisher, fusion
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(4)
+
+
+class TestPermutationFolding:
+    @pytest.mark.parametrize("Hq,Hkv", [(8, 8), (8, 4), (8, 2), (6, 6)])
+    def test_folded_attention_is_equivalent(self, rng, Hq, Hkv):
+        d, dh, T = 32, 8, 10
+        Wq = jnp.asarray(rng.normal(size=(d, Hq * dh)), jnp.float32)
+        Wk = jnp.asarray(rng.normal(size=(d, Hkv * dh)), jnp.float32)
+        Wv = jnp.asarray(rng.normal(size=(d, Hkv * dh)), jnp.float32)
+        Wo = jnp.asarray(rng.normal(size=(Hq * dh, d)), jnp.float32)
+        perm = rng.permutation(Hkv)
+
+        def attn(wq, wk, wv, wo, x):
+            g = Hq // Hkv
+            q = (x @ wq).reshape(T, Hkv, g, dh)
+            k = (x @ wk).reshape(T, Hkv, dh)
+            v = (x @ wv).reshape(T, Hkv, dh)
+            s = jnp.einsum("qkgd,skd->kgqs", q, k) / dh ** 0.5
+            a = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("kgqs,skd->qkgd", a, v)
+            return o.reshape(T, Hq * dh) @ wo
+
+        x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+        ref = attn(Wq, Wk, Wv, Wo, x)
+        Wq2, Wk2, Wv2, Wo2 = fusion.fold_head_permutation(
+            Wq, Wk, Wv, Wo, perm, Hq, Hkv)
+        out = attn(Wq2, Wk2, Wv2, Wo2, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_inverse_permutation(self, rng):
+        perm = rng.permutation(12)
+        inv = fusion.inverse_permutation(perm)
+        np.testing.assert_array_equal(perm[inv], np.arange(12))
+        np.testing.assert_array_equal(inv[perm], np.arange(12))
+
+
+class TestFusion:
+    def test_fused_projection_identity(self, rng):
+        """sum_h (A_h z_g) (R^(h) W_o^(h)) == sum_h (A_h V_h) W_o^(h)."""
+        Hq, Hkv, s, dh, d, r, S = 8, 4, 2, 8, 32, 12, 20
+        G = Hkv // s
+        R_v = jnp.asarray(rng.normal(size=(G, r, s * dh)), jnp.float32)
+        W_o = jnp.asarray(rng.normal(size=(Hq * dh, d)), jnp.float32)
+        z = jnp.asarray(rng.normal(size=(S, G, r)), jnp.float32)
+        A = jax.nn.softmax(
+            jnp.asarray(rng.normal(size=(Hq, S)), jnp.float32), -1)
+
+        # reference: reconstruct V per kv head, attend, project densely
+        v = jnp.einsum("sgr,grn->sgn", z, R_v).reshape(S, Hkv, dh)
+        qpk = Hq // Hkv
+        o = jnp.stack([A[h] @ v[:, h // qpk] for h in range(Hq)])  # (Hq, dh)
+        ref = o.reshape(1, Hq * dh) @ W_o
+
+        W_f = fusion.fuse_output_projection(R_v, W_o, Hq, Hkv)
+        o_lat = jnp.stack(
+            [A[h] @ z[:, (h // qpk) // s] for h in range(Hq)])      # (Hq, r)
+        out = fusion.fused_output_apply(o_lat[None], W_f)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_fused_shape(self, rng):
+        R_v = jnp.ones((2, 6, 16), jnp.float32)
+        W_o = jnp.ones((8 * 8, 24), jnp.float32)
+        W_f = fusion.fuse_output_projection(R_v, W_o, 8, 4)
+        assert W_f.shape == (8, 6, 24)
+
+
+class TestFisher:
+    def test_allocation_meets_budget(self, rng):
+        scores = rng.random(12).tolist()
+        ratios = fisher.allocate_ratios(scores, 0.5)
+        assert np.mean(ratios) == pytest.approx(0.5, abs=1e-6)
+        assert all(0.0625 <= r <= 1.0 for r in ratios)
+
+    def test_monotone_in_scores(self, rng):
+        scores = sorted(rng.random(8).tolist())
+        ratios = fisher.allocate_ratios(scores, 0.4)
+        assert all(a <= b + 1e-9 for a, b in zip(ratios, ratios[1:]))
+
+    def test_extreme_budget_clips(self):
+        ratios = fisher.allocate_ratios([1.0, 2.0, 3.0], 1.0)
+        assert ratios == pytest.approx([1.0, 1.0, 1.0])
+
+    def test_rank_rounding(self):
+        alloc = fisher.allocate([1.0, 4.0], 0.5, 256)
+        assert all(r % 8 == 0 for r in alloc.ranks)
+        assert alloc.ranks[0] <= alloc.ranks[1]
+
+    def test_empirical_fisher_shapes(self, rng):
+        params = {"w": jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)}
+
+        def loss(p, b):
+            return jnp.sum((b @ p["w"]) ** 2)
+
+        batches = [jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)
+                   for _ in range(2)]
+        f = fisher.empirical_fisher(loss, params, batches)
+        assert f["w"].shape == (4, 4)
+        assert bool(jnp.all(f["w"] >= 0))

@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+
+from repro.core import reorder
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(2)
+
+
+def block_similarity(rng, H, group_size, strength=0.9):
+    """Similarity matrix with planted groups scattered over positions."""
+    S = rng.random((H, H)) * 0.2
+    S = (S + S.T) / 2
+    perm = rng.permutation(H)
+    for g in range(H // group_size):
+        idx = perm[g * group_size:(g + 1) * group_size]
+        for a in idx:
+            for b in idx:
+                S[a, b] = strength + 0.05 * rng.random()
+    np.fill_diagonal(S, 1.0)
+    return S, perm
+
+
+class TestGreedyGrouping:
+    def test_partition_property(self, rng):
+        S, _ = block_similarity(rng, 16, 4)
+        groups = reorder.greedy_group_heads(S, 4)
+        flat = sorted(h for g in groups for h in g)
+        assert flat == list(range(16))
+        assert all(len(g) == 4 for g in groups)
+
+    def test_recovers_planted_groups(self, rng):
+        S, perm = block_similarity(rng, 16, 4)
+        groups = reorder.greedy_group_heads(S, 4)
+        planted = {frozenset(perm[i * 4:(i + 1) * 4].tolist())
+                   for i in range(4)}
+        found = {frozenset(g) for g in groups}
+        assert found == planted
+
+    def test_improves_within_group_similarity(self, rng):
+        S, _ = block_similarity(rng, 16, 4)
+        hsr = reorder.greedy_group_heads(S, 4)
+        base = reorder.identity_groups(16, 4)
+        assert (reorder.within_group_similarity(S, hsr)
+                >= reorder.within_group_similarity(S, base))
+
+    def test_group_size_one(self):
+        groups = reorder.greedy_group_heads(np.eye(4), 1)
+        assert groups == [[0], [1], [2], [3]]
+
+    def test_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            reorder.greedy_group_heads(np.eye(6), 4)
+
+
+class TestPermutation:
+    def test_groups_to_permutation_roundtrip(self, rng):
+        S, _ = block_similarity(rng, 8, 2)
+        groups = reorder.greedy_group_heads(S, 2)
+        perm = reorder.groups_to_permutation(groups)
+        assert sorted(perm.tolist()) == list(range(8))
+
+    def test_invalid_groups_raise(self):
+        with pytest.raises(ValueError):
+            reorder.groups_to_permutation([[0, 1], [1, 2]])

@@ -1,0 +1,115 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import svd
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def low_rank_matrix(rng, m, n, r, noise=0.0):
+    A = rng.normal(size=(m, r)) @ rng.normal(size=(r, n))
+    return jnp.asarray(A + noise * rng.normal(size=(m, n)), jnp.float32)
+
+
+class TestTruncatedSVD:
+    def test_exact_at_true_rank(self, rng):
+        W = low_rank_matrix(rng, 32, 48, 5)
+        f = svd.truncated_svd(W, 5)
+        np.testing.assert_allclose(np.asarray(f.reconstruct()), np.asarray(W),
+                                   atol=1e-4)
+
+    def test_error_monotone_in_rank(self, rng):
+        W = jnp.asarray(rng.normal(size=(40, 40)), jnp.float32)
+        errs = [float(svd.frobenius_error(W, svd.truncated_svd(W, r)))
+                for r in (4, 8, 16, 32, 40)]
+        assert all(a >= b - 1e-5 for a, b in zip(errs, errs[1:]))
+        assert errs[-1] < 1e-6  # full rank is exact
+
+    def test_eckart_young_optimality(self, rng):
+        """Truncated SVD beats a random rank-r factorization."""
+        W = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+        f = svd.truncated_svd(W, 8)
+        best = float(svd.frobenius_error(W, f))
+        for _ in range(5):
+            L = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+            R = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+            rand = float(jnp.sum((L @ R - W) ** 2))
+            assert best <= rand
+
+    def test_factor_shapes(self, rng):
+        W = jnp.asarray(rng.normal(size=(24, 36)), jnp.float32)
+        f = svd.truncated_svd(W, 6)
+        assert f.L.shape == (24, 6) and f.R.shape == (6, 36)
+        assert f.rank == 6
+
+
+class TestWhitenedSVD:
+    def test_identity_cov_matches_plain(self, rng):
+        W = jnp.asarray(rng.normal(size=(20, 30)), jnp.float32)
+        cov = jnp.eye(20)
+        fw = svd.whitened_svd(W, cov, 7)
+        fp = svd.truncated_svd(W, 7)
+        np.testing.assert_allclose(
+            float(svd.frobenius_error(W, fw)),
+            float(svd.frobenius_error(W, fp)), rtol=1e-3, atol=1e-4)
+
+    def test_beats_plain_on_anisotropic_data(self, rng):
+        m, n, N = 24, 32, 4000
+        W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        # activations concentrated in a low-dim subspace
+        basis = rng.normal(size=(6, m))
+        X = jnp.asarray(rng.normal(size=(N, 6)) @ basis
+                        + 0.05 * rng.normal(size=(N, m)), jnp.float32)
+        cov = X.T @ X
+        fw = svd.whitened_svd(W, cov, 8)
+        fp = svd.truncated_svd(W, 8)
+        ew = float(jnp.sum((X @ fw.reconstruct() - X @ W) ** 2))
+        ep = float(jnp.sum((X @ fp.reconstruct() - X @ W) ** 2))
+        assert ew < ep
+
+    def test_data_weighted_error_identity(self, rng):
+        W = jnp.asarray(rng.normal(size=(16, 20)), jnp.float32)
+        X = jnp.asarray(rng.normal(size=(100, 16)), jnp.float32)
+        f = svd.truncated_svd(W, 4)
+        direct = float(jnp.sum((X @ f.reconstruct() - X @ W) ** 2))
+        via_cov = float(svd.data_weighted_error(W, f, X.T @ X))
+        np.testing.assert_allclose(direct, via_cov, rtol=1e-3)
+
+
+class TestGroupedSVD:
+    def test_grouping_shapes_and_stacking(self, rng):
+        H, dh, m = 8, 8, 32
+        W = jnp.asarray(rng.normal(size=(m, H * dh)), jnp.float32)
+        groups = [[0, 1], [2, 3], [4, 5], [6, 7]]
+        fs = svd.grouped_svd(W, groups, [6] * 4, H)
+        L, R = svd.stack_group_factors(fs)
+        assert L.shape == (4, m, 6) and R.shape == (4, 6, 2 * dh)
+
+    def test_full_rank_groups_exact(self, rng):
+        H, dh, m = 4, 6, 20
+        W = jnp.asarray(rng.normal(size=(m, H * dh)), jnp.float32)
+        groups = [[0, 2], [1, 3]]
+        fs = svd.grouped_svd(W, groups, [12] * 2, H)
+        per_head = svd.head_columns(W, H)
+        for g, f in zip(groups, fs):
+            Wg = jnp.concatenate([per_head[h] for h in g], axis=1)
+            np.testing.assert_allclose(np.asarray(f.reconstruct()),
+                                       np.asarray(Wg), atol=1e-4)
+
+    def test_mixed_rank_stack_raises(self, rng):
+        W = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+        fs = svd.grouped_svd(W, [[0, 1], [2, 3]], [4, 6], 4)
+        with pytest.raises(ValueError):
+            svd.stack_group_factors(fs)
+
+
+def test_effective_rank_rounding():
+    assert svd.effective_rank_for_ratio(512, 0.5) == 256
+    assert svd.effective_rank_for_ratio(320, 0.5) == 160
+    assert svd.effective_rank_for_ratio(256, 0.3, multiple=8) == 80
+    assert svd.effective_rank_for_ratio(64, 0.01) == 8       # min_rank floor
+    assert svd.effective_rank_for_ratio(64, 1.0) == 64

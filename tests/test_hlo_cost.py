@@ -1,0 +1,118 @@
+"""Unit tests for the trip-count-aware HLO cost model (launch/hlo_cost.py).
+
+The roofline terms all flow through this parser, so we pin its behavior on
+small compiled programs with hand-computable costs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def analyze_fn(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return hlo_cost.analyze(compiled.as_text())
+
+
+class TestDotFlops:
+    def test_single_matmul(self):
+        a = jnp.ones((64, 128), jnp.float32)
+        b = jnp.ones((128, 32), jnp.float32)
+        res = analyze_fn(lambda x, y: x @ y, a, b)
+        # 2 * M * N * K
+        assert res.flops == pytest.approx(2 * 64 * 32 * 128, rel=0.01)
+
+    def test_batched_dot(self):
+        a = jnp.ones((4, 16, 32), jnp.float32)
+        b = jnp.ones((4, 32, 8), jnp.float32)
+        res = analyze_fn(lambda x, y: jnp.einsum("bij,bjk->bik", x, y), a, b)
+        assert res.flops == pytest.approx(2 * 4 * 16 * 8 * 32, rel=0.01)
+
+    def test_elementwise_has_no_flops(self):
+        a = jnp.ones((256, 256), jnp.float32)
+        res = analyze_fn(lambda x: jnp.tanh(x) + x * 2, a)
+        assert res.flops == 0.0
+        assert res.bytes > 0  # but it does move bytes
+
+
+class TestLoopTripCounts:
+    def test_scan_multiplies_body_cost(self):
+        """An N-iteration scan must cost ~N x the body (XLA's own
+        cost_analysis counts it once — the bug this module exists for)."""
+        w = jnp.ones((64, 64), jnp.float32)
+        x = jnp.ones((8, 64), jnp.float32)
+
+        def step(carry, _):
+            return carry @ w, None
+
+        def fn(x):
+            out, _ = jax.lax.scan(step, x, None, length=10)
+            return out
+
+        res = analyze_fn(fn, x)
+        one_dot = 2 * 8 * 64 * 64
+        assert res.flops == pytest.approx(10 * one_dot, rel=0.05)
+
+    def test_nested_scans_multiply(self):
+        w = jnp.ones((32, 32), jnp.float32)
+
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+
+        def fn(x):
+            out, _ = jax.lax.scan(outer, x, None, length=3)
+            return out
+
+        res = analyze_fn(fn, jnp.ones((8, 32), jnp.float32))
+        one_dot = 2 * 8 * 32 * 32
+        assert res.flops == pytest.approx(12 * one_dot, rel=0.05)
+
+    def test_fori_loop_trip_count(self):
+        w = jnp.ones((16, 16), jnp.float32)
+
+        def fn(x):
+            return jax.lax.fori_loop(0, 7, lambda i, c: c @ w, x)
+
+        res = analyze_fn(fn, jnp.ones((4, 16), jnp.float32))
+        assert res.flops == pytest.approx(7 * 2 * 4 * 16 * 16, rel=0.05)
+
+
+class TestBytesModel:
+    def test_bytes_scale_with_tensor_size(self):
+        small = analyze_fn(lambda x: x + 1.0, jnp.ones((64, 64), jnp.float32))
+        big = analyze_fn(lambda x: x + 1.0, jnp.ones((256, 256), jnp.float32))
+        assert big.bytes > 10 * small.bytes
+
+    def test_top_costs_attribution(self):
+        a = jnp.ones((64, 64), jnp.float32)
+
+        def fn(x):
+            return (x @ x) @ x
+
+        res = analyze_fn(fn, a)
+        assert res.top_flops, "dot attribution missing"
+        total_attr = sum(v for _, v in res.top_flops)
+        assert total_attr == pytest.approx(res.flops, rel=0.01)
+
+
+class TestParserRobustness:
+    def test_tuple_typed_ops_parse(self):
+        """while loops carry tuple types with /*index=N*/ comments."""
+        def fn(x):
+            def body(c, _):
+                return (c[0] * 2.0, c[1] + 1), None
+            (a, b), _ = jax.lax.scan(body, (x, x), None, length=5)
+            return a + b
+
+        res = analyze_fn(fn, jnp.ones((32, 32), jnp.float32))
+        assert np.isfinite(res.bytes) and res.bytes > 0
+
+    def test_empty_program(self):
+        res = hlo_cost.analyze("HloModule empty\n")
+        assert res.flops == 0.0

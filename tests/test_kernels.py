@@ -1,0 +1,196 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles,
+executed with interpret=True (kernel bodies run in Python on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_prefill import flash_prefill_attention
+from repro.kernels.latent_decode import latent_decode_attention
+from repro.kernels.latent_decode_q import latent_decode_attention_quant
+
+
+def rnd(rng, *shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+def latent_inputs(rng, B, S, G, rk, rv, s, qpk, dh, dtype):
+    Hg = s * qpk
+    q = rnd(rng, B, G, Hg, dh, dtype=dtype)
+    zk = rnd(rng, B, S, G, rk, dtype=dtype)
+    zv = rnd(rng, B, S, G, rv, dtype=dtype)
+    r_k = rnd(rng, G, rk, s * dh, dtype=dtype, scale=rk ** -0.5)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cur = jnp.asarray([S - 1] * B)
+    cos, sin = ops.rope_tables_for(pos, dh, 1e4)
+    bias = ops.decode_bias(pos, cur, None)
+    return q, zk, zv, r_k, cos.astype(dtype), sin.astype(dtype), bias
+
+
+SWEEP = [
+    # B, S, G, rk, rv, s, qpk, dh
+    (1, 128, 1, 16, 16, 1, 4, 16),     # MQA degenerate group
+    (2, 256, 2, 32, 24, 2, 2, 16),     # uneven rk/rv
+    (2, 256, 2, 32, 32, 4, 1, 8),      # MHA groups of 4
+    (1, 512, 1, 64, 48, 4, 4, 32),     # GQA 16q/4kv single group
+    (3, 384, 3, 24, 24, 2, 3, 8),      # odd batch/groups/heads
+]
+
+
+class TestLatentDecode:
+    @pytest.mark.parametrize("B,S,G,rk,rv,s,qpk,dh", SWEEP)
+    def test_matches_oracle(self, B, S, G, rk, rv, s, qpk, dh):
+        rng = np.random.default_rng(hash((B, S, G, rk)) % 2**31)
+        q, zk, zv, r_k, cos, sin, bias = latent_inputs(
+            rng, B, S, G, rk, rv, s, qpk, dh, jnp.float32)
+        o_ref = ref.latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
+                                            dh ** -0.5)
+        o_ker = latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
+                                        scale=dh ** -0.5, block_s=128,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16_inputs(self):
+        rng = np.random.default_rng(9)
+        q, zk, zv, r_k, cos, sin, bias = latent_inputs(
+            rng, 2, 256, 2, 16, 16, 2, 2, 16, jnp.bfloat16)
+        o_ref = ref.latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, 0.25)
+        o_ker = latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
+                                        scale=0.25, block_s=128, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(o_ker, np.float32), np.asarray(o_ref, np.float32),
+            rtol=0.05, atol=0.05)
+
+    def test_masked_positions_ignored(self):
+        """Ring slots beyond cur (or empty) must not affect the output."""
+        rng = np.random.default_rng(10)
+        B, S = 2, 256
+        q, zk, zv, r_k, cos, sin, _ = latent_inputs(
+            rng, B, S, 2, 16, 16, 2, 2, 16, jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        cur = jnp.asarray([100, 200])
+        bias = ops.decode_bias(pos, cur, None)
+        o1 = latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
+                                     scale=0.25, block_s=128, interpret=True)
+        # scramble the masked tail; output must not change
+        zk2 = zk.at[:, 201:].set(99.0)
+        zv2 = zv.at[:, 201:].set(-99.0)
+        o2 = latent_decode_attention(q, zk2, zv2, r_k, cos, sin, bias,
+                                     scale=0.25, block_s=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+    def test_windowed_bias(self):
+        rng = np.random.default_rng(11)
+        q, zk, zv, r_k, cos, sin, _ = latent_inputs(
+            rng, 1, 256, 2, 16, 16, 2, 2, 16, jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(256), (1, 256))
+        cur = jnp.asarray([255])
+        bias = ops.decode_bias(pos, cur, window=64)
+        o_ref = ref.latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, 0.25)
+        o_ker = latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
+                                        scale=0.25, block_s=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestLatentDecodeQuant:
+    @pytest.mark.parametrize("B,S,G,rk,rv,s,qpk,dh", SWEEP[:3])
+    def test_matches_oracle(self, B, S, G, rk, rv, s, qpk, dh):
+        rng = np.random.default_rng(12)
+        q, zk, zv, r_k, cos, sin, bias = latent_inputs(
+            rng, B, S, G, rk, rv, s, qpk, dh, jnp.float32)
+        from repro.quant import quantize
+        zk_q, zk_s = quantize(zk, 8)
+        zv_q, zv_s = quantize(zv, 8)
+        zk_s, zv_s = zk_s[..., 0], zv_s[..., 0]
+        o_ref = ref.latent_decode_attention_quant(
+            q, zk_q, zk_s, zv_q, zv_s, r_k, cos, sin, bias, dh ** -0.5)
+        o_ker = latent_decode_attention_quant(
+            q, zk_q, zk_s, zv_q, zv_s, r_k, cos, sin, bias,
+            scale=dh ** -0.5, block_s=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_quantized_close_to_fp(self):
+        rng = np.random.default_rng(13)
+        q, zk, zv, r_k, cos, sin, bias = latent_inputs(
+            rng, 1, 128, 2, 16, 16, 2, 2, 16, jnp.float32)
+        from repro.quant import quantize
+        zk_q, zk_s = quantize(zk, 8)
+        zv_q, zv_s = quantize(zv, 8)
+        o_fp = ref.latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, 0.25)
+        o_q = latent_decode_attention_quant(
+            q, zk_q, zk_s[..., 0], zv_q, zv_s[..., 0], r_k, cos, sin, bias,
+            scale=0.25, block_s=128, interpret=True)
+        rel = float(jnp.linalg.norm(o_fp - o_q) / jnp.linalg.norm(o_fp))
+        assert rel < 0.05
+
+
+class TestFlashPrefill:
+    @pytest.mark.parametrize("B,T,H,Hkv,dh,win", [
+        (1, 128, 4, 4, 16, None),
+        (2, 256, 4, 2, 16, None),
+        (2, 256, 8, 2, 8, 64),
+        (1, 512, 2, 1, 32, 128),
+    ])
+    def test_matches_oracle(self, B, T, H, Hkv, dh, win):
+        rng = np.random.default_rng(14)
+        q = rnd(rng, B, T, H, dh)
+        k = rnd(rng, B, T, Hkv, dh)
+        v = rnd(rng, B, T, Hkv, dh)
+        o_ref = ref.flash_prefill_attention(q, k, v, causal=True, window=win)
+        o_ker = flash_prefill_attention(q, k, v, causal=True, window=win,
+                                        block_q=64, block_k=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bidirectional(self):
+        rng = np.random.default_rng(15)
+        q, k, v = (rnd(rng, 2, 128, 4, 16) for _ in range(3))
+        o_ref = ref.flash_prefill_attention(q, k, v, causal=False)
+        o_ker = flash_prefill_attention(q, k, v, causal=False, block_q=64,
+                                        block_k=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_matches_model_layer_semantics(self):
+        """Kernel == the model's chunked_attention (same masking rules)."""
+        from repro.models import layers as L
+        rng = np.random.default_rng(16)
+        B, T, H, dh = 1, 128, 4, 16
+        q, k, v = (rnd(rng, B, T, H, dh) for _ in range(3))
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        o_model = L.chunked_attention(q, k, v, pos, pos, window=32,
+                                      scale=dh ** -0.5, chunk=64)
+        o_ker = flash_prefill_attention(q, k, v, causal=True, window=32,
+                                        block_q=64, block_k=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_model),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestOpsWrapper:
+    def test_latent_decode_end_to_end_vs_model(self):
+        """ops.latent_decode over a model cache == kv_cache.decode_attn_latent
+        score/value semantics (up to the fused projection)."""
+        rng = np.random.default_rng(17)
+        B, S, G, rk, rv, s, qpk, dh = 2, 128, 2, 16, 16, 2, 2, 16
+        H = G * s * qpk
+        cache = {
+            "zk": rnd(rng, B, S, G, rk),
+            "zv": rnd(rng, B, S, G, rv),
+            "pos": jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32),
+        }
+        q = rnd(rng, B, H, dh)
+        r_k = rnd(rng, G, rk, s * dh, scale=rk ** -0.5)
+        cur = jnp.asarray([S - 1, 77])
+        out_k = ops.latent_decode(q, cache, r_k, cur, theta=1e4, window=None,
+                                  scale=dh ** -0.5, block_s=64,
+                                  use_kernel=True, interpret=True)
+        out_r = ops.latent_decode(q, cache, r_k, cur, theta=1e4, window=None,
+                                  scale=dh ** -0.5, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=2e-4, atol=2e-4)
+        assert out_k.shape == (B, H, rv)

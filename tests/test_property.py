@@ -1,0 +1,146 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fisher, svd
+from repro.models import layers as L
+from repro.models import kv_cache as KC
+from repro.quant import fake_quant, hadamard_inverse, hadamard_transform
+
+COMMON = dict(deadline=None, max_examples=25)
+
+
+@settings(**COMMON)
+@given(m=st.integers(4, 24), n=st.integers(4, 24),
+       seed=st.integers(0, 2**16))
+def test_svd_error_decreases_with_rank(m, n, seed):
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    rmax = min(m, n)
+    e_lo = float(svd.frobenius_error(W, svd.truncated_svd(W, max(1, rmax // 2))))
+    e_hi = float(svd.frobenius_error(W, svd.truncated_svd(W, rmax)))
+    assert e_hi <= e_lo + 1e-4
+    assert e_hi < 1e-4 * m * n  # full rank ~ exact
+
+
+@settings(**COMMON)
+@given(n=st.integers(2, 32), target=st.floats(0.07, 1.0),
+       seed=st.integers(0, 2**16))
+def test_fisher_allocation_budget_and_bounds(n, target, seed):
+    rng = np.random.default_rng(seed)
+    scores = (rng.random(n) + 1e-3).tolist()
+    ratios = fisher.allocate_ratios(scores, target)
+    assert len(ratios) == n
+    assert all(0.0625 - 1e-9 <= r <= 1.0 + 1e-9 for r in ratios)
+    # budget met whenever it's inside the clip box
+    if 0.0625 <= target <= 1.0:
+        assert abs(float(np.mean(ratios)) - target) < 1e-3
+
+
+@settings(**COMMON)
+@given(bits=st.sampled_from([4, 8]), rows=st.integers(1, 8),
+       cols=st.integers(4, 64), seed=st.integers(0, 2**16))
+def test_quantization_error_bounded(bits, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    err = jnp.abs(fake_quant(x, bits) - x)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    bound = amax / {8: 127, 4: 7}[bits]  # half-step would be /2; be loose
+    assert bool(jnp.all(err <= bound + 1e-6))
+
+
+@settings(**COMMON)
+@given(dim_pow=st.integers(2, 7), rows=st.integers(1, 6),
+       seed=st.integers(0, 2**16))
+def test_hadamard_is_isometry(dim_pow, rows, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, 2 ** dim_pow)), jnp.float32)
+    y = hadamard_transform(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hadamard_inverse(y)),
+                               np.asarray(x), rtol=1e-3, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(dh_half=st.sampled_from([4, 8, 16]), pos=st.integers(0, 10000),
+       seed=st.integers(0, 2**16))
+def test_rope_preserves_norm_and_relative_angles(dh_half, pos, seed):
+    rng = np.random.default_rng(seed)
+    dh = 2 * dh_half
+    x = jnp.asarray(rng.normal(size=(1, 1, 1, dh)), jnp.float32)
+    cos, sin = L.rope_tables(jnp.asarray([[pos]]), dh, 1e4)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-4)
+    # relative property: <rope(q,p1), rope(k,p2)> depends only on p1-p2
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, dh)), jnp.float32)
+    for delta in (0, 3):
+        dots = []
+        for base in (0, 7):
+            cq = L.rope_tables(jnp.asarray([[base + delta]]), dh, 1e4)
+            ck = L.rope_tables(jnp.asarray([[base]]), dh, 1e4)
+            dots.append(float(jnp.sum(L.apply_rope(q, *cq)
+                                      * L.apply_rope(k, *ck))))
+        assert abs(dots[0] - dots[1]) < 1e-3 * max(1.0, abs(dots[0]))
+
+
+@settings(**COMMON)
+@given(T=st.integers(1, 40), Lr=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 2**16))
+def test_ring_buffer_prefill_semantics(T, Lr, seed):
+    """write_prefill + prefill_pos keep exactly the last min(T, Lr)
+    positions, and slot assignment is pos % Lr."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(size=(1, T, 2)), jnp.float32)
+    cache = jnp.zeros((1, Lr, 2), jnp.float32)
+    out = KC.write_prefill(cache, vals)
+    pos = KC.prefill_pos(jnp.asarray([T]), T, Lr)
+    kept = 0
+    for slot in range(Lr):
+        p = int(pos[0, slot])
+        if p >= 0:
+            kept += 1
+            assert p % Lr == slot
+            np.testing.assert_allclose(np.asarray(out[0, slot]),
+                                       np.asarray(vals[0, p]))
+    assert kept == min(T, Lr)
+
+
+@settings(**COMMON)
+@given(keep=st.floats(0.1, 1.0), width=st.sampled_from([64, 256, 320]))
+def test_rank_for_ratio_bounds(keep, width):
+    r = svd.effective_rank_for_ratio(width, keep)
+    assert 8 <= r <= width
+    assert r % 8 == 0 or r == width
+
+
+@settings(**COMMON)
+@given(Hq=st.sampled_from([4, 8]), s=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2**16))
+def test_fused_projection_matches_dense_path(Hq, s, seed):
+    """Property form of the OCMF fusion identity across head layouts."""
+    from repro.core import fusion
+    rng = np.random.default_rng(seed)
+    Hkv = Hq  # MHA case exercises all group layouts
+    if Hkv % s:
+        return
+    dh, d, r, S = 4, 16, 6, 12
+    G = Hkv // s
+    R_v = jnp.asarray(rng.normal(size=(G, r, s * dh)), jnp.float32)
+    W_o = jnp.asarray(rng.normal(size=(Hq * dh, d)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(S, G, r)), jnp.float32)
+    A = jax.nn.softmax(jnp.asarray(rng.normal(size=(Hq, S)), jnp.float32), -1)
+    v = jnp.einsum("sgr,grn->sgn", z, R_v).reshape(S, Hkv, dh)
+    ref = jnp.stack([A[h] @ v[:, h] for h in range(Hq)]).reshape(
+        1, Hq * dh) @ W_o
+    W_f = fusion.fuse_output_projection(R_v, W_o, Hq, Hkv)
+    o_lat = jnp.stack([A[h] @ z[:, h // s] for h in range(Hq)])
+    out = fusion.fused_output_apply(o_lat[None], W_f)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)

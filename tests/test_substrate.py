@@ -1,0 +1,210 @@
+"""Substrate tests: quant/hadamard, checkpoint, data, optim, schedules."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.data import DataConfig, batch, sequence
+from repro.optim import (
+    AdamWConfig, apply_updates, compressed_psum, init_state, quantize_leaf,
+    with_error_feedback,
+)
+from repro.optim.schedule import cosine, wsd
+from repro.quant import fake_quant, fwht, hadamard_inverse, hadamard_transform, quantize
+
+
+class TestHadamard:
+    @pytest.mark.parametrize("dim", [8, 64, 96, 160, 320])
+    def test_orthonormal(self, dim):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(5, dim)), jnp.float32)
+        y = hadamard_transform(x)
+        np.testing.assert_allclose(
+            float(jnp.linalg.norm(y)), float(jnp.linalg.norm(x)), rtol=1e-4)
+        back = hadamard_inverse(y)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_fwht_involution(self):
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(3, 64)),
+                        jnp.float32)
+        np.testing.assert_allclose(np.asarray(fwht(fwht(x))), np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_flattens_outliers(self):
+        """The reason it's used: post-transform per-token quant error drops
+        for outlier-heavy latents."""
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(64, 128)).astype(np.float32)
+        x[:, 3] *= 50.0  # channel outlier
+        xj = jnp.asarray(x)
+        direct = float(jnp.mean((fake_quant(xj, 4) - xj) ** 2))
+        h = hadamard_transform(xj)
+        via_h = float(jnp.mean((hadamard_inverse(fake_quant(h, 4)) - xj) ** 2))
+        assert via_h < direct
+
+
+class TestIntQuant:
+    @pytest.mark.parametrize("bits,tol", [(8, 0.01), (4, 0.12), (3, 0.25)])
+    def test_roundtrip_error(self, bits, tol):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+        err = float(jnp.sqrt(jnp.mean((fake_quant(x, bits) - x) ** 2)))
+        assert err < tol
+
+    def test_quantize_range(self):
+        x = jnp.asarray(np.random.default_rng(4).normal(size=(8, 16)) * 100,
+                        jnp.float32)
+        q, s = quantize(x, 4)
+        assert int(jnp.max(jnp.abs(q))) <= 7
+        assert q.dtype == jnp.int8
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        g = np.random.default_rng(seed)
+        return {"params": {"w": jnp.asarray(g.normal(size=(4, 4)), jnp.float32),
+                           "blocks": (jnp.ones((2, 3)), jnp.zeros((5,)))},
+                "opt": {"step": jnp.asarray(7)}}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        ckpt.save(str(tmp_path), 10, tree)
+        assert ckpt.latest_step(str(tmp_path)) == 10
+        out = ckpt.restore(str(tmp_path), 10, tree)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_async_and_keep_last(self, tmp_path):
+        tree = self._tree()
+        threads = [ckpt.save(str(tmp_path), s, tree, keep_last=2, async_=True)
+                   for s in (1, 2, 3)]
+        for t in threads:
+            t.join()
+        ckpt.save(str(tmp_path), 4, tree, keep_last=2)
+        kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+        assert len(kept) <= 2 and "step_00000004" in kept
+
+    def test_restore_reshard_hook_called(self, tmp_path):
+        tree = self._tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        seen = []
+
+        def shard_fn(key, arr):
+            seen.append(key)
+            return None
+        ckpt.restore(str(tmp_path), 1, tree, sharding_for=shard_fn)
+        assert len(seen) == len(jax.tree.leaves(tree))
+
+    def test_missing_leaf_raises(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"a": jnp.ones(3)})
+        with pytest.raises(KeyError):
+            ckpt.restore(str(tmp_path), 1, {"b": jnp.ones(3)})
+
+
+class TestData:
+    def test_deterministic(self):
+        dc = DataConfig(vocab_size=64, seq_len=128)
+        a = sequence(dc, "train", 5)
+        b = sequence(dc, "train", 5)
+        np.testing.assert_array_equal(a, b)
+
+    def test_splits_and_indices_differ(self):
+        dc = DataConfig(vocab_size=64, seq_len=128)
+        assert not np.array_equal(sequence(dc, "train", 1),
+                                  sequence(dc, "valid", 1))
+        assert not np.array_equal(sequence(dc, "train", 1),
+                                  sequence(dc, "train", 2))
+
+    def test_shards_partition_global_batch(self):
+        dc = DataConfig(vocab_size=64, seq_len=32)
+        full = batch(dc, "train", 3, 8)
+        parts = [batch(dc, "train", 3, 8, shard=s, num_shards=4)
+                 for s in range(4)]
+        np.testing.assert_array_equal(
+            np.concatenate([p["tokens"] for p in parts]), full["tokens"])
+
+    def test_labels_are_shifted(self):
+        dc = DataConfig(vocab_size=64, seq_len=32)
+        b = batch(dc, "train", 0, 2)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+        assert (b["labels"][:, -1] == -1).all()
+
+    def test_copy_spans_present(self):
+        dc = DataConfig(vocab_size=512, seq_len=256, copy_frac=1.0)
+        toks = sequence(dc, "train", 0)
+        # somewhere a 32-token span repeats verbatim
+        found = any(
+            np.array_equal(toks[i:i + 32], toks[j:j + 32])
+            for i in range(0, 96, 8) for j in range(128, 220, 4) if j > i + 32)
+        assert found
+
+
+class TestOptim:
+    def test_adamw_optimizes_quadratic(self):
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+        state = init_state(params, cfg)
+        for _ in range(200):
+            g = {"w": 2 * (params["w"] - target)}
+            params, state, _ = apply_updates(params, g, state, cfg)
+        np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                                   atol=0.05)
+
+    def test_bf16_moments_still_converge(self):
+        target = jnp.asarray([0.5, -0.5])
+        params = {"w": jnp.zeros(2)}
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0, moment_dtype=jnp.bfloat16)
+        state = init_state(params, cfg)
+        for _ in range(300):
+            g = {"w": 2 * (params["w"] - target)}
+            params, state, _ = apply_updates(params, g, state, cfg)
+        np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                                   atol=0.1)
+        assert state["mu"]["w"].dtype == jnp.bfloat16
+
+    def test_grad_clip_bounds_update(self):
+        params = {"w": jnp.zeros(4)}
+        cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+        state = init_state(params, cfg)
+        g = {"w": jnp.full(4, 1e6)}
+        p2, _, m = apply_updates(params, g, state, cfg)
+        assert float(jnp.max(jnp.abs(p2["w"]))) < 10.0
+        assert float(m["grad_norm"]) > 1e5
+
+    def test_schedules(self):
+        import jax.numpy as jnp
+        s0 = float(cosine(jnp.asarray(0), warmup=10, total=100))
+        s_w = float(cosine(jnp.asarray(10), warmup=10, total=100))
+        s_end = float(cosine(jnp.asarray(100), warmup=10, total=100))
+        assert s0 == pytest.approx(0.0, abs=1e-6)
+        assert s_w == pytest.approx(1.0, abs=1e-2)
+        assert s_end == pytest.approx(0.1, abs=1e-2)
+        w_mid = float(wsd(jnp.asarray(500), warmup=10, total=1000))
+        w_end = float(wsd(jnp.asarray(1000), warmup=10, total=1000))
+        assert w_mid == pytest.approx(1.0)
+        assert w_end <= 0.05
+
+    def test_error_feedback_preserves_signal(self):
+        """Sum of decompressed grads over steps ~= sum of true grads."""
+        g_true = {"w": jnp.asarray(np.random.default_rng(5).normal(size=256) *
+                                   0.01, jnp.float32)}
+        residual = None
+        acc = jnp.zeros(256)
+        for _ in range(30):
+            deq, residual = with_error_feedback(g_true, residual)
+            acc = acc + deq["w"]
+        np.testing.assert_allclose(np.asarray(acc) / 30,
+                                   np.asarray(g_true["w"]), atol=2e-4)
+
+    def test_quantize_leaf_roundtrip(self):
+        g = jnp.asarray(np.random.default_rng(6).normal(size=128), jnp.float32)
+        q, s = quantize_leaf(g)
+        rel = float(jnp.linalg.norm(q.astype(jnp.float32) * s - g)
+                    / jnp.linalg.norm(g))
+        assert rel < 0.02
