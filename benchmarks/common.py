@@ -15,9 +15,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-import repro.models.compress as C
 from repro import checkpoint as ckpt
-from repro.core import ReCalKVConfig
+from repro.api import CalibrationData, CompressionSpec, calibrate, compress
 from repro.data import DataConfig, batch as data_batch
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -56,9 +55,11 @@ def get_trained(steps: int = TRAIN_STEPS):
     return out["params"]
 
 
-def calibration_stats(params, num_batches: int = 6):
+def calibration_data(params, num_batches: int = 6,
+                     fisher: bool = False) -> CalibrationData:
+    """Capture calibration once; every table reuses it across strategies."""
     calib = [_batch("calib", s, 4) for s in range(num_batches)]
-    return C.capture_calibration(CFG, params, calib), calib
+    return calibrate(CFG, params, calib, fisher=fisher)
 
 
 def eval_ppl(cfg, params, num_batches: int = 8) -> float:
@@ -72,16 +73,10 @@ def eval_ppl(cfg, params, num_batches: int = 8) -> float:
     return float(jnp.exp(tot / cnt))
 
 
-def compress_with(params, stats, *, keep_ratio, use_hsr=True,
-                  use_calibration=True, use_whitening=True, group_size=4,
-                  fisher=None):
-    rc = ReCalKVConfig(keep_ratio=keep_ratio, group_size=group_size,
-                       use_hsr=use_hsr, use_calibration=use_calibration,
-                       use_whitening=use_whitening,
-                       use_fisher=fisher is not None,
-                       min_rank=8)
-    fk, fv = fisher if fisher is not None else (None, None)
-    return C.compress_model(CFG, params, stats, rc, fk, fv)
+def compress_spec(params, spec: CompressionSpec, calib: CalibrationData):
+    """Registry-dispatched compression of the shared benchmark model."""
+    art = compress(CFG, params, spec, calib)
+    return art.cfg, art.params
 
 
 def timed(fn, *args, repeats=3):

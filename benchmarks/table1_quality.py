@@ -1,5 +1,6 @@
 """Table 1: perplexity, ReCalKV vs Palu(G-LRD) vs plain SVD, 50/60/70%.
 
+Methods are registry strategies (repro.api), not flag permutations.
 Paper anchor (ordering, validated at unit scale): at every compression
 ratio ReCalKV PPL <= Palu PPL, and degradation grows with ratio."""
 
@@ -8,29 +9,30 @@ from __future__ import annotations
 import time
 
 from benchmarks import common
+from repro.api import CompressionSpec, RankPolicy
+
+# paper-table row name -> registered strategy
+METHODS = {
+    "plain_svd": "grouped-svd",
+    "palu_glrd": "whitened-svd",
+    "recalkv": "recalkv",
+}
 
 
 def run(fast: bool = False):
     params = common.get_trained()
-    stats, _ = common.calibration_stats(params)
+    calib = common.calibration_data(params)
     base_ppl = common.eval_ppl(common.CFG, params)
     rows = [{"name": "table1/original/ppl", "us_per_call": 0,
              "derived": f"{base_ppl:.3f}"}]
     ratios = (0.5,) if fast else (0.5, 0.4, 0.3)   # kept fraction = 1 - compression
-    methods = {
-        "plain_svd": dict(use_hsr=False, use_calibration=False,
-                          use_whitening=False),
-        "palu_glrd": dict(use_hsr=False, use_calibration=False,
-                          use_whitening=True),
-        "recalkv": dict(use_hsr=True, use_calibration=True,
-                        use_whitening=True),
-    }
     results = {}
     for keep in ratios:
-        for name, kw in methods.items():
+        for name, method in METHODS.items():
+            spec = CompressionSpec(method,
+                                   rank_policy=RankPolicy(keep_ratio=keep))
             t0 = time.perf_counter()
-            ccfg, cparams = common.compress_with(params, stats,
-                                                 keep_ratio=keep, **kw)
+            ccfg, cparams = common.compress_spec(params, spec, calib)
             compress_us = (time.perf_counter() - t0) * 1e6
             ppl = common.eval_ppl(ccfg, cparams)
             results[(keep, name)] = ppl

@@ -15,8 +15,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.api import CompressionSpec, RankPolicy
 from repro.data import DataConfig, sequence
 from repro.models import transformer as T
+
+# paper-table row name -> registered strategy
+METHODS = {"palu_glrd": "whitened-svd", "recalkv": "recalkv"}
 
 
 def copy_accuracy(cfg, params, num_seqs: int = 24) -> float:
@@ -48,18 +52,17 @@ def copy_accuracy(cfg, params, num_seqs: int = 24) -> float:
 
 def run(fast: bool = False):
     params = common.get_trained()
-    stats, _ = common.calibration_stats(params)
+    calib = common.calibration_data(params)
     rows = []
     acc0 = copy_accuracy(common.CFG, params, 12 if fast else 24)
     rows.append({"name": "table2/original/copy_acc", "us_per_call": 0,
                  "derived": f"{acc0:.3f}"})
     results = {}
     for keep in ((0.5,) if fast else (0.5, 0.3)):
-        for name, kw in {
-            "palu_glrd": dict(use_hsr=False, use_calibration=False),
-            "recalkv": dict(use_hsr=True, use_calibration=True),
-        }.items():
-            ccfg, cp = common.compress_with(params, stats, keep_ratio=keep, **kw)
+        for name, method in METHODS.items():
+            spec = CompressionSpec(method,
+                                   rank_policy=RankPolicy(keep_ratio=keep))
+            ccfg, cp = common.compress_spec(params, spec, calib)
             acc = copy_accuracy(ccfg, cp, 12 if fast else 24)
             results[(keep, name)] = acc
             comp = int(round((1 - keep) * 100))

@@ -1,33 +1,40 @@
 """Table 3: ablation at a fixed aggressive ratio — HSR / calibration / both.
 
+Every ablation row is a first-class registry strategy (the ReCalKV family
+in ``repro.api.strategies``); the only shared override is whitening OFF —
+whitened SVD is already the global optimum of the calibration objective
+(ALS then adds ~0; see test_calibrate_matches_whitened_svd_quality), so
+the paper's "calibration helps" row is only visible against an unwhitened
+base, matching the paper's own plain-SVD ablation baseline.
+
 Paper anchor (ordering): none > hsr-only ~ calib-only > both, in PPL."""
 
 from __future__ import annotations
 
 from benchmarks import common
+from repro.api import CompressionSpec, RankPolicy
 
+# paper-table row name -> registered strategy
 VARIANTS = {
-    "none": dict(use_hsr=False, use_calibration=False),
-    "hsr_only": dict(use_hsr=True, use_calibration=False),
-    "calib_only": dict(use_hsr=False, use_calibration=True),
-    "both": dict(use_hsr=True, use_calibration=True),
+    "none": "grouped-svd",
+    "hsr_only": "recalkv-hsr",
+    "calib_only": "recalkv-calib",
+    "both": "recalkv",
 }
+ABLATION_OPTIONS = {"use_whitening": False}
 
 
 def run(fast: bool = False):
     params = common.get_trained()
-    stats, _ = common.calibration_stats(params)
+    calib = common.calibration_data(params)
     keep = 0.3  # paper uses 80% compression; 70% keeps the tiny model sane
+    policy = RankPolicy(keep_ratio=keep)
     rows = []
     ppls = {}
-    # NOTE: whitening OFF for the ablation base — whitened SVD is already
-    # the global optimum of the calibration objective (ALS then adds ~0;
-    # see test_calibrate_matches_whitened_svd_quality), so the paper's
-    # "calibration helps" row is only visible against an unwhitened base,
-    # matching the paper's own plain-SVD ablation baseline.
-    for name, kw in VARIANTS.items():
-        ccfg, cp = common.compress_with(params, stats, keep_ratio=keep,
-                                        use_whitening=False, **kw)
+    for name, method in VARIANTS.items():
+        spec = CompressionSpec(method, options=ABLATION_OPTIONS,
+                               rank_policy=policy)
+        ccfg, cp = common.compress_spec(params, spec, calib)
         ppls[name] = common.eval_ppl(ccfg, cp, 4 if fast else 8)
         rows.append({"name": f"table3/{name}/ppl", "us_per_call": 0,
                      "derived": f"{ppls[name]:.3f}"})

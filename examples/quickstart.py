@@ -1,21 +1,23 @@
-"""Quickstart: compress a model's KV cache with ReCalKV in ~30 lines.
+"""Quickstart: compress a model's KV cache through repro.api in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a small dense transformer, runs Algorithm 1 (CKA->HSR grouping for
-keys, calibrated SVD + fused W~_o for values), and shows the cache-size /
-output-fidelity trade-off.
+Builds a small dense transformer, picks a strategy from the registry
+(``recalkv`` = CKA->HSR grouping for keys, calibrated SVD + fused W~_o for
+values), and shows the cache-size / output-fidelity trade-off plus the
+durable-artifact round trip.
 """
 
 import dataclasses
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.models.compress as C
+from repro.api import (CompressionSpec, RankPolicy, compress, list_strategies,
+                       load_artifact, save_artifact)
 from repro.configs import get_config
-from repro.core import ReCalKVConfig
 from repro.models import transformer as T
 
 # 1. a dense model (any HF-style GQA/MHA checkpoint would slot in here)
@@ -27,20 +29,20 @@ params = T.init_params(cfg, jax.random.PRNGKey(0))
 g = np.random.default_rng(0)
 batches = [{"tokens": jnp.asarray(g.integers(0, cfg.vocab_size, (4, 64))),
             "labels": jnp.full((4, 64), -1, jnp.int32)} for _ in range(4)]
-stats = C.capture_calibration(cfg, params, batches)
 
-# 3. Algorithm 1: 50% cache compression
-ccfg, cparams = C.compress_model(
-    cfg, params, stats, ReCalKVConfig(keep_ratio=0.5, group_size=2))
+# 3. pick a strategy (paper Algorithm 1) at 50% cache compression
+print("registered strategies:", ", ".join(list_strategies()))
+spec = CompressionSpec("recalkv",
+                       rank_policy=RankPolicy(keep_ratio=0.5, group_size=2))
+artifact = compress(cfg, params, spec, batches)
+ccfg, cparams = artifact.cfg, artifact.params
 
-# 4. compare: cache bytes + logit fidelity + decode
+# 4. compare: cache bytes + logit fidelity
 toks = jnp.asarray(g.integers(0, cfg.vocab_size, (2, 32)))
 size = lambda c: sum(x.size * x.dtype.itemsize
                      for x in jax.tree.leaves(T.init_decode_cache(c, 2, 64)))
-h_d, _ = T.forward_hidden(cfg, params, toks)
-h_c, _ = T.forward_hidden(ccfg, cparams, toks)
-l_d = T.logits_for(cfg, params, h_d)
-l_c = T.logits_for(ccfg, cparams, h_c)
+l_d = T.logits_for(cfg, params, T.forward_hidden(cfg, params, toks)[0])
+l_c = T.logits_for(ccfg, cparams, T.forward_hidden(ccfg, cparams, toks)[0])
 agree = float(jnp.mean((jnp.argmax(l_d, -1) == jnp.argmax(l_c, -1))))
 
 print(f"cache bytes/slot : dense {size(cfg):,} -> recalkv {size(ccfg):,} "
@@ -48,9 +50,17 @@ print(f"cache bytes/slot : dense {size(cfg):,} -> recalkv {size(ccfg):,} "
 print(f"greedy agreement : {agree:.0%} of positions (random init — trained "
       f"checkpoints do much better, see benchmarks/table1)")
 
-logits, cache = T.prefill(ccfg, cparams, toks, jnp.full((2,), 32), max_len=64)
-nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-for t in range(32, 36):
-    logits, cache = T.decode_step(ccfg, cparams, cache, nxt, jnp.full((2,), t))
+# 5. the artifact is durable: save, load in any process, decode
+with tempfile.TemporaryDirectory() as d:
+    save_artifact(artifact, d)
+    art2 = load_artifact(d)
+    print(f"artifact round-trip: method={art2.method} "
+          f"ranks={art2.provenance['ranks_by_layer']}")
+    logits, cache = T.prefill(art2.cfg, art2.params, toks,
+                              jnp.full((2,), 32), max_len=64)
     nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-print("decoded 4 tokens through the latent cache:", np.asarray(nxt))
+    for t in range(32, 36):
+        logits, cache = T.decode_step(art2.cfg, art2.params, cache, nxt,
+                                      jnp.full((2,), t))
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    print("decoded 4 tokens through the loaded latent cache:", np.asarray(nxt))

@@ -1,26 +1,29 @@
-"""END-TO-END DRIVER: train -> calibrate -> ReCalKV-compress -> serve.
+"""END-TO-END DRIVER: train -> calibrate -> compress -> SAVE -> LOAD -> serve.
 
     PYTHONPATH=src python examples/serve_compressed.py --requests 12
 
 The paper is an inference-efficiency method, so the end-to-end story is a
-serving one: a trained checkpoint goes through Algorithm 1 offline, and
-the continuous-batching engine then serves batched requests from the
-LATENT cache (half the resident bytes at 50% compression -> 2x the slots
-on the same HBM).  Prints side-by-side dense vs compressed engine stats
-and verifies greedy outputs stay consistent.
+serving one — with a real artifact boundary in the middle: a trained
+checkpoint goes through a registry strategy offline, the compressed model
+is persisted as a durable artifact (atomic npz+meta), and the continuous-
+batching engine then boots FROM THE ARTIFACT (``Engine.from_artifact``)
+exactly as a separate serving process would, holding the LATENT cache
+(half the resident bytes at 50% compression -> 2x the slots on the same
+HBM).  Prints side-by-side dense vs compressed engine stats and verifies
+greedy outputs stay consistent.
 """
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.models.compress as C
-from repro.core import ReCalKVConfig
+from repro.api import CompressionSpec, RankPolicy, calibrate, compress, \
+    save_artifact
 from repro.data import DataConfig, batch as data_batch, sequence
-from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig
 from repro.runtime import TrainConfig, train_loop
@@ -46,20 +49,18 @@ def build_model(steps: int):
     return cfg, out["params"], dc
 
 
-def compress(cfg, params, keep: float):
-    g_batches = [{"tokens": jnp.asarray(
+def compress_offline(cfg, params, keep: float, method: str):
+    batches = [{"tokens": jnp.asarray(
         data_batch(DataConfig(vocab_size=cfg.vocab_size, seq_len=128),
                    "calib", s, 4)["tokens"]),
         "labels": jnp.full((4, 128), -1, jnp.int32)} for s in range(4)]
-    stats = C.capture_calibration(cfg, params, g_batches)
-    fk, fv = C.fisher_scores(cfg, params, g_batches[:2])
-    return C.compress_model(cfg, params, stats,
-                            ReCalKVConfig(keep_ratio=keep, group_size=4),
-                            fk, fv)
+    calib = calibrate(cfg, params, batches, fisher=True)
+    spec = CompressionSpec(
+        method, rank_policy=RankPolicy(keep_ratio=keep, use_fisher=True))
+    return compress(cfg, params, spec, calib)
 
 
-def serve(cfg, params, prompts, slots, max_len, new_tokens):
-    eng = Engine(cfg, params, max_slots=slots, max_len=max_len)
+def serve_engine(eng, prompts, new_tokens):
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
     t0 = time.time()
@@ -80,29 +81,39 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--train-steps", type=int, default=200)
     ap.add_argument("--keep", type=float, default=0.5)
+    ap.add_argument("--method", default="recalkv")
+    ap.add_argument("--artifact-dir", default="experiments/serve_artifact")
     args = ap.parse_args()
 
-    print("[1/3] training the dense checkpoint ...")
+    print("[1/4] training the dense checkpoint ...")
     cfg, params, dc = build_model(args.train_steps)
-    print("[2/3] ReCalKV offline compression (Algorithm 1) ...")
-    ccfg, cparams = compress(cfg, params, args.keep)
+    print(f"[2/4] offline compression ({args.method!r}, Algorithm 1) ...")
+    artifact = compress_offline(cfg, params, args.keep, args.method)
+    print(f"[3/4] persisting artifact to {args.artifact_dir} "
+          f"(ranks {artifact.provenance['ranks_by_layer']}) ...")
+    save_artifact(artifact, args.artifact_dir)
 
     g = np.random.default_rng(0)
     prompts = [np.asarray(sequence(dc, "valid", 50 + i)[: int(g.integers(8, 32))],
                           np.int32) for i in range(args.requests)]
-    print("[3/3] serving", args.requests, "requests on both engines ...")
-    dense = serve(cfg, params, prompts, args.slots, args.max_len,
-                  args.new_tokens)
-    comp = serve(ccfg, cparams, prompts, args.slots, args.max_len,
-                 args.new_tokens)
+    print("[4/4] serving", args.requests, "requests on both engines ...")
+    dense = serve_engine(
+        Engine(cfg, params, max_slots=args.slots, max_len=args.max_len),
+        prompts, args.new_tokens)
+    # the compressed engine boots from disk — nothing in-memory crosses over
+    comp = serve_engine(
+        Engine.from_artifact(args.artifact_dir, max_slots=args.slots,
+                             max_len=args.max_len),
+        prompts, args.new_tokens)
 
     agree = np.mean([
         np.mean(np.asarray(dense["outs"][i]) == np.asarray(comp["outs"][i]))
         for i in range(args.requests)])
     print(f"\ndense   : {dense['tok_s']:6.1f} tok/s  cache {dense['cache_mb']:.2f} MiB")
-    print(f"recalkv : {comp['tok_s']:6.1f} tok/s  cache {comp['cache_mb']:.2f} MiB "
+    print(f"{args.method:8s}: {comp['tok_s']:6.1f} tok/s  cache {comp['cache_mb']:.2f} MiB "
           f"({comp['cache_mb']/dense['cache_mb']:.0%} of dense)")
     print(f"greedy agreement vs dense: {agree:.0%}")
+    print(f"artifact on disk: {os.path.abspath(args.artifact_dir)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""repro.api — the single public entry point for KV-cache compression.
+
+    from repro.api import (CompressionSpec, RankPolicy, calibrate, compress,
+                           save_artifact, load_artifact, list_strategies)
+
+Strategies are pluggable (see ``register_strategy``); compressed models
+are durable artifacts that round-trip across process boundaries and serve
+via ``repro.serving.Engine.from_artifact``.
+"""
+
+from repro.api.artifact import (
+    CompressionArtifact,
+    load_artifact,
+    save_artifact,
+)
+from repro.api.facade import calibrate, compress
+from repro.api.registry import (
+    KVCompressor,
+    get_strategy,
+    list_strategies,
+    register_strategy,
+    unregister_strategy,
+)
+from repro.api.spec import CalibrationData, CompressionSpec, RankPolicy
+from repro.api import strategies as _builtin_strategies  # registers built-ins
+
+__all__ = [
+    "CalibrationData", "CompressionArtifact", "CompressionSpec",
+    "KVCompressor", "RankPolicy", "calibrate", "compress", "get_strategy",
+    "list_strategies", "load_artifact", "register_strategy", "save_artifact",
+    "unregister_strategy",
+]

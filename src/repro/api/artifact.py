@@ -1,0 +1,92 @@
+"""Durable compression artifacts: compress once, serve forever after.
+
+An artifact bundles the compressed params, the rewritten ``ModelConfig``
+(latent-cache runtime shapes included), and provenance (method, options,
+rank policy, per-layer ranks, calibration token count).  On disk it reuses
+``checkpoint/ckpt.py``'s atomic npz+meta layout:
+
+    <path>/step_00000000/arrays.npz   # compressed params
+    <path>/step_00000000/meta.json    # model config + provenance + keys
+
+so a crashed writer never corrupts a loadable artifact, and the loader
+needs no model code to reconstruct the param tree (generic unflatten).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.models.config import ModelConfig
+
+ARTIFACT_KIND = "recalkv-compression-artifact"
+ARTIFACT_VERSION = 1
+_STEP = 0
+
+
+@dataclasses.dataclass
+class CompressionArtifact:
+    """A compressed model plus everything needed to serve and audit it."""
+
+    cfg: ModelConfig
+    params: Any
+    provenance: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def method(self) -> str:
+        return self.provenance.get("method", "unknown")
+
+    def save(self, path: str) -> None:
+        save_artifact(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "CompressionArtifact":
+        return load_artifact(path)
+
+
+def save_artifact(artifact: CompressionArtifact, path: str) -> None:
+    """Atomically persist an artifact under ``path``.
+
+    ``path`` is an artifact directory, not a training-checkpoint directory:
+    saving refuses to write next to non-artifact checkpoints (and never
+    trims other steps), so it cannot destroy a checkpoint run.
+    """
+    existing = ckpt.latest_step(path)
+    if existing is not None and (
+            existing != _STEP
+            or ckpt.read_meta(path, existing).get("kind") != ARTIFACT_KIND):
+        raise ValueError(
+            f"{path!r} already holds a non-artifact checkpoint (step "
+            f"{existing}); refusing to overwrite a training-checkpoint "
+            "directory")
+    tree = {"params": artifact.params}
+    ckpt.save(
+        path, _STEP, tree, keep_last=0,
+        extra_meta={
+            "kind": ARTIFACT_KIND,
+            "version": ARTIFACT_VERSION,
+            "model_config": artifact.cfg.to_dict(),
+            "provenance": artifact.provenance,
+            "tuple_paths": ckpt.tuple_paths(tree),
+        })
+
+
+def load_artifact(path: str) -> CompressionArtifact:
+    """Load an artifact saved by :func:`save_artifact` (any process)."""
+    step = ckpt.latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no compression artifact under {path!r}")
+    meta = ckpt.read_meta(path, step)
+    if meta.get("kind") != ARTIFACT_KIND:
+        raise ValueError(f"{path!r} is not a compression artifact "
+                         f"(kind={meta.get('kind')!r})")
+    cfg = ModelConfig.from_dict(meta["model_config"])
+    tree = ckpt.unflatten(ckpt.load_flat(path, step),
+                          seq_paths=meta.get("tuple_paths"))
+    params = jax.tree.map(jnp.asarray, tree["params"])
+    return CompressionArtifact(cfg=cfg, params=params,
+                               provenance=meta.get("provenance", {}))

@@ -1,0 +1,86 @@
+"""The two public verbs: ``calibrate`` once, ``compress`` many times.
+
+    from repro.api import CompressionSpec, RankPolicy, calibrate, compress
+
+    calib = calibrate(cfg, params, batches, fisher=True)
+    art = compress(cfg, params,
+                   CompressionSpec("recalkv",
+                                   rank_policy=RankPolicy(keep_ratio=0.5)),
+                   calib)
+    art.save("experiments/qwen3_r50")      # later: Engine.from_artifact(...)
+
+``compress`` also accepts the raw calibration batches directly (it will
+capture stats — and Fisher scores when the rank policy asks — itself) and
+a bare method name instead of a full spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import repro.models.compress as C
+from repro.api.artifact import CompressionArtifact
+from repro.api.registry import get_strategy
+from repro.api.spec import CalibrationData, CompressionSpec
+from repro.models.config import ModelConfig
+
+
+def calibrate(cfg: ModelConfig, params: Any, batches: Sequence[dict], *,
+              fisher: bool = False) -> CalibrationData:
+    """Run the calibration forward passes once and summarize them.
+
+    ``batches`` are dicts with "tokens" (and "labels" when ``fisher``,
+    which additionally captures per-layer Fisher scores for the rank
+    allocator).  The result is strategy-agnostic — capture once, reuse
+    across every ``compress`` call.
+    """
+    batches = list(batches)
+    stats = C.capture_calibration(cfg, params, batches)
+    fk, fv = C.fisher_scores(cfg, params, batches) if fisher else (None, None)
+    tokens = sum(int(b["tokens"].size) for b in batches)
+    return CalibrationData(stats=stats, fisher_k=fk, fisher_v=fv,
+                           token_count=tokens)
+
+
+def _as_spec(spec) -> CompressionSpec:
+    if isinstance(spec, CompressionSpec):
+        return spec
+    if isinstance(spec, str):
+        return CompressionSpec(method=spec)
+    raise TypeError(f"spec must be a CompressionSpec or method name, "
+                    f"got {type(spec).__name__}")
+
+
+def compress(cfg: ModelConfig, params: Any,
+             spec: CompressionSpec | str = "recalkv",
+             calib: CalibrationData | Sequence[dict] | None = None,
+             ) -> CompressionArtifact:
+    """Compress a dense checkpoint with a registered strategy.
+
+    Returns a durable :class:`CompressionArtifact`; ``artifact.cfg`` /
+    ``artifact.params`` plug into every forward/serving entry point, and
+    ``save_artifact`` persists the bundle across process boundaries.
+    """
+    spec = _as_spec(spec)
+    strategy = get_strategy(spec.method)
+    if calib is None:
+        calib = CalibrationData()
+    elif not isinstance(calib, CalibrationData):
+        calib = calibrate(cfg, params, calib,
+                          fisher=spec.rank_policy.use_fisher)
+    ccfg, cparams, info = strategy.compress(cfg, params, spec, calib)
+    provenance = {
+        "method": spec.method,
+        "spec": spec.to_dict(),
+        "calib_tokens": calib.token_count,
+        "fisher": calib.fisher_k is not None and spec.rank_policy.use_fisher,
+        **info,
+    }
+    if ccfg.recalkv is not None:
+        provenance["group_size"] = ccfg.recalkv.group_size
+        provenance["ranks_by_layer"] = (
+            None if ccfg.recalkv.ranks_by_layer is None
+            else [list(r) for r in ccfg.recalkv.ranks_by_layer])
+    return CompressionArtifact(cfg=ccfg, params=cparams,
+                               provenance=provenance)

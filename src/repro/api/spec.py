@@ -1,0 +1,92 @@
+"""Declarative compression specs — the public configuration surface.
+
+A compression run is described by a :class:`CompressionSpec`:
+
+  method       registry key of a :class:`~repro.api.registry.KVCompressor`
+  options      method-specific knobs (override the strategy's defaults)
+  rank_policy  how latent ranks are chosen (shared by every SVD-family
+               strategy; the old ``ReCalKVConfig`` rank fields live here)
+
+``ReCalKVConfig`` is no longer part of the public API — it is the internal
+options object of the SVD-family strategies (see ``repro/api/strategies.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+from repro.core import pipeline as P
+from repro.core import svd as _svd
+
+
+@dataclasses.dataclass(frozen=True)
+class RankPolicy:
+    """How per-layer latent ranks are allocated.
+
+    ``keep_ratio`` is the *kept* fraction of KV-cache bytes (the paper's
+    "50% compression" is ``keep_ratio=0.5``).  ``use_fisher`` enables the
+    Fisher-guided water-filling allocation across layers; otherwise every
+    layer gets the uniform rank for its group width.
+    """
+
+    keep_ratio: float = 0.5
+    group_size: int = 4
+    rank_multiple: int = 8
+    min_rank: int = 8
+    use_fisher: bool = False
+    alpha: float = 0.5
+    rho_min: float = 0.0625
+    rho_max: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.keep_ratio <= 1.0:
+            raise ValueError(f"keep_ratio must be in (0, 1], got {self.keep_ratio}")
+        if self.group_size < 1:
+            raise ValueError("group_size must be >= 1")
+
+    def rank_for_width(self, width: int) -> int:
+        """Uniform rank for a latent group of ``width`` columns."""
+        return _svd.effective_rank_for_ratio(
+            width, self.keep_ratio, self.rank_multiple, self.min_rank
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """A complete, serializable description of one compression run."""
+
+    method: str = "recalkv"
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    rank_policy: RankPolicy = dataclasses.field(default_factory=RankPolicy)
+
+    def to_dict(self) -> dict:
+        return {
+            "method": self.method,
+            "options": dict(self.options),
+            "rank_policy": dataclasses.asdict(self.rank_policy),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "CompressionSpec":
+        return cls(
+            method=d["method"],
+            options=dict(d.get("options", {})),
+            rank_policy=RankPolicy(**d.get("rank_policy", {})),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationData:
+    """Captured calibration state, reusable across strategies.
+
+    ``stats`` holds one second-moment summary per self-attention layer;
+    ``fisher_k``/``fisher_v`` are optional per-layer Fisher scores for the
+    rank allocator.  Capture once with :func:`repro.api.calibrate` and feed
+    to any number of ``compress`` calls.
+    """
+
+    stats: Sequence[P.CalibStats] | None = None
+    fisher_k: Sequence[float] | None = None
+    fisher_v: Sequence[float] | None = None
+    token_count: int = 0

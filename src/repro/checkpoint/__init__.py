@@ -1,3 +1,12 @@
-from repro.checkpoint.ckpt import latest_step, restore, save
+from repro.checkpoint.ckpt import (
+    latest_step,
+    load_flat,
+    read_meta,
+    restore,
+    save,
+    tuple_paths,
+    unflatten,
+)
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["latest_step", "load_flat", "read_meta", "restore", "save",
+           "tuple_paths", "unflatten"]

@@ -37,9 +37,12 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 
 def save(directory: str, step: int, tree, *, keep_last: int = 3,
-         async_: bool = False) -> threading.Thread | None:
+         async_: bool = False,
+         extra_meta: dict | None = None) -> threading.Thread | None:
     """Write ``tree`` under <directory>/step_<step>.  Returns the writer
-    thread when async (join it to guarantee durability)."""
+    thread when async (join it to guarantee durability).  ``extra_meta``
+    is merged into meta.json (artifact provenance, model config, ...) and
+    rides inside the same atomic os.replace."""
     os.makedirs(directory, exist_ok=True)
     host = _flatten(jax.tree.map(lambda x: np.asarray(x), tree))
 
@@ -49,7 +52,8 @@ def save(directory: str, step: int, tree, *, keep_last: int = 3,
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, "arrays.npz"), **host)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, "keys": sorted(host)}, f)
+            json.dump({**(extra_meta or {}), "step": step,
+                       "keys": sorted(host)}, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -78,6 +82,73 @@ def latest_step(directory: str) -> int | None:
              if d.startswith("step_") and not d.endswith(".tmp")
              and os.path.exists(os.path.join(directory, d, "meta.json"))]
     return max(steps) if steps else None
+
+
+def read_meta(directory: str, step: int) -> dict:
+    """Load a checkpoint's meta.json (step, keys, and any extra_meta)."""
+    with open(os.path.join(directory, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)
+
+
+def load_flat(directory: str, step: int) -> dict[str, np.ndarray]:
+    """Load the raw 'path/to/leaf' -> array mapping of one checkpoint."""
+    path = os.path.join(directory, f"step_{step:08d}", "arrays.npz")
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}
+
+
+def tuple_paths(tree) -> list[str]:
+    """'/'-joined paths of every sequence container in ``tree`` — stored in
+    meta so unflatten() can rebuild containers exactly (a dict keyed by
+    digit strings is otherwise indistinguishable from a tuple on disk)."""
+    out: list[str] = []
+
+    def walk(node, prefix):
+        if isinstance(node, (tuple, list)):
+            out.append("/".join(prefix))
+            for i, v in enumerate(node):
+                walk(v, prefix + (str(i),))
+        elif isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, prefix + (str(k),))
+
+    walk(tree, ())
+    return out
+
+
+def unflatten(flat: dict[str, np.ndarray], seq_paths: list[str] | None = None):
+    """Rebuild a pytree from the '/'-joined keys save() writes — without a
+    target tree, so a reader process needs no model code to know shapes.
+
+    ``seq_paths`` (from :func:`tuple_paths` at save time) says exactly which
+    containers are tuples; without it, containers whose keys are exactly
+    0..n-1 become tuples (matching the tuple-of-blocks param layout) and
+    everything else becomes a dict.
+    """
+    root: dict = {}
+    for key, arr in flat.items():
+        node = root
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    seq_set = None if seq_paths is None else set(seq_paths)
+
+    def _finalize(node, prefix):
+        if not isinstance(node, dict):
+            return node
+        out = {k: _finalize(v, prefix + (k,)) for k, v in node.items()}
+        if seq_set is not None:
+            if "/".join(prefix) not in seq_set:
+                return out
+        elif not (out and all(k.isdigit() for k in out)):
+            return out
+        idx = sorted(out, key=int)
+        if [int(k) for k in idx] == list(range(len(idx))):
+            return tuple(out[k] for k in idx)
+        return out
+
+    return _finalize(root, ())
 
 
 def restore(directory: str, step: int, target_tree,

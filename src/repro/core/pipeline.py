@@ -58,6 +58,12 @@ class ReCalKVConfig:
     def effective_group_size(self, num_kv_heads: int) -> int:
         return max(1, min(self.group_size, num_kv_heads))
 
+    def rank_for_width(self, width: int) -> int:
+        """Uniform rank for a ``width``-column group honoring the full rank
+        policy (keep ratio, tiling multiple, floor)."""
+        return _svd.effective_rank_for_ratio(
+            width, self.keep_ratio, self.rank_multiple, self.min_rank)
+
 
 @dataclasses.dataclass(frozen=True)
 class AttnWeights:
@@ -214,9 +220,7 @@ def allocate_layer_ranks(
 ) -> tuple[list[int], list[int]]:
     """Fisher-guided per-layer rank allocation for K and V (Algorithm 1 l.4-5)."""
     if not cfg.use_fisher or fisher_k is None or fisher_v is None:
-        r = _svd.effective_rank_for_ratio(
-            group_width, cfg.keep_ratio, cfg.rank_multiple, cfg.min_rank
-        )
+        r = cfg.rank_for_width(group_width)
         return [r] * num_layers, [r] * num_layers
     kw = dict(alpha=cfg.alpha, rho_min=cfg.rho_min, rho_max=cfg.rho_max,
               multiple=cfg.rank_multiple, min_rank=cfg.min_rank)

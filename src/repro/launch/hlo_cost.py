@@ -59,7 +59,7 @@ _COMP_HEAD_RE = re.compile(
     r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")

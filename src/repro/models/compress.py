@@ -154,8 +154,7 @@ def compress_model(
         )
         s = recal_cfg.effective_group_size(cfg.num_kv_heads)
         width = s * cfg.d_head
-        rk = compressed[0].rank_k if compressed else P._svd.effective_rank_for_ratio(
-            width, recal_cfg.keep_ratio)
+        rk = compressed[0].rank_k if compressed else recal_cfg.rank_for_width(width)
         ca = P.compress_attention_layer(
             w, P.CalibStats.identity(d), recal_cfg, rk, rk)
         blk["cross"] = _to_latent_params(a, ca, cfg.dtype)

@@ -91,6 +91,12 @@ class ReCalKVRuntime:
         return self.rank_k, self.rank_v
 
 
+_NESTED_CONFIGS = {"moe": MoEConfig, "mla": MLAConfig, "mamba": MambaConfig,
+                   "rglru": RGLRUConfig}
+_DTYPES_BY_NAME = {"bfloat16": jnp.bfloat16, "float16": jnp.float16,
+                   "float32": jnp.float32}
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
@@ -246,6 +252,32 @@ class ModelConfig:
                 + self.num_heads * a.v_head_dim * d
             )
         return d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+
+    # ---- serialization (compression artifacts) -----------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form (dtype by name; tuples become lists on
+        dump and are restored by :meth:`from_dict`)."""
+        d = dataclasses.asdict(self)
+        d["dtype"] = jnp.dtype(self.dtype).name
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ModelConfig":
+        d = dict(d)
+        d["dtype"] = _DTYPES_BY_NAME.get(d["dtype"]) or jnp.dtype(d["dtype"])
+        for key, sub in _NESTED_CONFIGS.items():
+            if d.get(key) is not None:
+                d[key] = sub(**d[key])
+        if d.get("recalkv") is not None:
+            rt = dict(d["recalkv"])
+            if rt.get("ranks_by_layer") is not None:
+                rt["ranks_by_layer"] = tuple(
+                    (int(rk), int(rv)) for rk, rv in rt["ranks_by_layer"])
+            d["recalkv"] = ReCalKVRuntime(**rt)
+        for key in ("layer_pattern", "prefix_pattern"):
+            d[key] = tuple(d[key])
+        return cls(**d)
 
     def _block_params(self, kind: str, active_only: bool = False) -> int:
         d = self.d_model

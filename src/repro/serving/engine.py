@@ -71,6 +71,17 @@ class Engine:
                                       else source[: t.shape[0]]),
             static_argnames=())
 
+    @classmethod
+    def from_artifact(cls, path: str, *, max_slots: int, max_len: int,
+                      source: jax.Array | None = None) -> "Engine":
+        """Boot an engine straight from a saved compression artifact —
+        the compress-offline / serve-forever workflow across processes."""
+        from repro.api import load_artifact  # local: api imports models too
+
+        art = load_artifact(path)
+        return cls(art.cfg, art.params, max_slots=max_slots, max_len=max_len,
+                   source=source)
+
     # -- admission ----------------------------------------------------------
 
     def submit(self, req: Request):

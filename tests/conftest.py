@@ -8,7 +8,3 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
-
-
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,281 @@
+"""repro.api surface: registry, specs, strategies, durable artifacts."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    CalibrationData,
+    CompressionArtifact,
+    CompressionSpec,
+    RankPolicy,
+    calibrate,
+    compress,
+    get_strategy,
+    list_strategies,
+    load_artifact,
+    register_strategy,
+    save_artifact,
+    unregister_strategy,
+)
+from repro.configs import get_config
+from repro.core import ReCalKVConfig
+from repro.models import transformer as T
+from repro.serving import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = dataclasses.replace(get_config("qwen3-4b", smoke=True),
+                              dtype=jnp.float32, scan_layers=False)
+    return cfg, T.init_params(cfg, KEY)
+
+
+@pytest.fixture(scope="module")
+def calib_batches(dense_model):
+    cfg, _ = dense_model
+    g = np.random.default_rng(0)
+    return [{"tokens": jnp.asarray(g.integers(0, cfg.vocab_size, (2, 32))),
+             "labels": jnp.asarray(g.integers(0, cfg.vocab_size, (2, 32)))}
+            for _ in range(2)]
+
+
+@pytest.fixture(scope="module")
+def calib(dense_model, calib_batches):
+    cfg, params = dense_model
+    return calibrate(cfg, params, calib_batches, fisher=True)
+
+
+class TestRegistry:
+    def test_builtin_strategies_present(self):
+        names = list_strategies()
+        assert len(names) >= 4
+        for required in ("recalkv", "grouped-svd", "whitened-svd",
+                         "quantized-latent"):
+            assert required in names
+
+    def test_get_unknown_raises(self):
+        with pytest.raises(KeyError, match="unknown compression strategy"):
+            get_strategy("nope")
+
+    def test_register_custom_strategy(self, dense_model, calib):
+        cfg, params = dense_model
+
+        class Passthrough:
+            name = "passthrough-test"
+
+            def compress(self, cfg, params, spec, calib):
+                return cfg, params, {"custom": True}
+
+        register_strategy(Passthrough)
+        try:
+            assert "passthrough-test" in list_strategies()
+            with pytest.raises(ValueError, match="already registered"):
+                register_strategy(Passthrough)
+            art = compress(cfg, params, "passthrough-test", calib)
+            assert art.provenance["custom"] is True
+            assert art.cfg is cfg
+        finally:
+            unregister_strategy("passthrough-test")
+        assert "passthrough-test" not in list_strategies()
+
+    def test_unknown_option_rejected(self, dense_model, calib):
+        cfg, params = dense_model
+        with pytest.raises(ValueError, match="unknown options"):
+            compress(cfg, params,
+                     CompressionSpec("recalkv", options={"bogus": 1}), calib)
+
+    def test_data_aware_strategy_needs_calibration(self, dense_model):
+        cfg, params = dense_model
+        with pytest.raises(ValueError, match="calibration"):
+            compress(cfg, params, "whitened-svd")
+
+
+class TestSpec:
+    def test_rank_policy_honors_multiple_and_floor(self):
+        pol = RankPolicy(keep_ratio=0.5, rank_multiple=16, min_rank=16)
+        assert pol.rank_for_width(64) == 32
+        assert pol.rank_for_width(40) == 16     # rounded to the multiple
+        assert RankPolicy(keep_ratio=0.07, min_rank=24).rank_for_width(64) == 24
+
+    def test_recalkv_config_rank_for_width_matches_policy(self):
+        # the internal config and the public policy share the rank rule,
+        # including multiple/floor (cross-attention fallback fix)
+        rc = ReCalKVConfig(keep_ratio=0.4, rank_multiple=4, min_rank=12)
+        pol = RankPolicy(keep_ratio=0.4, rank_multiple=4, min_rank=12)
+        for width in (32, 48, 64, 100):
+            assert rc.rank_for_width(width) == pol.rank_for_width(width)
+
+    def test_cross_attention_fallback_honors_rank_policy(self):
+        """A cross-attention-only model hits compress_model's fallback rank
+        path, which must respect rank_multiple/min_rank (it used to call
+        the rank helper with defaults)."""
+        import repro.models.compress as C
+        from repro.models.config import ModelConfig
+
+        cfg = ModelConfig(
+            name="cross-only", family="vlm", num_layers=2, d_model=64,
+            num_heads=4, num_kv_heads=4, d_head=16, d_ff=128, vocab_size=64,
+            layer_pattern=("cross",), cross_source_len=8,
+            dtype=jnp.float32, scan_layers=False, remat=False)
+        params = T.init_params(cfg, KEY)
+        rc = ReCalKVConfig(keep_ratio=0.1, group_size=2, rank_multiple=8,
+                           min_rank=12, use_fisher=False)
+        _, cparams = C.compress_model(cfg, params, [], rc)
+        # width 32 at keep 0.1 rounds to 0; the floor must lift it to 12
+        assert cparams["prefix"][0]["cross"]["l_k"].shape[-1] == 12
+
+    def test_spec_round_trips_through_dict(self):
+        spec = CompressionSpec("quantized-latent",
+                               options={"base": "grouped-svd", "bits": 4},
+                               rank_policy=RankPolicy(keep_ratio=0.3))
+        assert CompressionSpec.from_dict(spec.to_dict()) == spec
+
+    def test_invalid_keep_ratio_rejected(self):
+        with pytest.raises(ValueError, match="keep_ratio"):
+            RankPolicy(keep_ratio=0.0)
+
+
+class TestStrategies:
+    def test_grouped_svd_needs_no_calibration(self, dense_model):
+        cfg, params = dense_model
+        art = compress(cfg, params, CompressionSpec(
+            "grouped-svd", rank_policy=RankPolicy(keep_ratio=0.5)))
+        assert art.cfg.recalkv is not None
+        assert art.provenance["calib_tokens"] == 0
+
+    def test_fisher_allocation_varies_ranks(self, dense_model, calib):
+        cfg, params = dense_model
+        art = compress(cfg, params, CompressionSpec(
+            "recalkv", rank_policy=RankPolicy(keep_ratio=0.5, use_fisher=True)),
+            calib)
+        ranks = art.provenance["ranks_by_layer"]
+        assert len(ranks) == cfg.num_layers
+        assert art.provenance["fisher"] is True
+
+    def test_quantized_latent_composes(self, dense_model, calib):
+        cfg, params = dense_model
+        pol = RankPolicy(keep_ratio=0.5)
+        base = compress(cfg, params,
+                        CompressionSpec("recalkv", rank_policy=pol), calib)
+        for hadamard in (False, True):
+            art = compress(cfg, params, CompressionSpec(
+                "quantized-latent",
+                options={"base": "recalkv", "bits": 8, "hadamard": hadamard},
+                rank_policy=pol), calib)
+            assert art.provenance["base"] == "recalkv"
+            assert art.provenance["bits"] == 8
+            # same latent geometry as the base strategy
+            assert art.cfg.recalkv == base.cfg.recalkv
+            # 8-bit factor quantization stays close to the fp base model
+            toks = jnp.asarray(np.arange(24).reshape(2, 12) % cfg.vocab_size)
+            l_fp = T.logits_for(base.cfg, base.params,
+                                T.forward_hidden(base.cfg, base.params, toks)[0])
+            l_q = T.logits_for(art.cfg, art.params,
+                               T.forward_hidden(art.cfg, art.params, toks)[0])
+            assert bool(jnp.all(jnp.isfinite(l_q)))
+            agree = float(jnp.mean(
+                (jnp.argmax(l_fp, -1) == jnp.argmax(l_q, -1))))
+            assert agree >= 0.9, f"hadamard={hadamard}: agreement {agree}"
+
+    def test_quantized_latent_rejects_self_wrap(self, dense_model, calib):
+        cfg, params = dense_model
+        with pytest.raises(ValueError, match="cannot wrap itself"):
+            compress(cfg, params, CompressionSpec(
+                "quantized-latent", options={"base": "quantized-latent"}),
+                calib)
+
+
+class TestArtifactRoundTrip:
+    def test_save_load_bitwise_logits(self, dense_model, calib, tmp_path):
+        cfg, params = dense_model
+        art = compress(cfg, params, CompressionSpec(
+            "recalkv", rank_policy=RankPolicy(keep_ratio=0.5)), calib)
+        save_artifact(art, str(tmp_path / "art"))
+        loaded = load_artifact(str(tmp_path / "art"))
+
+        assert isinstance(loaded, CompressionArtifact)
+        assert loaded.cfg == art.cfg
+        assert loaded.method == "recalkv"
+        assert loaded.provenance["calib_tokens"] == calib.token_count
+
+        toks = jnp.asarray(np.arange(32).reshape(2, 16) % cfg.vocab_size)
+        l_mem = T.logits_for(art.cfg, art.params,
+                             T.forward_hidden(art.cfg, art.params, toks)[0])
+        l_disk = T.logits_for(loaded.cfg, loaded.params,
+                              T.forward_hidden(loaded.cfg, loaded.params,
+                                               toks)[0])
+        np.testing.assert_array_equal(np.asarray(l_mem), np.asarray(l_disk))
+
+    def test_engine_from_artifact_matches_in_memory(self, dense_model, calib,
+                                                    tmp_path):
+        cfg, params = dense_model
+        art = compress(cfg, params, CompressionSpec(
+            "recalkv", rank_policy=RankPolicy(keep_ratio=0.5)), calib)
+        save_artifact(art, str(tmp_path / "art"))
+
+        g = np.random.default_rng(3)
+        prompts = [g.integers(0, cfg.vocab_size, 5 + i).astype(np.int32)
+                   for i in range(3)]
+
+        def serve(eng):
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=p.copy(), max_new_tokens=4))
+            return {r.uid: r.out_tokens for r in eng.run()}
+
+        mem = serve(Engine(art.cfg, art.params, max_slots=2, max_len=48))
+        disk = serve(Engine.from_artifact(str(tmp_path / "art"),
+                                          max_slots=2, max_len=48))
+        assert mem == disk
+
+    def test_load_missing_and_wrong_kind(self, tmp_path, dense_model):
+        with pytest.raises(FileNotFoundError):
+            load_artifact(str(tmp_path / "absent"))
+        # a plain training checkpoint is not an artifact
+        from repro import checkpoint as ckpt
+        ckpt.save(str(tmp_path / "plain"), 0, {"x": jnp.zeros((2,))})
+        with pytest.raises(ValueError, match="not a compression artifact"):
+            load_artifact(str(tmp_path / "plain"))
+
+    def test_save_refuses_training_checkpoint_dir(self, tmp_path, dense_model,
+                                                  calib):
+        """save_artifact must never trim or overwrite a checkpoint run."""
+        from repro import checkpoint as ckpt
+        cfg, params = dense_model
+        art = compress(cfg, params, CompressionSpec(
+            "grouped-svd", rank_policy=RankPolicy(keep_ratio=0.5)))
+        ckpt.save(str(tmp_path / "run"), 100, {"x": jnp.zeros((2,))})
+        with pytest.raises(ValueError, match="refusing to overwrite"):
+            save_artifact(art, str(tmp_path / "run"))
+        assert ckpt.latest_step(str(tmp_path / "run")) == 100
+        ckpt.save(str(tmp_path / "run0"), 0, {"x": jnp.zeros((2,))})
+        with pytest.raises(ValueError, match="refusing to overwrite"):
+            save_artifact(art, str(tmp_path / "run0"))
+        # re-saving over an existing artifact is fine
+        save_artifact(art, str(tmp_path / "art"))
+        save_artifact(art, str(tmp_path / "art"))
+        assert load_artifact(str(tmp_path / "art")).method == "grouped-svd"
+
+    def test_fisher_policy_without_fisher_data_raises(self, dense_model,
+                                                      calib_batches):
+        cfg, params = dense_model
+        no_fisher = calibrate(cfg, params, calib_batches, fisher=False)
+        with pytest.raises(ValueError, match="no Fisher scores"):
+            compress(cfg, params, CompressionSpec(
+                "recalkv", rank_policy=RankPolicy(use_fisher=True)),
+                no_fisher)
+
+    def test_artifact_preserves_per_layer_ranks(self, dense_model, calib,
+                                                tmp_path):
+        cfg, params = dense_model
+        art = compress(cfg, params, CompressionSpec(
+            "recalkv", rank_policy=RankPolicy(keep_ratio=0.5, use_fisher=True)),
+            calib)
+        save_artifact(art, str(tmp_path / "art"))
+        loaded = load_artifact(str(tmp_path / "art"))
+        assert loaded.cfg.recalkv.ranks_by_layer == art.cfg.recalkv.ranks_by_layer

@@ -123,10 +123,10 @@ class TestCompressionQualityIntegration:
     @pytest.mark.slow
     def test_recalkv_beats_plain_svd_after_training(self, tmp_path):
         """Train a tiny model on copy-heavy data, compress with (a) plain
-        grouped SVD (Palu baseline) and (b) ReCalKV; ReCalKV must give
-        lower held-out loss — the paper's Table-1 ordering at unit scale."""
-        import repro.models.compress as C
-        from repro.core import ReCalKVConfig
+        grouped SVD (Palu baseline) and (b) ReCalKV — both as registry
+        strategies; ReCalKV must give lower held-out loss — the paper's
+        Table-1 ordering at unit scale."""
+        from repro.api import CompressionSpec, RankPolicy, calibrate, compress
 
         cfg = dataclasses.replace(
             tiny_cfg(), num_layers=2, scan_layers=False, remat=False)
@@ -140,10 +140,10 @@ class TestCompressionQualityIntegration:
         out = train_loop(cfg, opt, tc, batch_fn, logger=lambda *_: None)
         params = out["params"]
 
-        calib = [
+        batches = [
             {k: jnp.asarray(v) for k, v in data_batch(dc, "calib", s, 4).items()}
             for s in range(4)]
-        stats = C.capture_calibration(cfg, params, calib)
+        calib = calibrate(cfg, params, batches)
 
         def eval_loss(cfg2, params2):
             tot = 0.0
@@ -154,15 +154,12 @@ class TestCompressionQualityIntegration:
             return tot / 4
 
         losses = {}
-        for name, rc in {
-            "palu": ReCalKVConfig(keep_ratio=0.4, group_size=2, use_hsr=False,
-                                  use_calibration=False, use_whitening=False,
-                                  use_fisher=False),
-            "recalkv": ReCalKVConfig(keep_ratio=0.4, group_size=2,
-                                     use_fisher=False),
-        }.items():
-            ccfg, cparams = C.compress_model(cfg, params, stats, rc)
-            losses[name] = eval_loss(ccfg, cparams)
+        policy = RankPolicy(keep_ratio=0.4, group_size=2)
+        for name, method in {"palu": "grouped-svd",
+                             "recalkv": "recalkv"}.items():
+            art = compress(cfg, params,
+                           CompressionSpec(method, rank_policy=policy), calib)
+            losses[name] = eval_loss(art.cfg, art.params)
         base = eval_loss(cfg, params)
         assert losses["recalkv"] <= losses["palu"] + 1e-4
         assert losses["recalkv"] < base + 1.0  # sane degradation

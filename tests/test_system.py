@@ -1,8 +1,9 @@
 """End-to-end system behaviour: train -> calibrate -> compress -> serve.
 
-The full paper workflow on a unit-scale model: Algorithm 1 consumes a
-trained dense checkpoint and emits a latent-cache model that (a) serves
-through the same engine, (b) halves resident cache bytes, and (c) keeps
+The full paper workflow on a unit-scale model, driven through the public
+``repro.api`` surface: Algorithm 1 consumes a trained dense checkpoint and
+emits a durable artifact whose latent-cache model (a) serves through the
+engine straight from disk, (b) halves resident cache bytes, and (c) keeps
 held-out quality close to dense.
 """
 
@@ -13,9 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.models.compress as C
+from repro.api import (CompressionSpec, RankPolicy, calibrate, compress,
+                       save_artifact)
 from repro.configs import get_config
-from repro.core import ReCalKVConfig
 from repro.data import DataConfig, batch as data_batch
 from repro.models import transformer as T
 from repro.optim import AdamWConfig
@@ -40,16 +41,21 @@ def trained():
 
 
 @pytest.mark.slow
-def test_full_workflow(trained):
+def test_full_workflow(trained, tmp_path):
     cfg, params, dc = trained
-    calib = [{k: jnp.asarray(v) for k, v in data_batch(dc, "calib", s, 4).items()}
-             for s in range(3)]
-    stats = C.capture_calibration(cfg, params, calib)
-    fk, fv = C.fisher_scores(cfg, params, calib[:2])
-    assert len(fk) == cfg.num_layers and all(f > 0 for f in fk)
+    batches = [{k: jnp.asarray(v) for k, v in data_batch(dc, "calib", s, 4).items()}
+               for s in range(3)]
+    calib = calibrate(cfg, params, batches, fisher=True)
+    assert len(calib.fisher_k) == cfg.num_layers
+    assert all(f > 0 for f in calib.fisher_k)
 
-    rc = ReCalKVConfig(keep_ratio=0.5, group_size=4)
-    ccfg, cparams = C.compress_model(cfg, params, stats, rc, fk, fv)
+    spec = CompressionSpec(
+        "recalkv",
+        rank_policy=RankPolicy(keep_ratio=0.5, group_size=4, use_fisher=True))
+    art = compress(cfg, params, spec, calib)
+    ccfg, cparams = art.cfg, art.params
+    assert art.provenance["calib_tokens"] == sum(
+        int(b["tokens"].size) for b in batches)
 
     # (b) resident cache halves
     dense_cache = T.init_decode_cache(cfg, 2, 64)
@@ -64,9 +70,11 @@ def test_full_workflow(trained):
     l_dense, l_comp = eval_loss(cfg, params), eval_loss(ccfg, cparams)
     assert l_comp < l_dense + 0.5, (l_dense, l_comp)
 
-    # (a) serves through the same engine
+    # (a) serves through the engine, booting from the persisted artifact
+    save_artifact(art, str(tmp_path / "artifact"))
     g = np.random.default_rng(0)
-    eng = Engine(ccfg, cparams, max_slots=2, max_len=64)
+    eng = Engine.from_artifact(str(tmp_path / "artifact"),
+                               max_slots=2, max_len=64)
     for i in range(3):
         eng.submit(Request(
             uid=i, prompt=g.integers(0, ccfg.vocab_size, 6).astype(np.int32),
@@ -80,11 +88,12 @@ def test_compressed_greedy_continuations_track_dense(trained):
     """At 75% kept rank the compressed model's greedy continuations should
     mostly agree with the dense model (sanity on real information flow)."""
     cfg, params, dc = trained
-    calib = [{k: jnp.asarray(v) for k, v in data_batch(dc, "calib", s, 4).items()}
-             for s in range(2)]
-    stats = C.capture_calibration(cfg, params, calib)
-    rc = ReCalKVConfig(keep_ratio=0.75, group_size=4, use_fisher=False)
-    ccfg, cparams = C.compress_model(cfg, params, stats, rc)
+    batches = [{k: jnp.asarray(v) for k, v in data_batch(dc, "calib", s, 4).items()}
+               for s in range(2)]
+    art = compress(cfg, params, CompressionSpec(
+        "recalkv", rank_policy=RankPolicy(keep_ratio=0.75, group_size=4)),
+        batches)
+    ccfg, cparams = art.cfg, art.params
 
     g = np.random.default_rng(1)
     toks = jnp.asarray(g.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)
