@@ -22,26 +22,42 @@ from repro.models import transformer as T
 
 
 def decode_bench(arch="qwen3-4b", S=256, B=4):
+    """Full decode_step timings: cache variant x attention backend.
+
+    On CPU the pallas column runs the kernels in interpret mode (a
+    correctness trace, not a speed claim — the einsum/pallas pair tracks
+    the hot path's perf trajectory once a TPU runs the same rows)."""
     rows = []
     timings = {}
-    for tag, kw in {"dense": {}, "recalkv": {"recalkv_ratio": 0.5}}.items():
-        cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
-                                  dtype=jnp.float32)
-        params = T.init_params(cfg, jax.random.PRNGKey(0))
-        cache = T.init_decode_cache(cfg, B, S)
-        toks = jnp.zeros((B,), jnp.int32)
-        cur = jnp.full((B,), S - 1, jnp.int32)
-        step = jax.jit(lambda p, c, t, u: T.decode_step(cfg, p, c, t, u))
-        us = common.timed(lambda: step(params, cache, toks, cur), repeats=5)
-        cache_bytes = sum(l.size * l.dtype.itemsize
-                          for l in jax.tree.leaves(cache))
-        timings[tag] = us
-        rows.append({"name": f"kernel/decode_step/{tag}",
-                     "us_per_call": us,
-                     "derived": f"cache_bytes={cache_bytes}"})
-    rows.append({"name": "kernel/decode_step/latent_vs_dense_ratio",
-                 "us_per_call": 0,
-                 "derived": f"{timings['recalkv'] / timings['dense']:.3f}"})
+    variants = {"dense": ({}, {}),
+                "recalkv": ({"recalkv_ratio": 0.5}, {}),
+                "recalkv_int8": ({"recalkv_ratio": 0.5},
+                                 {"cache_quant_bits": 8})}
+    for tag, (kw, extra) in variants.items():
+        for backend in ("einsum", "pallas"):
+            cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
+                                      dtype=jnp.float32,
+                                      attn_backend=backend, **extra)
+            params = T.init_params(cfg, jax.random.PRNGKey(0))
+            cache = T.init_decode_cache(cfg, B, S)
+            toks = jnp.zeros((B,), jnp.int32)
+            cur = jnp.full((B,), S - 1, jnp.int32)
+            step = jax.jit(lambda p, c, t, u: T.decode_step(cfg, p, c, t, u))
+            us = common.timed(lambda: step(params, cache, toks, cur), repeats=5)
+            cache_bytes = sum(l.size * l.dtype.itemsize
+                              for l in jax.tree.leaves(cache))
+            timings[tag, backend] = us
+            rows.append({"name": f"kernel/decode_step/{tag}/{backend}",
+                         "us_per_call": us,
+                         "derived": f"cache_bytes={cache_bytes}"})
+        rows.append({
+            "name": f"kernel/decode_step/{tag}/pallas_vs_einsum_ratio",
+            "us_per_call": 0,
+            "derived": f"{timings[tag, 'pallas'] / timings[tag, 'einsum']:.3f}"})
+    rows.append({
+        "name": "kernel/decode_step/latent_vs_dense_ratio",
+        "us_per_call": 0,
+        "derived": (f"{timings['recalkv', 'einsum'] / timings['dense', 'einsum']:.3f}")})
     return rows
 
 

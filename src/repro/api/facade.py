@@ -70,6 +70,8 @@ def compress(cfg: ModelConfig, params: Any,
         calib = calibrate(cfg, params, calib,
                           fisher=spec.rank_policy.use_fisher)
     ccfg, cparams, info = strategy.compress(cfg, params, spec, calib)
+    if spec.backend is not None:
+        ccfg = dataclasses.replace(ccfg, attn_backend=spec.backend)
     provenance = {
         "method": spec.method,
         "spec": spec.to_dict(),

@@ -54,17 +54,26 @@ class RankPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class CompressionSpec:
-    """A complete, serializable description of one compression run."""
+    """A complete, serializable description of one compression run.
+
+    ``backend`` (when set) selects the attention backend of the produced
+    model config — ``"einsum"`` reference or ``"pallas"`` kernels (see
+    ``ModelConfig.attn_backend``); ``None`` keeps the source config's
+    choice.  It is recorded in the artifact, so ``Engine.from_artifact``
+    serves through the chosen backend without re-plumbing.
+    """
 
     method: str = "recalkv"
     options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     rank_policy: RankPolicy = dataclasses.field(default_factory=RankPolicy)
+    backend: str | None = None
 
     def to_dict(self) -> dict:
         return {
             "method": self.method,
             "options": dict(self.options),
             "rank_policy": dataclasses.asdict(self.rank_policy),
+            "backend": self.backend,
         }
 
     @classmethod
@@ -73,6 +82,7 @@ class CompressionSpec:
             method=d["method"],
             options=dict(d.get("options", {})),
             rank_policy=RankPolicy(**d.get("rank_policy", {})),
+            backend=d.get("backend"),
         )
 
 

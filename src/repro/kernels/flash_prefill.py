@@ -81,20 +81,35 @@ def flash_prefill_attention(q, k, v, *, causal: bool = True,
                             window: int | None = None, scale: float | None = None,
                             block_q: int = 256, block_k: int = 256,
                             interpret: bool = False):
-    """q: (B, T, H, dh); k/v: (B, T, Hkv, d).  Returns (B, T, H, dv)."""
+    """q: (B, T, H, dh); k: (B, T, Hkv, dh); v: (B, T, Hv, dv).
+
+    Returns (B, T, H, dv).  ``Hv`` may differ from ``Hkv`` (latent values:
+    one value group per ``Hkv // Hv`` kv heads — the query-head order is
+    kv-major, so group = h // (H // Hv)).  Arbitrary T: the tail tile is
+    zero-padded internally and masked via ``seq_len``.
+    """
     B, T, H, dh = q.shape
     Hkv, dv = k.shape[2], v.shape[3]
+    Hv = v.shape[2]
     qpk = H // Hkv
+    qpv = H // Hv
     scale = scale if scale is not None else dh ** -0.5
-    bq, bk = min(block_q, T), min(block_k, T)
-    if T % bq or T % bk:
-        raise ValueError(f"T={T} must divide block sizes ({bq}, {bk})")
-    n_q, n_k = T // bq, T // bk
+    # Floor tile sizes to powers of two so they nest: the padded length is
+    # then a single max-tile multiple instead of an lcm that can balloon
+    # (e.g. blocks 100/64 -> lcm 1600 for a 100-token sequence).
+    bq = 1 << (min(block_q, T).bit_length() - 1)
+    bk = 1 << (min(block_k, T).bit_length() - 1)
+    tile = max(bq, bk)
+    Tp = -(-T // tile) * tile              # multiple of both tile sizes
+    if Tp != T:
+        pad = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    n_q, n_k = Tp // bq, Tp // bk
 
     kernel = functools.partial(
         _kernel, scale=scale, causal=causal, window=window,
         block_q=bq, block_k=bk, n_k=n_k, seq_len=T)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=(B, H, n_q, n_k),
         in_specs=[
@@ -102,10 +117,10 @@ def flash_prefill_attention(q, k, v, *, causal: bool = True,
             pl.BlockSpec((1, bk, 1, dh),
                          lambda b, h, iq, ik, qpk=qpk: (b, ik, h // qpk, 0)),
             pl.BlockSpec((1, bk, 1, dv),
-                         lambda b, h, iq, ik, qpk=qpk: (b, ik, h // qpk, 0)),
+                         lambda b, h, iq, ik, qpv=qpv: (b, ik, h // qpv, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, 1, dv), lambda b, h, iq, ik: (b, iq, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, T, H, dv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, H, dv), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -113,3 +128,4 @@ def flash_prefill_attention(q, k, v, *, causal: bool = True,
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :T] if Tp != T else out

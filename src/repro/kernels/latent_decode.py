@@ -28,8 +28,58 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, zk_ref, zv_ref, rk_ref, cos_ref, sin_ref, bias_ref,
-            o_ref, m_ref, l_ref, acc_ref, *, scale, s, qpk, dh, n_s):
+def maybe_knorm(k, kn_ref, apply_knorm, norm_eps):
+    """Per-head RMSNorm on reconstructed keys (qk-norm models store
+    pre-norm latents: normalize between reconstruction and RoPE, same as
+    the einsum reference path).  k: (Sb, s, dh); kn_ref: (1, dh)."""
+    if not apply_knorm:
+        return k
+    kn = kn_ref[...].astype(jnp.float32)
+    ms = jnp.mean(k * k, axis=-1, keepdims=True)
+    return k * jax.lax.rsqrt(ms + norm_eps) * (1.0 + kn[None])
+
+
+def knorm_operand(k_norm, dh):
+    """(apply_knorm, kn array) pair for a pallas_call: the flag is trace-
+    static, the array is a real operand either way (dummy when absent)."""
+    if k_norm is None:
+        return False, jnp.zeros((1, dh), jnp.float32)
+    return True, k_norm.reshape(1, dh)
+
+
+def attend_block(q, k, zv, cos, sin, bias, *, scale, s, qpk, dh,
+                 m_ref, l_ref, acc_ref):
+    """Shared online-softmax update over one reconstructed key tile.
+
+    RoPE the (Sb, s, dh) keys by the stored-position tables, score the
+    (s, qpk) query groups, rescale the running (m, l, acc) scratch.  Both
+    decode kernels (bf16 and int8 latents) defer here after reconstructing
+    (and dequantizing) their tile."""
+    half = dh // 2
+    c, si_ = cos[:, None, :], sin[:, None, :]          # (Sb, 1, dh/2)
+    k1, k2 = k[..., :half], k[..., half:]
+    kr = jnp.concatenate([k1 * c - k2 * si_, k2 * c + k1 * si_], axis=-1)
+
+    qg = q.reshape(s, qpk, dh)
+    # one MXU matmul per group-slot (s <= 4, unrolled statically)
+    scores = jnp.concatenate(
+        [qg[i] @ kr[:, i, :].T for i in range(s)], axis=0
+    ) * scale                                          # (Hg, Sb)
+    scores = scores + bias[None, :]
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])               # (Hg, Sb)
+    l_ref[:, 0] = l_prev * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ zv
+    m_ref[:, 0] = m_new
+
+
+def _kernel(q_ref, zk_ref, zv_ref, rk_ref, kn_ref, cos_ref, sin_ref, bias_ref,
+            o_ref, m_ref, l_ref, acc_ref, *, scale, s, qpk, dh, n_s,
+            apply_knorm, norm_eps):
     i_s = pl.program_id(2)
 
     @pl.when(i_s == 0)
@@ -38,68 +88,78 @@ def _kernel(q_ref, zk_ref, zv_ref, rk_ref, cos_ref, sin_ref, bias_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # (Hg, dh), Hg = s*qpk
-    zk = zk_ref[0, :, 0].astype(jnp.float32)       # (Sb, r_k)
-    rk = rk_ref[0].astype(jnp.float32)             # (r_k, s*dh)
-    k = zk @ rk                                    # (Sb, s*dh)  reconstruct
-    sb = k.shape[0]
-    k = k.reshape(sb, s, dh)
+    bias = bias_ref[0].astype(jnp.float32)
 
-    half = dh // 2
-    cos = cos_ref[0].astype(jnp.float32)[:, None, :]   # (Sb, 1, dh/2)
-    sin = sin_ref[0].astype(jnp.float32)[:, None, :]
-    k1, k2 = k[..., :half], k[..., half:]
-    kr = jnp.concatenate([k1 * cos - k2 * sin, k2 * cos + k1 * sin], axis=-1)
-
-    qg = q.reshape(s, qpk, dh)
-    # one MXU matmul per group-slot (s <= 4, unrolled statically)
-    scores = jnp.concatenate(
-        [qg[si] @ kr[:, si, :].T for si in range(s)], axis=0
-    ) * scale                                       # (Hg, Sb)
-    scores = scores + bias_ref[0][None, :].astype(jnp.float32)
-
-    m_prev = m_ref[:, 0]
-    l_prev = l_ref[:, 0]
-    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
-    corr = jnp.exp(m_prev - m_new)
-    p = jnp.exp(scores - m_new[:, None])            # (Hg, Sb)
-    l_new = l_prev * corr + p.sum(axis=-1)
-
-    zv = zv_ref[0, :, 0].astype(jnp.float32)        # (Sb, r_v)
-    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ zv
-    m_ref[:, 0] = m_new
-    l_ref[:, 0] = l_new
+    # Skip fully-masked key tiles (empty ring regions, internal tail
+    # padding): no MXU work, no softmax-state update.
+    @pl.when(jnp.max(bias) > NEG_INF * 0.5)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (Hg, dh), Hg = s*qpk
+        zk = zk_ref[0, :, 0].astype(jnp.float32)       # (Sb, r_k)
+        rk = rk_ref[0].astype(jnp.float32)             # (r_k, s*dh)
+        k = zk @ rk                                    # (Sb, s*dh)  reconstruct
+        sb = k.shape[0]
+        k = maybe_knorm(k.reshape(sb, s, dh), kn_ref, apply_knorm, norm_eps)
+        attend_block(q, k, zv_ref[0, :, 0].astype(jnp.float32),
+                     cos_ref[0].astype(jnp.float32),
+                     sin_ref[0].astype(jnp.float32), bias,
+                     scale=scale, s=s, qpk=qpk, dh=dh,
+                     m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
 
     @pl.when(i_s == n_s - 1)
     def _finish():
-        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def pad_ring(bias: jax.Array, block_s: int, *arrays: jax.Array):
+    """Pad the ring (axis 1) up to a tile multiple.  Padded columns get
+    bias = -inf (never attended); data arrays are zero-padded.  Returns
+    (padded_len, bias, *arrays)."""
+    S = bias.shape[1]
+    bs = min(block_s, S)
+    Sp = -(-S // bs) * bs
+    if Sp == S:
+        return S, bias, *arrays
+    bias = jnp.pad(bias, ((0, 0), (0, Sp - S)), constant_values=NEG_INF)
+    arrays = tuple(
+        jnp.pad(a, ((0, 0), (0, Sp - S)) + ((0, 0),) * (a.ndim - 2))
+        for a in arrays)
+    return Sp, bias, *arrays
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "block_s", "interpret"),
+    static_argnames=("scale", "block_s", "interpret", "norm_eps"),
 )
 def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
                             scale: float, block_s: int = 256,
-                            interpret: bool = False):
+                            interpret: bool = False,
+                            k_norm: jax.Array | None = None,
+                            norm_eps: float = 1e-6):
     """q: (B, G, Hg, dh); zk: (B, S, G, r_k); zv: (B, S, G, r_v);
     r_k: (G, r_k, s*dh); cos/sin: (B, S, dh/2); bias: (B, S).
-    Returns (B, G, Hg, r_v) latent outputs (feed to the fused W~_o)."""
+    Returns (B, G, Hg, r_v) latent outputs (feed to the fused W~_o).
+
+    ``k_norm`` (dh,), when given, applies per-head RMSNorm to the
+    reconstructed keys before RoPE (qk-norm models).  S need not divide
+    ``block_s``: the tail tile is padded and masked internally."""
     B, G, Hg, dh = q.shape
-    S, rk = zk.shape[1], zk.shape[3]
+    rk = zk.shape[3]
     rv = zv.shape[3]
     sdh = r_k.shape[-1]
     s = sdh // dh
     qpk = Hg // s
-    bs = min(block_s, S)
-    if S % bs:
-        raise ValueError(f"S={S} not divisible by block_s={bs}")
+    bs = min(block_s, bias.shape[1])
+    S, bias, zk, zv, cos, sin = pad_ring(bias, block_s, zk, zv, cos, sin)
     n_s = S // bs
     half = dh // 2
+    apply_knorm, kn = knorm_operand(k_norm, dh)
 
     grid = (B, G, n_s)
     kernel = functools.partial(
-        _kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s)
+        _kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s,
+        apply_knorm=apply_knorm, norm_eps=norm_eps)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -108,6 +168,7 @@ def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
             pl.BlockSpec((1, bs, 1, rk), lambda b, g, i: (b, i, g, 0)),
             pl.BlockSpec((1, bs, 1, rv), lambda b, g, i: (b, i, g, 0)),
             pl.BlockSpec((1, rk, sdh), lambda b, g, i: (g, 0, 0)),
+            pl.BlockSpec((1, dh), lambda b, g, i: (0, 0)),
             pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
             pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
             pl.BlockSpec((1, bs), lambda b, g, i: (b, i)),
@@ -120,4 +181,4 @@ def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
             pltpu.VMEM((Hg, rv), jnp.float32),
         ],
         interpret=interpret,
-    )(q, zk, zv, r_k, cos, sin, bias)
+    )(q, zk, zv, r_k, kn, cos, sin, bias)

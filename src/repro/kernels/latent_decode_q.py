@@ -15,12 +15,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.latent_decode import (attend_block, knorm_operand,
+                                         maybe_knorm, pad_ring)
+
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, zkq_ref, zks_ref, zvq_ref, zvs_ref, rk_ref,
+def _kernel(q_ref, zkq_ref, zks_ref, zvq_ref, zvs_ref, rk_ref, kn_ref,
             cos_ref, sin_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, scale, s, qpk, dh, n_s):
+            *, scale, s, qpk, dh, n_s, apply_knorm, norm_eps):
     i_s = pl.program_id(2)
 
     @pl.when(i_s == 0)
@@ -29,64 +32,56 @@ def _kernel(q_ref, zkq_ref, zks_ref, zvq_ref, zvs_ref, rk_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                  # (Hg, dh)
-    zk = (zkq_ref[0, :, 0].astype(jnp.float32)
-          * zks_ref[0, :, 0][:, None].astype(jnp.float32))   # dequant (Sb, r_k)
-    rk = rk_ref[0].astype(jnp.float32)
-    k = zk @ rk
-    sb = k.shape[0]
-    k = k.reshape(sb, s, dh)
+    bias = bias_ref[0].astype(jnp.float32)
 
-    half = dh // 2
-    cos = cos_ref[0].astype(jnp.float32)[:, None, :]
-    sin = sin_ref[0].astype(jnp.float32)[:, None, :]
-    k1, k2 = k[..., :half], k[..., half:]
-    kr = jnp.concatenate([k1 * cos - k2 * sin, k2 * cos + k1 * sin], axis=-1)
-
-    qg = q.reshape(s, qpk, dh)
-    scores = jnp.concatenate(
-        [qg[si] @ kr[:, si, :].T for si in range(s)], axis=0
-    ) * scale
-    scores = scores + bias_ref[0][None, :].astype(jnp.float32)
-
-    m_prev = m_ref[:, 0]
-    l_prev = l_ref[:, 0]
-    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
-    corr = jnp.exp(m_prev - m_new)
-    p = jnp.exp(scores - m_new[:, None])
-    l_new = l_prev * corr + p.sum(axis=-1)
-
-    zv = (zvq_ref[0, :, 0].astype(jnp.float32)
-          * zvs_ref[0, :, 0][:, None].astype(jnp.float32))
-    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ zv
-    m_ref[:, 0] = m_new
-    l_ref[:, 0] = l_new
+    @pl.when(jnp.max(bias) > NEG_INF * 0.5)       # skip fully-masked tiles
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (Hg, dh)
+        zk = (zkq_ref[0, :, 0].astype(jnp.float32)
+              * zks_ref[0, :, 0][:, None].astype(jnp.float32))  # dequant (Sb, r_k)
+        rk = rk_ref[0].astype(jnp.float32)
+        k = zk @ rk
+        sb = k.shape[0]
+        k = maybe_knorm(k.reshape(sb, s, dh), kn_ref, apply_knorm, norm_eps)
+        zv = (zvq_ref[0, :, 0].astype(jnp.float32)
+              * zvs_ref[0, :, 0][:, None].astype(jnp.float32))
+        attend_block(q, k, zv, cos_ref[0].astype(jnp.float32),
+                     sin_ref[0].astype(jnp.float32), bias,
+                     scale=scale, s=s, qpk=qpk, dh=dh,
+                     m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
 
     @pl.when(i_s == n_s - 1)
     def _finish():
-        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "block_s", "interpret"))
+    jax.jit, static_argnames=("scale", "block_s", "interpret", "norm_eps"))
 def latent_decode_attention_quant(q, zk_q, zk_scale, zv_q, zv_scale, r_k,
                                   cos, sin, bias, *, scale: float,
-                                  block_s: int = 256, interpret: bool = False):
-    """zk_q/zv_q: int8 (B, S, G, r); zk_scale/zv_scale: (B, S, G) f32."""
+                                  block_s: int = 256, interpret: bool = False,
+                                  k_norm: jax.Array | None = None,
+                                  norm_eps: float = 1e-6):
+    """zk_q/zv_q: int8 (B, S, G, r); zk_scale/zv_scale: (B, S, G) f32.
+    Tail tiles are padded/masked internally; ``k_norm`` as in
+    :func:`~repro.kernels.latent_decode.latent_decode_attention`."""
     B, G, Hg, dh = q.shape
-    S, rk = zk_q.shape[1], zk_q.shape[3]
+    rk = zk_q.shape[3]
     rv = zv_q.shape[3]
     sdh = r_k.shape[-1]
     s = sdh // dh
     qpk = Hg // s
-    bs = min(block_s, S)
-    if S % bs:
-        raise ValueError(f"S={S} not divisible by block_s={bs}")
+    bs = min(block_s, bias.shape[1])
+    S, bias, zk_q, zk_scale, zv_q, zv_scale, cos, sin = pad_ring(
+        bias, block_s, zk_q, zk_scale, zv_q, zv_scale, cos, sin)
     n_s = S // bs
     half = dh // 2
+    apply_knorm, kn = knorm_operand(k_norm, dh)
 
     kernel = functools.partial(
-        _kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s)
+        _kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s,
+        apply_knorm=apply_knorm, norm_eps=norm_eps)
     return pl.pallas_call(
         kernel,
         grid=(B, G, n_s),
@@ -97,6 +92,7 @@ def latent_decode_attention_quant(q, zk_q, zk_scale, zv_q, zv_scale, r_k,
             pl.BlockSpec((1, bs, 1, rv), lambda b, g, i: (b, i, g, 0)),
             pl.BlockSpec((1, bs, 1), lambda b, g, i: (b, i, g)),
             pl.BlockSpec((1, rk, sdh), lambda b, g, i: (g, 0, 0)),
+            pl.BlockSpec((1, dh), lambda b, g, i: (0, 0)),
             pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
             pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
             pl.BlockSpec((1, bs), lambda b, g, i: (b, i)),
@@ -109,4 +105,4 @@ def latent_decode_attention_quant(q, zk_q, zk_scale, zv_q, zv_scale, r_k,
             pltpu.VMEM((Hg, rv), jnp.float32),
         ],
         interpret=interpret,
-    )(q, zk_q, zk_scale, zv_q, zv_scale, r_k, cos, sin, bias)
+    )(q, zk_q, zk_scale, zv_q, zv_scale, r_k, kn, cos, sin, bias)

@@ -1,9 +1,24 @@
 """Jit'd convenience wrappers around the Pallas kernels.
 
 These adapt model-layer tensors (cache dicts, position arrays) to kernel
-calling conventions and pick block sizes.  ``interpret=True`` runs the
-kernel bodies in Python on CPU — the validation mode used by every test;
-on a real TPU the same calls lower through Mosaic.
+calling conventions, pick block sizes, and resolve interpret mode from the
+platform: on CPU/GPU the kernels run through the Pallas interpreter (the
+validation mode used by every test); on TPU the same calls lower through
+Mosaic.  Pass ``interpret=True/False`` to override.
+
+Decode-side wrappers accept a ``self_entry`` — the current token's K/V (or
+latents), which the model keeps out of the ring until after the layer scan
+(deferred writes).  The wrapper appends it as an extra ring column at
+position ``cur`` before calling the kernel, so the joint softmax over
+[cache | self] matches the model's two-part einsum softmax exactly.
+
+Known cost of that design: the concat materializes a ring copy per layer
+per step, and when the ring length is a tile multiple the S+1-th column
+opens one extra (otherwise dead) key tile — the kernels skip fully-masked
+tiles, so the extra tile costs a DMA but no MXU work.  Eliminating the
+copy needs write-before-attend (ring writes inside the layer scan), which
+trades back the scan-rematerialization cost deferred writes exist to
+avoid (EXPERIMENTS.md §Perf iteration 3) — revisit on TPU profiles.
 """
 
 from __future__ import annotations
@@ -13,8 +28,17 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill_attention
-from repro.kernels.latent_decode import latent_decode_attention
+from repro.kernels.latent_decode import NEG_INF, latent_decode_attention
 from repro.kernels.latent_decode_q import latent_decode_attention_quant
+
+
+def default_interpret() -> bool:
+    """Interpret mode for the current platform: real lowering only on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def decode_bias(pos: jax.Array, cur: jax.Array, window: int | None) -> jax.Array:
@@ -22,7 +46,7 @@ def decode_bias(pos: jax.Array, cur: jax.Array, window: int | None) -> jax.Array
     valid = (pos >= 0) & (pos <= cur[:, None])
     if window is not None:
         valid &= pos > (cur[:, None] - window)
-    return jnp.where(valid, 0.0, -1e30).astype(jnp.float32)
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
 
 
 def rope_tables_for(pos: jax.Array, dh: int, theta: float):
@@ -45,32 +69,105 @@ def ungroup_outputs(o: jax.Array) -> jax.Array:
     return o.reshape(B, G * Hg, rv)
 
 
+def _extend_ring(cache: dict, self_entry: dict | None, cur: jax.Array):
+    """Append the (deferred-write) current token as one extra ring column.
+
+    cache leaves are (B, S, ...); self_entry leaves are the matching
+    (B, ...) slot values.  Returns (arrays, pos) with S+1 columns."""
+    pos = cache["pos"]
+    arrs = {k: v for k, v in cache.items() if k != "pos"}
+    if self_entry is None:
+        return arrs, pos
+    arrs = {k: jnp.concatenate([v, self_entry[k][:, None].astype(v.dtype)],
+                               axis=1)
+            for k, v in arrs.items()}
+    pos = jnp.concatenate([pos, cur[:, None].astype(pos.dtype)], axis=1)
+    return arrs, pos
+
+
 def latent_decode(q, cache, r_k, cur, *, theta: float, window: int | None,
                   scale: float, block_s: int = 256, use_kernel: bool = True,
-                  interpret: bool = True):
+                  interpret: bool | None = None, self_entry: dict | None = None,
+                  k_norm: jax.Array | None = None, norm_eps: float = 1e-6):
     """End-to-end latent decode from a model cache dict.
 
     q: (B, H, dh) post-RoPE grouped-orderable queries;
-    cache: {"zk","zv","pos"} as produced by the model layer.
+    cache: {"zk","zv","pos"} — or the int8 ring {"zk_q","zk_s","zv_q",
+    "zv_s","pos"} — as produced by the model layer.  ``self_entry`` holds
+    the current token's latents in the same (quantized or not) layout.
     Returns (B, H, r_v) latent outputs.
     """
-    zk, zv, pos = cache["zk"], cache["zv"], cache["pos"]
-    B, S, G, _ = zk.shape
+    arrs, pos = _extend_ring(cache, self_entry, cur)
+    quant = "zk_q" in arrs
+    S = pos.shape[1]
+    G = (arrs["zk_q"] if quant else arrs["zk"]).shape[2]
     dh = q.shape[-1]
     cos, sin = rope_tables_for(pos, dh, theta)
     bias = decode_bias(pos, cur, window)
     qg = group_queries(q, G)
     if use_kernel:
-        o = latent_decode_attention(qg, zk, zv, r_k, cos, sin, bias,
-                                    scale=scale, block_s=min(block_s, S),
-                                    interpret=interpret)
+        kw = dict(scale=scale, block_s=min(block_s, S),
+                  interpret=_resolve_interpret(interpret),
+                  k_norm=k_norm, norm_eps=norm_eps)
+        if quant:
+            o = latent_decode_attention_quant(
+                qg, arrs["zk_q"], arrs["zk_s"], arrs["zv_q"], arrs["zv_s"],
+                r_k, cos, sin, bias, **kw)
+        else:
+            o = latent_decode_attention(qg, arrs["zk"], arrs["zv"], r_k,
+                                        cos, sin, bias, **kw)
     else:
+        if quant:
+            from repro.quant import dequantize
+            zk = dequantize(arrs["zk_q"], arrs["zk_s"][..., None])
+            zv = dequantize(arrs["zv_q"], arrs["zv_s"][..., None])
+        else:
+            zk, zv = arrs["zk"], arrs["zv"]
+        if k_norm is not None:
+            raise NotImplementedError("ref path applies no k-norm")
         o = ref.latent_decode_attention(qg, zk, zv, r_k, cos, sin, bias, scale)
     return ungroup_outputs(o)
 
 
+def dense_decode(q, cache, cur, *, window: int | None, scale: float,
+                 block_s: int = 256, interpret: bool | None = None,
+                 self_entry: dict | None = None):
+    """Dense-cache decode through the latent kernel.
+
+    The dense ring {"k","v","pos"} is the degenerate latent cache: one kv
+    head per group, identity reconstruction (r_k = I), identity rotation
+    (keys are stored post-RoPE, so cos=1/sin=0).  q: (B, H, dh) post-RoPE;
+    self_entry: {"k","v"} (B, Hkv, dh) post-RoPE/norm.  Returns (B, H, dh).
+    """
+    arrs, pos = _extend_ring(cache, self_entry, cur)
+    k, v = arrs["k"], arrs["v"]
+    B, S, Hkv, dh = k.shape
+    eye = jnp.broadcast_to(jnp.eye(dh, dtype=k.dtype), (Hkv, dh, dh))
+    ones = jnp.ones((B, S, dh // 2), jnp.float32)
+    bias = decode_bias(pos, cur, window)
+    qg = group_queries(q, Hkv)
+    o = latent_decode_attention(qg, k, v, eye, ones, jnp.zeros_like(ones),
+                                bias, scale=scale, block_s=min(block_s, S),
+                                interpret=_resolve_interpret(interpret))
+    return ungroup_outputs(o)
+
+
+def flash_prefill(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None, block: int = 256,
+                  interpret: bool | None = None):
+    """Full-sequence flash attention for prefill/training forward paths.
+
+    q: (B, T, H, dh); k: (B, T, Hkv, dh); v: (B, T, Hv, dv) — Hv may be the
+    latent group count G.  Arbitrary T (tail tiles padded internally)."""
+    return flash_prefill_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block, block_k=block,
+        interpret=_resolve_interpret(interpret))
+
+
 __all__ = [
     "decode_bias", "rope_tables_for", "group_queries", "ungroup_outputs",
-    "latent_decode", "latent_decode_attention", "latent_decode_attention_quant",
+    "default_interpret", "latent_decode", "dense_decode", "flash_prefill",
+    "latent_decode_attention", "latent_decode_attention_quant",
     "flash_prefill_attention",
 ]

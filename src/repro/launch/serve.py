@@ -34,6 +34,9 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--recalkv", type=float, default=None,
                     help="keep ratio, e.g. 0.5")
+    ap.add_argument("--backend", choices=("einsum", "pallas"), default=None,
+                    help="attention backend (pallas = fused kernels; "
+                         "interpret mode off-TPU)")
     args = ap.parse_args(argv)
 
     kw = {"smoke": args.smoke}
@@ -51,7 +54,7 @@ def main(argv=None):
                 size=(args.slots, cfg.cross_source_len, cfg.d_model)),
             cfg.dtype)
     eng = Engine(cfg, params, max_slots=args.slots, max_len=args.max_len,
-                 source=src)
+                 source=src, backend=args.backend)
     print(f"[serve] {cfg.name}: cache {cache_bytes(eng.cache)/2**20:.1f} MiB "
           f"({args.slots} slots x {args.max_len} positions)")
 

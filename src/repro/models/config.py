@@ -26,6 +26,7 @@ from typing import Any
 import jax.numpy as jnp
 
 BLOCK_KINDS = ("attn", "attn_dense", "local", "cross", "attn_cross", "mamba", "rglru")
+ATTN_BACKENDS = ("einsum", "pallas")
 ATTN_KINDS = ("attn", "attn_dense", "local", "cross", "attn_cross")
 SELF_ATTN_KINDS = ("attn", "attn_dense", "local", "attn_cross")
 
@@ -129,6 +130,9 @@ class ModelConfig:
     scan_layers: bool = True
     remat: bool = True
     attn_chunk: int = 512        # query-chunked attention block (memory ceiling)
+    attn_backend: str = "einsum"  # "einsum" reference | "pallas" kernels
+    attn_block: int = 256        # pallas kernel tile size (key/query axis)
+    cache_quant_bits: int | None = None  # int8-latent self-attn ring cache
     dtype: Any = jnp.bfloat16
 
     def __post_init__(self):
@@ -137,6 +141,16 @@ class ModelConfig:
                 raise ValueError(f"unknown block kind {k!r}")
         if self.num_heads % max(self.num_kv_heads, 1):
             raise ValueError("num_heads must be divisible by num_kv_heads")
+        if self.attn_backend not in ATTN_BACKENDS:
+            raise ValueError(
+                f"attn_backend must be one of {ATTN_BACKENDS}, "
+                f"got {self.attn_backend!r}")
+        if self.cache_quant_bits is not None:
+            if self.recalkv is None:
+                raise ValueError("cache_quant_bits requires a recalkv "
+                                 "(latent) cache")
+            if self.cache_quant_bits not in (3, 4, 8):
+                raise ValueError("cache_quant_bits must be 3, 4 or 8")
         n_body = self.num_layers - len(self.prefix_pattern)
         if n_body < 0:
             raise ValueError("prefix longer than the model")

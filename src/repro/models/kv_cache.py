@@ -21,8 +21,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models.config import ModelConfig
+from repro.quant import dequantize, quantize
 
 Params = dict[str, Any]
 NEG_INF = L.NEG_INF
@@ -48,6 +50,14 @@ def init_self_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
         rt = cfg.recalkv
         G = rt.num_groups(cfg.num_kv_heads)
         rk, rv = rt.ranks_for(layer_idx)
+        if cfg.cache_quant_bits is not None:
+            return {
+                "zk_q": jnp.zeros((batch, Lr, G, rk), jnp.int8),
+                "zk_s": jnp.zeros((batch, Lr, G), jnp.float32),
+                "zv_q": jnp.zeros((batch, Lr, G, rv), jnp.int8),
+                "zv_s": jnp.zeros((batch, Lr, G), jnp.float32),
+                "pos": pos,
+            }
         return {
             "zk": jnp.zeros((batch, Lr, G, rk), dtype),
             "zv": jnp.zeros((batch, Lr, G, rv), dtype),
@@ -128,16 +138,30 @@ def _ring_write(cache_arr: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Ar
     return jnp.where(hit, new.astype(cache_arr.dtype)[:, None], cache_arr)
 
 
-def write_prefill(cache_arr: jax.Array, values: jax.Array) -> jax.Array:
-    """Bulk-write prefill values (B, T, ...) into slots (pos % L), keeping
-    only the last L positions when T exceeds the ring."""
-    T, Lr = values.shape[1], cache_arr.shape[1]
-    if T > Lr:
-        values = values[:, T - Lr:]
-        slots = (jnp.arange(T - Lr, T) % Lr)
-    else:
-        slots = jnp.arange(T)
-    return cache_arr.at[:, slots].set(values.astype(cache_arr.dtype))
+def write_prefill(cache_arr: jax.Array, values: jax.Array,
+                  lengths: jax.Array | None = None) -> jax.Array:
+    """Bulk-write prefill values (B, T, ...) into ring slots (pos % L).
+
+    T <= L is a plain aligned write.  T > L wraps per row, last write
+    wins: each row keeps its own last min(length, L) positions.  Padded
+    columns (index >= ``lengths``) never write, so a short prompt batched
+    into a wave whose padded T exceeds its ring (e.g. any sliding-window
+    block) is not clobbered by the long rows' wraparound."""
+    B, T = values.shape[:2]
+    Lr = cache_arr.shape[1]
+    if T <= Lr:
+        return cache_arr.at[:, jnp.arange(T)].set(values.astype(cache_arr.dtype))
+    eff = (jnp.full((B,), T, jnp.int32) if lengths is None
+           else jnp.minimum(lengths, T).astype(jnp.int32))
+    s = jnp.arange(Lr, dtype=jnp.int32)[None, :]             # (1, Lr)
+    wraps = (eff[:, None] - 1 - s) // Lr                     # (B, Lr)
+    t_last = s + wraps * Lr            # last column landing on slot s
+    valid = wraps >= 0                 # slot ever written by a real token
+    shape = (B, Lr) + (1,) * (values.ndim - 2)
+    gathered = jnp.take_along_axis(
+        values, jnp.clip(t_last, 0, T - 1).reshape(shape), axis=1)
+    return jnp.where(valid.reshape(shape), gathered.astype(cache_arr.dtype),
+                     cache_arr)
 
 
 def prefill_pos(lengths: jax.Array, T: int, Lr: int) -> jax.Array:
@@ -147,7 +171,27 @@ def prefill_pos(lengths: jax.Array, T: int, Lr: int) -> jax.Array:
     idx = jnp.arange(T)
     vals = jnp.where(idx[None, :] < lengths[:, None], idx[None, :], -1)
     cache = jnp.full((B, Lr), -1, jnp.int32)
-    return write_prefill(cache, vals.astype(jnp.int32))
+    return write_prefill(cache, vals.astype(jnp.int32), lengths)
+
+
+def latent_cache_entry(cfg: ModelConfig, zk: jax.Array, zv: jax.Array) -> Params:
+    """Ring-cache leaves for latent K/V at any leading shape (..., G, r):
+    model-dtype latents, or int8 + per-token scale when
+    ``cfg.cache_quant_bits`` is set."""
+    if cfg.cache_quant_bits is None:
+        return {"zk": zk, "zv": zv}
+    zk_q, zk_s = quantize(zk, cfg.cache_quant_bits)
+    zv_q, zv_s = quantize(zv, cfg.cache_quant_bits)
+    return {"zk_q": zk_q, "zk_s": zk_s[..., 0],
+            "zv_q": zv_q, "zv_s": zv_s[..., 0]}
+
+
+def latent_cache_arrays(cache: Params, dtype) -> tuple[jax.Array, jax.Array]:
+    """(zk, zv) from a float or int8 latent cache dict, dequantized."""
+    if "zk_q" in cache:
+        return (dequantize(cache["zk_q"], cache["zk_s"][..., None], dtype),
+                dequantize(cache["zv_q"], cache["zv_s"][..., None], dtype))
+    return cache["zk"].astype(dtype), cache["zv"].astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -199,9 +243,19 @@ def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     q = L.apply_rope(q, cos, sin)
     k_new = L.apply_rope(k_new[:, None], cos, sin)[:, 0]
 
+    scale = dh ** -0.5
+    updates = {"k": k_new, "v": v_new, "pos": cur.astype(jnp.int32)}
+    if cfg.attn_backend == "pallas":
+        # Joint softmax over [ring | self] inside the kernel: the deferred
+        # write becomes an extra appended ring column at position cur.
+        o = kops.dense_decode(q[:, 0], cache, cur, window=window, scale=scale,
+                              block_s=cfg.attn_block,
+                              self_entry={"k": k_new, "v": v_new})
+        y = o.astype(x.dtype).reshape(B, 1, H * dh) @ p["wo"]
+        return y, updates
+
     qr = q[:, 0].reshape(B, Hkv, g, dh)
     k_c = cache["k"].astype(x.dtype)
-    scale = dh ** -0.5
     logits_c = jnp.einsum("bkgd,bskd->bkgs", qr, k_c).astype(jnp.float32) * scale
     mask = _decode_mask(cache["pos"], cur, window)[:, None, None, :]
     logits_c = jnp.where(mask, logits_c, NEG_INF)
@@ -212,7 +266,7 @@ def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     o = (jnp.einsum("bkgs,bskd->bkgd", w_c, cache["v"].astype(x.dtype))
          + w_s * v_new[:, :, None, :])
     y = o.reshape(B, 1, H * dh) @ p["wo"]
-    return y, {"k": k_new, "v": v_new, "pos": cur.astype(jnp.int32)}
+    return y, updates
 
 
 def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
@@ -237,17 +291,36 @@ def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     zk_new = jnp.einsum("bd,gdr->bgr", x[:, 0], p["l_k"]).astype(x.dtype)
     zv_new = jnp.einsum("bd,gdr->bgr", x[:, 0], p["l_v"]).astype(x.dtype)
 
+    scale = dh ** -0.5
+    entry = latent_cache_entry(cfg, zk_new, zv_new)
+    updates = {**entry, "pos": cur.astype(jnp.int32)}
+    if cfg.attn_backend == "pallas":
+        # Kernel path: the deferred write becomes an extra appended ring
+        # column at cur, so the kernel's online softmax covers the self
+        # token; qk-norm is applied to reconstructed keys in-kernel.
+        o_lat = kops.latent_decode(
+            q[:, 0], cache, p["r_k"], cur, theta=theta, window=window,
+            scale=scale, block_s=cfg.attn_block, self_entry=entry,
+            k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps)
+        o_lat = o_lat.astype(x.dtype).reshape(B, 1, H, -1)
+        y = jnp.einsum("bthr,hrd->btd", o_lat, p["wo_fused"])
+        return y, updates
+
+    # With an int8 ring, attention (and the self column) reads the
+    # dequantized latents — the same values the kernel path sees.
+    zk_c, zv_c = latent_cache_arrays(cache, x.dtype)
+    zk_self, zv_self = latent_cache_arrays(entry, x.dtype)
+
     # Reconstruct cached keys (the paper's RoPE-forced reconstruction).
-    k = L.reconstruct_keys(cache["zk"].astype(x.dtype), p["r_k"], Hkv, dh)
+    k = L.reconstruct_keys(zk_c, p["r_k"], Hkv, dh)
     k = L.maybe_head_norm(k, p.get("k_norm"), cfg.norm_eps)
     cos_k, sin_k = L.rope_tables(jnp.maximum(cache["pos"], 0), dh, theta)
     k = L.apply_rope(k, cos_k, sin_k)
     # ... and the self key from the fresh latent.
-    k_self = L.reconstruct_keys(zk_new[:, None], p["r_k"], Hkv, dh)
+    k_self = L.reconstruct_keys(zk_self[:, None], p["r_k"], Hkv, dh)
     k_self = L.maybe_head_norm(k_self, p.get("k_norm"), cfg.norm_eps)
     k_self = L.apply_rope(k_self, cos_q, sin_q)[:, 0]       # (B, Hkv, dh)
 
-    scale = dh ** -0.5
     logits_c = jnp.einsum("bkgd,bskd->bkgs", qr, k).astype(jnp.float32) * scale
     mask = _decode_mask(cache["pos"], cur, window)[:, None, None, :]
     logits_c = jnp.where(mask, logits_c, NEG_INF)
@@ -256,11 +329,11 @@ def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     w_c, w_s = _two_part_softmax(logits_c, logits_s)
     w_c = w_c.astype(x.dtype).reshape(B, G, s * g, -1)
     w_s = w_s.astype(x.dtype).reshape(B, G, s * g, 1)
-    o_lat = (jnp.einsum("bGhs,bsGr->bGhr", w_c, cache["zv"].astype(x.dtype))
-             + w_s * zv_new[:, :, None, :])
+    o_lat = (jnp.einsum("bGhs,bsGr->bGhr", w_c, zv_c)
+             + w_s * zv_self[:, :, None, :])
     o_lat = o_lat.reshape(B, 1, H, -1)
     y = jnp.einsum("bthr,hrd->btd", o_lat, p["wo_fused"])
-    return y, {"zk": zk_new, "zv": zv_new, "pos": cur.astype(jnp.int32)}
+    return y, updates
 
 
 def decode_attn_mla(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
@@ -308,16 +381,24 @@ def decode_attn_mla(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     return y, {"ckv": ckv_new, "krope": kr_new, "pos": cur.astype(jnp.int32)}
 
 
-def _merge_leaf(cache_leaf, upd, cur: jax.Array, stacked: bool):
+def _merge_leaf(cache_leaf, upd, cur: jax.Array, stacked: bool,
+                active: jax.Array | None):
     if upd is None:
         return cache_leaf
-    if upd.ndim == cache_leaf.ndim:
-        return upd.astype(cache_leaf.dtype)                  # state replace
     b_ax = 1 if stacked else 0
-    Lr = cache_leaf.shape[b_ax + 1]
     B = cache_leaf.shape[b_ax]
+    if upd.ndim == cache_leaf.ndim:                          # state replace
+        if active is None:
+            return upd.astype(cache_leaf.dtype)
+        shape = [1] * cache_leaf.ndim
+        shape[b_ax] = B
+        return jnp.where(active.reshape(shape),
+                         upd.astype(cache_leaf.dtype), cache_leaf)
+    Lr = cache_leaf.shape[b_ax + 1]
     slot = (cur % Lr).astype(jnp.int32)                      # (B,)
     hit = jnp.arange(Lr, dtype=jnp.int32)[None, :] == slot[:, None]
+    if active is not None:
+        hit &= active[:, None]
     shape = [1] * cache_leaf.ndim
     shape[b_ax], shape[b_ax + 1] = B, Lr
     hit = hit.reshape(shape)
@@ -325,29 +406,32 @@ def _merge_leaf(cache_leaf, upd, cur: jax.Array, stacked: bool):
     return jnp.where(hit, new.astype(cache_leaf.dtype), cache_leaf)
 
 
-def _merge(caches, updates, cur, stacked: bool):
+def _merge(caches, updates, cur, stacked: bool, active):
     if updates is None:
         return caches
     if isinstance(caches, dict):
-        return {k: _merge(v, updates.get(k), cur, stacked)
+        return {k: _merge(v, updates.get(k), cur, stacked, active)
                 for k, v in caches.items()}
     if isinstance(caches, (tuple, list)):
         return type(caches)(
-            _merge(c, u, cur, stacked) for c, u in zip(caches, updates))
-    return _merge_leaf(caches, updates, cur, stacked)
+            _merge(c, u, cur, stacked, active) for c, u in zip(caches, updates))
+    return _merge_leaf(caches, updates, cur, stacked, active)
 
 
-def apply_decode_writes(caches: Params, updates: Params, cur: jax.Array) -> Params:
+def apply_decode_writes(caches: Params, updates: Params, cur: jax.Array,
+                        active: jax.Array | None = None) -> Params:
     """Merge deferred per-layer decode updates into the caches (§Perf it. 3).
 
     One vectorized pass after the layer scan: update leaves are slot
     entries (one dim short of the cache leaf — ring-written at cur %% L),
     full replacements (recurrent states, equal ndim), or None (static
-    cross caches, kept as-is)."""
+    cross caches, kept as-is).  ``active`` (B,) bool, when given, freezes
+    the rows of inactive sequences entirely — a freed serving slot's ring
+    and recurrent state stay inert until re-admission."""
     return {
-        "prefix": _merge(caches["prefix"], updates["prefix"], cur, False),
-        "blocks": _merge(caches["blocks"], updates["blocks"], cur, True),
-        "suffix": _merge(caches["suffix"], updates["suffix"], cur, False),
+        "prefix": _merge(caches["prefix"], updates["prefix"], cur, False, active),
+        "blocks": _merge(caches["blocks"], updates["blocks"], cur, True, active),
+        "suffix": _merge(caches["suffix"], updates["suffix"], cur, False, active),
     }
 
 

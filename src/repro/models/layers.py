@@ -23,6 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
 
 Params = dict[str, Any]
@@ -194,8 +195,13 @@ def reconstruct_keys(zk: jax.Array, r_k: jax.Array, num_kv_heads: int,
 
 def self_attention_dense(p: Params, x: jax.Array, cfg: ModelConfig,
                          positions: jax.Array, window: int | None,
-                         theta: float | None = None, causal: bool = True):
-    """Returns (y, (k_roped, v)) — the tuple feeds prefill cache writes."""
+                         theta: float | None = None, causal: bool = True,
+                         use_kernel: bool = True):
+    """Returns (y, (k_roped, v)) — the tuple feeds prefill cache writes.
+
+    ``use_kernel=False`` forces the einsum path even under
+    ``attn_backend="pallas"`` — the training forward needs it (the Pallas
+    kernels carry no autodiff rule)."""
     B, T, _ = x.shape
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
     q = (x @ p["wq"]).reshape(B, T, H, dh)
@@ -212,16 +218,25 @@ def self_attention_dense(p: Params, x: jax.Array, cfg: ModelConfig,
         # softmax reductions, and AV contractions distributed.
         k = shard_hint(k, ("batch", "seq", None, None))
         v = shard_hint(v, ("batch", "seq", None, None))
-    o = chunked_attention(q, k, v, positions, positions, window=window,
-                          scale=dh ** -0.5, chunk=cfg.attn_chunk, causal=causal)
+    if use_kernel and cfg.attn_backend == "pallas":
+        # Prefill positions are always 0..T-1, which is exactly the flash
+        # kernel's block-position mask.
+        o = kops.flash_prefill(q, k, v, causal=causal, window=window,
+                               scale=dh ** -0.5, block=cfg.attn_block)
+    else:
+        o = chunked_attention(q, k, v, positions, positions, window=window,
+                              scale=dh ** -0.5, chunk=cfg.attn_chunk,
+                              causal=causal)
     return o.reshape(B, T, H * dh) @ p["wo"], (k, v)
 
 
 def self_attention_latent(p: Params, x: jax.Array, cfg: ModelConfig,
                           positions: jax.Array, window: int | None,
-                          theta: float | None = None):
+                          theta: float | None = None,
+                          use_kernel: bool = True):
     """Full-sequence ReCalKV attention.  Returns (y, (zk, zv)) — the latents
-    are exactly what prefill writes into the ring cache (pre-RoPE)."""
+    are exactly what prefill writes into the ring cache (pre-RoPE).
+    ``use_kernel`` as in :func:`self_attention_dense`."""
     B, T, _ = x.shape
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
     rt = cfg.recalkv
@@ -237,9 +252,18 @@ def self_attention_latent(p: Params, x: jax.Array, cfg: ModelConfig,
     if cfg.attn_seq_shard:
         k = shard_hint(k, ("batch", "seq", None, None))
         zv = shard_hint(zv, ("batch", "seq", None, None))
-    o_lat = chunked_attention(q, k, zv, positions, positions, window=window,
-                              scale=dh ** -0.5, chunk=cfg.attn_chunk,
-                              latent_v=True, group_size=s)
+    if use_kernel and cfg.attn_backend == "pallas":
+        # The flash kernel consumes latent values directly: one value
+        # group per s kv heads (v head index = h // (s*g)), producing
+        # (B, T, H, r_v) outputs for the fused W~_o — K is reconstructed
+        # once here but never cached.
+        o_lat = kops.flash_prefill(q, k, zv, causal=True, window=window,
+                                   scale=dh ** -0.5, block=cfg.attn_block)
+    else:
+        o_lat = chunked_attention(q, k, zv, positions, positions,
+                                  window=window, scale=dh ** -0.5,
+                                  chunk=cfg.attn_chunk,
+                                  latent_v=True, group_size=s)
     return jnp.einsum("bthr,hrd->btd", o_lat, p["wo_fused"]), (zk, zv)
 
 

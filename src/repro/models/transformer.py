@@ -261,7 +261,9 @@ def block_full(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
         h, a = L.ffn(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, dense=True)
         return x + h, cache, aux + a
 
-    # self-attention kinds
+    # self-attention kinds.  The pallas backend applies to inference
+    # passes only (want_cache=True, i.e. prefill): the kernels have no
+    # autodiff rule, so the training forward keeps the einsum path.
     window = cfg.window_for(kind)
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     self_cache = None
@@ -271,12 +273,15 @@ def block_full(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
             self_cache = _prefill_self_cache(cfg, kind, ctx, {"ckv": kv[0], "krope": kv[1]})
     elif cfg.recalkv is not None:
         y, kv = L.self_attention_latent(p["attn"], h, cfg, pos, window,
-                                        theta=_theta(cfg, kind))
+                                        theta=_theta(cfg, kind),
+                                        use_kernel=want_cache)
         if want_cache:
-            self_cache = _prefill_self_cache(cfg, kind, ctx, {"zk": kv[0], "zv": kv[1]})
+            self_cache = _prefill_self_cache(
+                cfg, kind, ctx, KC.latent_cache_entry(cfg, kv[0], kv[1]))
     else:
         y, kv = L.self_attention_dense(p["attn"], h, cfg, pos, window,
-                                       theta=_theta(cfg, kind), causal=causal)
+                                       theta=_theta(cfg, kind), causal=causal,
+                                       use_kernel=want_cache)
         if want_cache:
             self_cache = _prefill_self_cache(cfg, kind, ctx, {"k": kv[0], "v": kv[1]})
     x = x + y
@@ -315,7 +320,7 @@ def _prefill_self_cache(cfg: ModelConfig, kind: str, ctx: dict,
     out = {}
     for name, val in values.items():
         empty = jnp.zeros((B, Lr) + val.shape[2:], val.dtype)
-        out[name] = KC.write_prefill(empty, val)
+        out[name] = KC.write_prefill(empty, val, ctx["lengths"])
     out["pos"] = KC.prefill_pos(ctx["lengths"], T, Lr)
     return out
 
@@ -571,12 +576,14 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 
 def decode_step(cfg: ModelConfig, params: Params, caches: Params,
-                tokens: jax.Array, cur: jax.Array):
+                tokens: jax.Array, cur: jax.Array,
+                active: jax.Array | None = None):
     """One decode step.  tokens: (B,) int32, cur: (B,) absolute positions.
-    Returns (logits (B, V), new caches)."""
+    ``active`` (B,) bool masks cache writes for idle batch rows (serving
+    slots between requests).  Returns (logits (B, V), new caches)."""
     x = embed_tokens(cfg, params, tokens[:, None])
     ctx = {"cur": cur}
     x, updates, _ = run_stack(cfg, params, x, ctx, caches=caches, decode=True)
-    caches = KC.apply_decode_writes(caches, updates, cur)
+    caches = KC.apply_decode_writes(caches, updates, cur, active)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return logits_for(cfg, params, x)[:, 0], caches

@@ -40,21 +40,34 @@ class Request:
 
 
 def _merge_slot(pool_cache, new_cache, slots: jax.Array):
-    """Copy ``new_cache``'s batch rows into ``pool_cache`` at ``slots``.
+    """Copy ``new_cache``'s leading batch rows into ``pool_cache`` at
+    ``slots`` (the prefill wave may be padded past ``len(slots)`` rows for
+    shape bucketing — the pad rows are dropped here).
 
     Batch is dim 0 for prefix/suffix caches but dim 1 under the scanned
     "blocks" subtree (leading dim = pattern periods)."""
+    n = slots.shape[0]
     def one(path, pool, new):
         key0 = getattr(path[0], "key", None)
         if key0 == "blocks":
-            return pool.at[:, slots].set(new.astype(pool.dtype))
-        return pool.at[slots].set(new.astype(pool.dtype))
+            return pool.at[:, slots].set(new[:, :n].astype(pool.dtype))
+        return pool.at[slots].set(new[:n].astype(pool.dtype))
     return jax.tree_util.tree_map_with_path(one, pool_cache, new_cache)
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Round up to a power of two, capped: the (wave, prompt-len) shapes a
+    long-running engine sees collapse to O(log) values instead of one jit
+    retrace per distinct admission wave."""
+    return min(max(1, 1 << (n - 1).bit_length()), max(cap, n))
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
-                 max_len: int, source: jax.Array | None = None):
+                 max_len: int, source: jax.Array | None = None,
+                 backend: str | None = None):
+        if backend is not None:
+            cfg = dataclasses.replace(cfg, attn_backend=backend)
         self.cfg, self.params = cfg, params
         self.B, self.max_len = max_slots, max_len
         self.source = source
@@ -64,7 +77,7 @@ class Engine:
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self._decode = jax.jit(
-            lambda p, c, t, cur: T.decode_step(cfg, p, c, t, cur))
+            lambda p, c, t, cur, act: T.decode_step(cfg, p, c, t, cur, act))
         self._prefill = jax.jit(
             lambda p, t, l: T.prefill(cfg, p, t, l, max_len=max_len,
                                       source=None if source is None
@@ -73,14 +86,15 @@ class Engine:
 
     @classmethod
     def from_artifact(cls, path: str, *, max_slots: int, max_len: int,
-                      source: jax.Array | None = None) -> "Engine":
+                      source: jax.Array | None = None,
+                      backend: str | None = None) -> "Engine":
         """Boot an engine straight from a saved compression artifact —
         the compress-offline / serve-forever workflow across processes."""
         from repro.api import load_artifact  # local: api imports models too
 
         art = load_artifact(path)
         return cls(art.cfg, art.params, max_slots=max_slots, max_len=max_len,
-                   source=source)
+                   source=source, backend=backend)
 
     # -- admission ----------------------------------------------------------
 
@@ -100,9 +114,15 @@ class Engine:
             wave.append((slot, req))
         if not wave:
             return
-        P = max(len(r.prompt) for _, r in wave)
-        toks = np.zeros((len(wave), P), np.int32)
-        lens = np.zeros((len(wave),), np.int32)
+        # Bucket the wave to power-of-two (rows, prompt-len) shapes so a
+        # stream of ragged admissions reuses O(log) jit traces.  The row
+        # cap is the slot count; the length cap is max_len (padding past
+        # the ring would silently drop a fittable prompt prefix).
+        P_real = max(len(r.prompt) for _, r in wave)
+        W = _bucket(len(wave), self.B)
+        P = _bucket(P_real, self.max_len)
+        toks = np.zeros((W, P), np.int32)
+        lens = np.zeros((W,), np.int32)
         for i, (_, r) in enumerate(wave):
             toks[i, : len(r.prompt)] = r.prompt
             lens[i] = len(r.prompt)
@@ -123,11 +143,17 @@ class Engine:
         if not active:
             return
         toks = np.zeros(self.B, np.int32)
+        act = np.zeros(self.B, bool)
         for i in active:
             toks[i] = self.slot_req[i].out_tokens[-1]
+            act[i] = True
+        # Inactive slots still ride through the batched step (their logits
+        # are discarded) but the active mask freezes their cache rows — a
+        # freed slot stays inert instead of ring-writing garbage at its
+        # stale cur every step.
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self.cur, jnp.int32))
+            jnp.asarray(self.cur, jnp.int32), jnp.asarray(act))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i in active:
             r = self.slot_req[i]

@@ -1,0 +1,255 @@
+"""Backend equivalence: the pallas kernel path (interpret mode on CPU)
+must produce the same logits as the einsum reference path through full
+``prefill`` + multi-step ``decode_step`` — dense, latent (ReCalKV),
+int8 quantized-latent, and sliding-window configs, including ring/sequence
+lengths not divisible by the kernel tile size."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.models import transformer as T
+from repro.serving import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch="qwen3-4b", backend="einsum", **extra):
+    kw = {k: extra.pop(k) for k in ("recalkv_ratio",) if k in extra}
+    cfg = get_config(arch, smoke=True, **kw)
+    return dataclasses.replace(cfg, dtype=jnp.float32, attn_backend=backend,
+                               **extra)
+
+
+def _run(cfg, toks, lens, max_len, steps):
+    params = T.init_params(cfg, KEY)
+    logits, caches = T.prefill(cfg, params, toks, lens, max_len)
+    outs = [logits]
+    cur = lens.astype(jnp.int32)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(steps):
+        logits, caches = T.decode_step(cfg, params, caches, tok, cur)
+        outs.append(logits)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        cur = cur + 1
+    return outs
+
+
+CASES = {
+    # name: (arch, extra config fields)
+    "dense_qknorm": ("qwen3-4b", {}),
+    "latent": ("qwen3-4b", {"recalkv_ratio": 0.5}),
+    "quant_latent": ("qwen3-4b", {"recalkv_ratio": 0.5,
+                                  "cache_quant_bits": 8}),
+    "sliding_window": ("h2o-danube-1.8b", {}),
+}
+
+
+class TestBackendEquivalence:
+    @pytest.mark.parametrize("case", sorted(CASES))
+    def test_prefill_decode_logits_match(self, case):
+        arch, extra = CASES[case]
+        rng = np.random.default_rng(hash(case) % 2**31)
+        B, P, max_len = 2, 9, 37          # 37 % anything-pow2 != 0
+        vocab = get_config(arch, smoke=True).vocab_size
+        toks = jnp.asarray(rng.integers(0, vocab, (B, P)), jnp.int32)
+        lens = jnp.asarray([P, P - 3], jnp.int32)
+        ref = _run(_cfg(arch, "einsum", **extra), toks, lens, max_len, steps=4)
+        ker = _run(_cfg(arch, "pallas", **extra), toks, lens, max_len, steps=4)
+        for i, (a, b) in enumerate(zip(ref, ker)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=2e-4, atol=2e-4,
+                                       err_msg=f"{case} step {i}")
+
+    @pytest.mark.slow
+    def test_tail_tiles_beyond_one_block(self):
+        """Prefill T and ring length both above (and not divisible by) the
+        256 kernel tile: the padded tail must stay masked."""
+        rng = np.random.default_rng(7)
+        cfg_e = _cfg("qwen3-4b", "einsum", recalkv_ratio=0.5)
+        toks = jnp.asarray(rng.integers(0, cfg_e.vocab_size, (2, 280)),
+                           jnp.int32)
+        lens = jnp.asarray([280, 133], jnp.int32)
+        ref = _run(cfg_e, toks, lens, max_len=300, steps=2)
+        ker = _run(_cfg("qwen3-4b", "pallas", recalkv_ratio=0.5),
+                   toks, lens, max_len=300, steps=2)
+        for i, (a, b) in enumerate(zip(ref, ker)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=5e-4, atol=5e-4,
+                                       err_msg=f"step {i}")
+
+    def test_engine_end_to_end_tokens_match(self):
+        cfg = _cfg("qwen3-4b", recalkv_ratio=0.5)
+        params = T.init_params(cfg, KEY)
+        g = np.random.default_rng(3)
+        prompts = [g.integers(0, cfg.vocab_size, 5 + i).astype(np.int32)
+                   for i in range(4)]
+
+        def serve(backend):
+            eng = Engine(cfg, params, max_slots=2, max_len=37,
+                         backend=backend)
+            for i, pr in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=5))
+            done = eng.run()
+            return {r.uid: r.out_tokens for r in done}
+
+        assert serve("einsum") == serve("pallas")
+
+
+class TestTrainingStaysDifferentiable:
+    def test_grad_through_pallas_config(self):
+        """attn_backend="pallas" must not break jax.grad: the training
+        forward keeps the einsum path (kernels have no autodiff rule)."""
+        cfg = dataclasses.replace(_cfg("qwen3-4b", "pallas"), remat=False)
+        params = T.init_params(cfg, KEY)
+        toks = jnp.zeros((2, 8), jnp.int32)
+        labels = jnp.ones((2, 8), jnp.int32)
+
+        def loss(p):
+            return T.loss_fn(cfg, p, {"tokens": toks, "labels": labels})[0]
+
+        g = jax.grad(loss)(params)
+        assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))
+
+
+class TestMixedLengthWave:
+    @pytest.mark.parametrize("backend", ["einsum", "pallas"])
+    def test_short_prompt_survives_long_wavemate(self, backend):
+        """A short prompt admitted alongside one longer than its ring
+        (sliding window 16 < padded wave T) must decode exactly as solo —
+        the old bulk prefill write kept only the wave's last L columns for
+        every row, erasing the short row's prefix entirely."""
+        cfg = _cfg("h2o-danube-1.8b", backend)
+        params = T.init_params(cfg, KEY)
+        g = np.random.default_rng(31)
+        short = g.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        long_ = g.integers(0, cfg.vocab_size, 30).astype(np.int32)
+
+        eng = Engine(cfg, params, max_slots=2, max_len=48, backend=backend)
+        eng.submit(Request(uid=0, prompt=short.copy(), max_new_tokens=5))
+        eng.submit(Request(uid=1, prompt=long_.copy(), max_new_tokens=5))
+        done = {r.uid: r.out_tokens for r in eng.run()}
+
+        for uid, prompt in ((0, short), (1, long_)):
+            solo = Engine(cfg, params, max_slots=1, max_len=48,
+                          backend=backend)
+            solo.submit(Request(uid=uid, prompt=prompt.copy(),
+                                max_new_tokens=5))
+            assert done[uid] == solo.run()[0].out_tokens, f"uid={uid}"
+
+
+class TestInterpretResolution:
+    def test_default_interpret_matches_platform(self):
+        assert ops.default_interpret() == (jax.default_backend() != "tpu")
+
+    def test_latent_decode_interpret_default(self):
+        """interpret=None resolves from the platform (no kwarg needed)."""
+        rng = np.random.default_rng(0)
+        B, S, G, rk, rv, s, qpk, dh = 1, 40, 1, 8, 8, 2, 2, 8
+        cache = {
+            "zk": jnp.asarray(rng.normal(size=(B, S, G, rk)), jnp.float32),
+            "zv": jnp.asarray(rng.normal(size=(B, S, G, rv)), jnp.float32),
+            "pos": jnp.broadcast_to(jnp.arange(S), (B, S)),
+        }
+        q = jnp.asarray(rng.normal(size=(B, s * qpk * G, dh)), jnp.float32)
+        r_k = jnp.asarray(rng.normal(size=(G, rk, s * dh)), jnp.float32)
+        cur = jnp.asarray([S - 1])
+        o = ops.latent_decode(q, cache, r_k, cur, theta=1e4, window=None,
+                              scale=dh ** -0.5, block_s=16)
+        o_ref = ops.latent_decode(q, cache, r_k, cur, theta=1e4, window=None,
+                                  scale=dh ** -0.5, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def _slot_rows(cache, i):
+    """Slot i's rows of every cache leaf (batch is dim 1 under blocks)."""
+    def one(path, leaf):
+        if getattr(path[0], "key", None) == "blocks":
+            return np.asarray(leaf[:, i])
+        return np.asarray(leaf[i])
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+class TestEngineSlotHygiene:
+    def test_freed_slot_cache_stays_inert(self):
+        """A finished request's slot must not mutate while other slots keep
+        decoding — before the active-mask fix every step ring-wrote the
+        idle slot's stale (token 0, pos=cur) entry into its cache."""
+        cfg = _cfg("qwen3-4b", recalkv_ratio=0.5)
+        params = T.init_params(cfg, KEY)
+        g = np.random.default_rng(11)
+
+        eng = Engine(cfg, params, max_slots=2, max_len=37)
+        eng.submit(Request(uid=0,
+                           prompt=g.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                           max_new_tokens=2))
+        eng.submit(Request(uid=1,
+                           prompt=g.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                           max_new_tokens=12))
+        eng.step()                  # admits both requests
+        while eng.slot_req[0] is not None:
+            eng.step()
+        frozen = _slot_rows(eng.cache, 0)
+        for _ in range(4):          # slot 1 keeps decoding, slot 0 is free
+            eng.step()
+        after = _slot_rows(eng.cache, 0)
+        for a, b in zip(jax.tree.leaves(frozen), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_readmission_into_freed_slot_matches_solo(self):
+        """A request admitted into a previously-used slot must decode
+        exactly as in a fresh single-slot engine."""
+        cfg = _cfg("qwen3-4b", recalkv_ratio=0.5)
+        params = T.init_params(cfg, KEY)
+        g = np.random.default_rng(12)
+        late = g.integers(0, cfg.vocab_size, 5).astype(np.int32)
+
+        eng = Engine(cfg, params, max_slots=2, max_len=37)
+        eng.submit(Request(uid=0,
+                           prompt=g.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                           max_new_tokens=2))
+        eng.submit(Request(uid=1,
+                           prompt=g.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                           max_new_tokens=10))
+        for _ in range(6):
+            eng.step()
+        eng.submit(Request(uid=2, prompt=late.copy(), max_new_tokens=6))
+        done = {r.uid: r.out_tokens for r in eng.run()}
+
+        solo = Engine(cfg, params, max_slots=1, max_len=37)
+        solo.submit(Request(uid=2, prompt=late.copy(), max_new_tokens=6))
+        assert done[2] == solo.run()[0].out_tokens
+
+    def test_prefill_shapes_bucketed(self):
+        """Ragged admission waves must reuse O(log) prefill traces."""
+        cfg = _cfg("qwen3-4b")
+        params = T.init_params(cfg, KEY)
+        eng = Engine(cfg, params, max_slots=4, max_len=40)
+        g = np.random.default_rng(5)
+        shapes = set()
+        orig = eng._prefill
+
+        def spy(p, t, l):
+            shapes.add(tuple(t.shape))
+            return orig(p, t, l)
+
+        eng._prefill = spy
+        waves = [(1, 3), (2, 5), (3, 6), (1, 7), (4, 9), (2, 11), (3, 13),
+                 (1, 17), (2, 19), (4, 21), (3, 23), (1, 26)]
+        for n, plen in waves:
+            for i in range(n):
+                eng.submit(Request(
+                    uid=1000 * n + plen * 10 + i,
+                    prompt=g.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                    max_new_tokens=1))
+            eng.run()
+        # every raw (wave, prompt) shape is distinct; buckets collapse them
+        assert len(shapes) < len(set(waves))
+        for w, p in shapes:
+            assert w == w & -w and p == p & -p   # powers of two

@@ -194,3 +194,85 @@ class TestOpsWrapper:
         np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                    rtol=2e-4, atol=2e-4)
         assert out_k.shape == (B, H, rv)
+
+
+class TestTailTiles:
+    """Ring/sequence lengths not divisible by the tile size: the kernels
+    must pad and mask the tail internally (the engine's max_len is
+    user-chosen and rarely a multiple of 256)."""
+
+    @pytest.mark.parametrize("S", [100, 300, 129])
+    def test_latent_decode_ragged_ring(self, S):
+        rng = np.random.default_rng(S)
+        q, zk, zv, r_k, cos, sin, bias = latent_inputs(
+            rng, 2, S, 2, 16, 16, 2, 2, 16, jnp.float32)
+        o_ref = ref.latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, 0.25)
+        o_ker = latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
+                                        scale=0.25, block_s=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_latent_decode_quant_ragged_ring(self):
+        from repro.quant import quantize
+        rng = np.random.default_rng(21)
+        q, zk, zv, r_k, cos, sin, bias = latent_inputs(
+            rng, 2, 150, 2, 16, 16, 2, 2, 16, jnp.float32)
+        zk_q, zk_s = quantize(zk, 8)
+        zv_q, zv_s = quantize(zv, 8)
+        o_ref = ref.latent_decode_attention_quant(
+            q, zk_q, zk_s[..., 0], zv_q, zv_s[..., 0], r_k, cos, sin, bias, 0.25)
+        o_ker = latent_decode_attention_quant(
+            q, zk_q, zk_s[..., 0], zv_q, zv_s[..., 0], r_k, cos, sin, bias,
+            scale=0.25, block_s=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("T,win", [(100, None), (200, 48), (70, None)])
+    def test_flash_prefill_ragged_seq(self, T, win):
+        rng = np.random.default_rng(T)
+        q = rnd(rng, 2, T, 4, 16)
+        k = rnd(rng, 2, T, 2, 16)
+        v = rnd(rng, 2, T, 2, 16)
+        o_ref = ref.flash_prefill_attention(q, k, v, causal=True, window=win)
+        o_ker = flash_prefill_attention(q, k, v, causal=True, window=win,
+                                        block_q=64, block_k=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_flash_prefill_latent_values(self):
+        """v may carry G latent groups instead of Hkv heads (latent
+        prefill: value group = query head // (H // G))."""
+        rng = np.random.default_rng(23)
+        B, T, H, Hkv, G, dh, rv = 1, 96, 8, 4, 2, 16, 12
+        q = rnd(rng, B, T, H, dh)
+        k = rnd(rng, B, T, Hkv, dh)
+        zv = rnd(rng, B, T, G, rv)
+        from repro.models import layers as L
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        o_model = L.chunked_attention(q, k, zv, pos, pos, window=None,
+                                      scale=dh ** -0.5, chunk=48,
+                                      latent_v=True, group_size=Hkv // G)
+        o_ker = flash_prefill_attention(q, k, zv, causal=True, block_q=32,
+                                        block_k=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_model),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_latent_decode_knorm(self):
+        """In-kernel qk-norm == reconstruct -> rmsnorm -> rope reference."""
+        from repro.models import layers as L
+        rng = np.random.default_rng(25)
+        B, S, G, rk, rv, s, qpk, dh = 1, 96, 1, 16, 16, 2, 2, 16
+        q, zk, zv, r_k, cos, sin, bias = latent_inputs(
+            rng, B, S, G, rk, rv, s, qpk, dh, jnp.float32)
+        kn = rnd(rng, dh, scale=0.1)
+        # oracle: norm the reconstructed (pre-RoPE) keys, then defer to ref
+        k = jnp.einsum("bsgr,grn->bsgn", zk, r_k).reshape(B, S, G * s, dh)
+        k = L.rmsnorm(k, kn)
+        zk_n = k.reshape(B, S, G, s * dh)
+        eye = jnp.broadcast_to(jnp.eye(s * dh, dtype=zk.dtype), (G, s * dh, s * dh))
+        o_ref = ref.latent_decode_attention(q, zk_n, zv, eye, cos, sin, bias, 0.25)
+        o_ker = latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
+                                        scale=0.25, block_s=32, interpret=True,
+                                        k_norm=kn)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   rtol=2e-4, atol=2e-4)
