@@ -27,7 +27,7 @@ from repro.data import DataConfig, batch as data_batch, sequence
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig
 from repro.runtime import TrainConfig, train_loop
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, SamplingParams
 
 
 def build_model(steps: int):
@@ -70,7 +70,8 @@ def serve_engine(eng, prompts, new_tokens):
     cache_bytes = sum(l.size * l.dtype.itemsize
                       for l in jax.tree.leaves(eng.cache))
     outs = {r.uid: r.out_tokens for r in done}
-    return {"tok_s": toks / dt, "cache_mb": cache_bytes / 2**20, "outs": outs}
+    return {"tok_s": toks / dt, "cache_mb": cache_bytes / 2**20, "outs": outs,
+            "syncs_per_tok": eng.metrics()["host_syncs_per_token"]}
 
 
 def main():
@@ -83,6 +84,10 @@ def main():
     ap.add_argument("--keep", type=float, default=0.5)
     ap.add_argument("--method", default="recalkv")
     ap.add_argument("--artifact-dir", default="experiments/serve_artifact")
+    ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (deterministic dense-vs-compressed "
+                         "agreement check)")
     args = ap.parse_args()
 
     print("[1/4] training the dense checkpoint ...")
@@ -97,21 +102,26 @@ def main():
     prompts = [np.asarray(sequence(dc, "valid", 50 + i)[: int(g.integers(8, 32))],
                           np.int32) for i in range(args.requests)]
     print("[4/4] serving", args.requests, "requests on both engines ...")
+    sampling = SamplingParams(temperature=args.temperature)
     dense = serve_engine(
-        Engine(cfg, params, max_slots=args.slots, max_len=args.max_len),
+        Engine(cfg, params, max_slots=args.slots, max_len=args.max_len,
+               sampling=sampling, sync_every=args.sync_every),
         prompts, args.new_tokens)
     # the compressed engine boots from disk — nothing in-memory crosses over
     comp = serve_engine(
         Engine.from_artifact(args.artifact_dir, max_slots=args.slots,
-                             max_len=args.max_len),
+                             max_len=args.max_len, sampling=sampling,
+                             sync_every=args.sync_every),
         prompts, args.new_tokens)
 
     agree = np.mean([
         np.mean(np.asarray(dense["outs"][i]) == np.asarray(comp["outs"][i]))
         for i in range(args.requests)])
-    print(f"\ndense   : {dense['tok_s']:6.1f} tok/s  cache {dense['cache_mb']:.2f} MiB")
+    print(f"\ndense   : {dense['tok_s']:6.1f} tok/s  cache {dense['cache_mb']:.2f} MiB  "
+          f"{dense['syncs_per_tok']:.3f} syncs/tok")
     print(f"{args.method:8s}: {comp['tok_s']:6.1f} tok/s  cache {comp['cache_mb']:.2f} MiB "
-          f"({comp['cache_mb']/dense['cache_mb']:.0%} of dense)")
+          f"({comp['cache_mb']/dense['cache_mb']:.0%} of dense)  "
+          f"{comp['syncs_per_tok']:.3f} syncs/tok")
     print(f"greedy agreement vs dense: {agree:.0%}")
     print(f"artifact on disk: {os.path.abspath(args.artifact_dir)}")
 

@@ -5,7 +5,9 @@
 
 Strategies are pluggable (see ``register_strategy``); compressed models
 are durable artifacts that round-trip across process boundaries and serve
-via ``repro.serving.Engine.from_artifact``.
+via ``repro.serving.Engine.from_artifact``, which accepts the serving
+knobs re-exported here (``SamplingParams``, ``sync_every``,
+``prefill_chunk``).
 """
 
 from repro.api.artifact import (
@@ -23,10 +25,11 @@ from repro.api.registry import (
 )
 from repro.api.spec import CalibrationData, CompressionSpec, RankPolicy
 from repro.api import strategies as _builtin_strategies  # registers built-ins
+from repro.serving.sampler import SamplingParams  # serving-knob re-export
 
 __all__ = [
     "CalibrationData", "CompressionArtifact", "CompressionSpec",
-    "KVCompressor", "RankPolicy", "calibrate", "compress", "get_strategy",
-    "list_strategies", "load_artifact", "register_strategy", "save_artifact",
-    "unregister_strategy",
+    "KVCompressor", "RankPolicy", "SamplingParams", "calibrate", "compress",
+    "get_strategy", "list_strategies", "load_artifact", "register_strategy",
+    "save_artifact", "unregister_strategy",
 ]

@@ -1,14 +1,14 @@
 """Serving launcher: continuous-batching demo over a (compressed) model.
 
 ``python -m repro.launch.serve --arch qwen3-4b --smoke --requests 8``
-spins up the slot engine, feeds it synthetic prompts, and reports
-throughput + cache-bytes, comparing dense vs ReCalKV cache footprints.
+spins up the scheduler/sampler/executor engine, feeds it synthetic
+prompts, and reports throughput, host-sync rate, slot occupancy and
+queue depth, comparing dense vs ReCalKV cache footprints.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs import ARCHS, RECALKV_APPLICABLE, get_config
 from repro.models import transformer as T
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, SamplingParams
 
 
 def cache_bytes(tree) -> int:
@@ -37,6 +37,15 @@ def main(argv=None):
     ap.add_argument("--backend", choices=("einsum", "pallas"), default=None,
                     help="attention backend (pallas = fused kernels; "
                          "interpret mode off-TPU)")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode tokens per host sync (fused window size)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admit prompts in chunks of this many tokens")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = disabled")
+    ap.add_argument("--top-p", type=float, default=1.0, help="1 = disabled")
+    ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
     args = ap.parse_args(argv)
 
     kw = {"smoke": args.smoke}
@@ -53,10 +62,15 @@ def main(argv=None):
             np.random.default_rng(0).normal(
                 size=(args.slots, cfg.cross_source_len, cfg.d_model)),
             cfg.dtype)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              top_p=args.top_p, seed=args.seed)
     eng = Engine(cfg, params, max_slots=args.slots, max_len=args.max_len,
-                 source=src, backend=args.backend)
+                 source=src, backend=args.backend, sampling=sampling,
+                 sync_every=args.sync_every,
+                 prefill_chunk=args.prefill_chunk)
     print(f"[serve] {cfg.name}: cache {cache_bytes(eng.cache)/2**20:.1f} MiB "
-          f"({args.slots} slots x {args.max_len} positions)")
+          f"({args.slots} slots x {args.max_len} positions), "
+          f"sync_every={args.sync_every}")
 
     g = np.random.default_rng(1)
     for i in range(args.requests):
@@ -64,12 +78,16 @@ def main(argv=None):
         eng.submit(Request(
             uid=i, prompt=g.integers(0, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=args.new_tokens))
-    t0 = time.time()
     finished = eng.run()
-    dt = time.time() - t0
-    toks = sum(len(r.out_tokens) for r in finished)
-    print(f"[serve] {len(finished)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s)")
+    m = eng.metrics()
+    print(f"[serve] {len(finished)} requests, {m['tokens']} tokens in "
+          f"{m['run_seconds']:.1f}s ({m['tokens_per_s']:.1f} tok/s)")
+    print(f"[serve] host syncs/token {m['host_syncs_per_token']:.3f} "
+          f"(decode windows: {m['decode_syncs_per_token']:.3f}), "
+          f"occupancy {m['occupancy_mean']:.2f}/{args.slots}, "
+          f"queue depth {m['queue_depth_mean']:.2f}")
+    if eng.unfinished["queued"] or eng.unfinished["in_flight"]:
+        print(f"[serve] WARNING unfinished: {eng.unfinished}")
     return finished
 
 

@@ -587,3 +587,33 @@ def decode_step(cfg: ModelConfig, params: Params, caches: Params,
     caches = KC.apply_decode_writes(caches, updates, cur, active)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return logits_for(cfg, params, x)[:, 0], caches
+
+
+def decode_loop(cfg: ModelConfig, params: Params, caches: Params,
+                tokens: jax.Array, cur: jax.Array, steps: int, *,
+                active: jax.Array | None = None, rng: jax.Array | None = None,
+                sample_fn=None):
+    """Fused multi-token decode: ``steps`` iterations of step -> sample ->
+    feed under one ``lax.scan``, the sampled token living in device carry
+    (no host round-trip per token — the caller syncs once per loop).
+
+    tokens/cur: (B,) as in :func:`decode_step`.  ``sample_fn(logits, key)
+    -> (B,) int32`` picks the next token (greedy argmax when None; ``rng``
+    seeds the per-step key split, only used when sampling).  Returns
+    (caches, last_tokens, cur, out_tokens (B, steps))."""
+    key0 = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def body(carry, _):
+        caches, tok, cur, key = carry
+        logits, caches = decode_step(cfg, params, caches, tok, cur, active)
+        if sample_fn is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            nxt = sample_fn(logits, sub)
+        inc = 1 if active is None else active.astype(cur.dtype)
+        return (caches, nxt, cur + inc, key), nxt
+
+    (caches, tok, cur, _), toks = jax.lax.scan(
+        body, (caches, tokens, cur, key0), None, length=steps)
+    return caches, tok, cur, jnp.moveaxis(toks, 0, 1)

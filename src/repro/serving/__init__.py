@@ -1,3 +1,8 @@
-from repro.serving.engine import Engine, Request
+"""Serving subsystem: scheduler (admission) / sampler (token choice) /
+engine (executor with the fused device-resident decode loop)."""
 
-__all__ = ["Engine", "Request"]
+from repro.serving.engine import Engine
+from repro.serving.sampler import SamplingParams
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["Engine", "Request", "SamplingParams", "Scheduler"]

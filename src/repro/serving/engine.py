@@ -1,11 +1,24 @@
-"""Slot-based continuous-batching serving engine over the latent KV cache.
+"""Executor: continuous batching over the latent KV cache with a fused,
+device-resident multi-token decode loop.
 
-A fixed pool of B slots holds independent sequences at arbitrary positions
-(per-slot ``cur``); each engine step runs ONE batched decode_step across
-all active slots, samples, appends, admits queued requests into freed
-slots, and returns finished sequences.  Prefill runs aligned/right-padded
-per admission wave and scatters the new latents into the slot's rows of the
-shared cache.
+The serving subsystem is split three ways:
+
+  scheduler.py  admission policy, slot lifecycle, chunked prefill (host)
+  sampler.py    on-device temperature / top-k / top-p / greedy sampling
+  engine.py     this file — the executor.  One ``jax.lax.scan`` window
+                runs ``sync_every`` decode steps entirely on device
+                (feed -> decode_step -> sample -> append -> termination),
+                carrying last-token, cur, active-mask, PRNG keys, ingest
+                buffers and done-flags as device state.  The host is
+                touched once per window: harvest emitted tokens, retire
+                finished slots, refill prompt-ingest buffers, and run
+                admission (batched, shape-bucketed wave prefill).
+
+Chunked prefill rides the same loop: a long prompt's first
+``prefill_chunk`` tokens go through the wave prefill; the remainder sits
+in a per-slot device buffer and is *fed* through decode steps (cache
+writes at the token's true position, sampled outputs discarded until the
+final prompt token), so decode-phase slots keep emitting between chunks.
 
 With ReCalKV enabled the resident cache is the *latent* ring — at 50%
 compression the same HBM holds 2x the slots (the paper's serving win).
@@ -14,6 +27,8 @@ compression the same HBM holds 2x the slots (the paper's serving win).
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Any
 
 import jax
@@ -22,21 +37,11 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving import sampler as S
+from repro.serving.sampler import SamplingParams
+from repro.serving.scheduler import Request, Scheduler
 
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray              # (P,) int32
-    max_new_tokens: int = 32
-    eos_id: int | None = None
-    out_tokens: list[int] = dataclasses.field(default_factory=list)
-
-    @property
-    def done(self) -> bool:
-        if len(self.out_tokens) >= self.max_new_tokens:
-            return True
-        return bool(self.out_tokens) and self.out_tokens[-1] == self.eos_id
+__all__ = ["Engine", "Request", "SamplingParams"]
 
 
 def _merge_slot(pool_cache, new_cache, slots: jax.Array):
@@ -63,109 +68,338 @@ def _bucket(n: int, cap: int) -> int:
 
 
 class Engine:
+    """Slot-based continuous-batching executor.
+
+    ``sync_every`` sets the decode window: tokens decoded per
+    host round-trip.  Large windows amortize dispatch and host syncs
+    (throughput); small windows tighten admission latency for queued
+    requests and finished-slot turnaround (latency).
+    ``prefill_chunk`` bounds how much prompt one admission wave prefills
+    at once; the remainder streams through the decode loop.
+    """
+
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_len: int, source: jax.Array | None = None,
-                 backend: str | None = None):
+                 backend: str | None = None,
+                 sampling: SamplingParams | None = None,
+                 sync_every: int = 8, prefill_chunk: int | None = None):
         if backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=backend)
+        if sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
         self.cfg, self.params = cfg, params
         self.B, self.max_len = max_slots, max_len
         self.source = source
+        self.sampling = sampling or S.GREEDY
+        self.sync_every = sync_every
+        self.scheduler = Scheduler(max_slots, max_len,
+                                   prefill_chunk=prefill_chunk)
         self.cache = T.init_decode_cache(cfg, max_slots, max_len)
-        self.cur = np.zeros(max_slots, np.int64)          # next position
-        self.slot_req: list[Request | None] = [None] * max_slots
-        self.queue: list[Request] = []
         self.finished: list[Request] = []
-        self._decode = jax.jit(
-            lambda p, c, t, cur, act: T.decode_step(cfg, p, c, t, cur, act))
+        # per-slot host mirror of the device loop state (synced once per
+        # window); the cache itself never leaves the device
+        W = prefill_chunk or 1
+        self._st: dict[str, np.ndarray] = {
+            "tok": np.zeros(max_slots, np.int32),
+            "cur": np.zeros(max_slots, np.int32),
+            "act": np.zeros(max_slots, bool),
+            "keys": np.zeros((max_slots, 2), np.uint32),
+            "temp": np.zeros(max_slots, np.float32),
+            "top_k": np.zeros(max_slots, np.int32),
+            "top_p": np.ones(max_slots, np.float32),
+            "eos": np.full(max_slots, -1, np.int32),
+            "left": np.zeros(max_slots, np.int32),
+            "buf": np.zeros((max_slots, W), np.int32),
+            "avail": np.zeros(max_slots, np.int32),
+            "bpos": np.zeros(max_slots, np.int32),
+            "more": np.zeros(max_slots, bool),
+        }
+        # metrics
+        self.host_syncs = 0          # device->host harvest points
+        self.admission_syncs = 0     # host_syncs spent on wave prefills
+        self.windows = 0
+        self.tokens_emitted = 0      # emitted by decode windows
+        self._admit_tokens = 0       # first tokens emitted at admission
+        self._occupancy_sum = 0
+        self._queue_depth_sum = 0
+        self._run_seconds = 0.0
+
         self._prefill = jax.jit(
             lambda p, t, l: T.prefill(cfg, p, t, l, max_len=max_len,
                                       source=None if source is None
                                       else source[: t.shape[0]]),
             static_argnames=())
+        # Donate the cache buffer into the window: self.cache is rebound
+        # to the output, so XLA can update the ring in place instead of
+        # holding two full caches live — the cache IS the HBM footprint
+        # the paper halves.  (CPU ignores donation and would warn, so
+        # only donate where it takes effect.)
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        self._window = jax.jit(self._make_window(cfg, max_len, sync_every),
+                               donate_argnums=donate)
+
+    # -- fused decode window -------------------------------------------------
+
+    @staticmethod
+    def _make_window(cfg: ModelConfig, max_len: int, steps: int):
+        """Build the jitted window fn: ``steps`` fused decode iterations.
+
+        Per iteration, per slot: pick the fed token (ingest buffer while
+        prompt remains, else last sampled), run one batched decode_step
+        (inactive/stalled rows masked from cache writes), sample, then
+        update emit/termination flags — all under one lax.scan, so the
+        only host sync is the caller harvesting the stacked outputs."""
+
+        def window(params, cache, st):
+            def body(carry, _):
+                cache, st = carry
+                feeding = st["bpos"] < st["avail"]
+                buf_tok = jnp.take_along_axis(
+                    st["buf"],
+                    jnp.minimum(st["bpos"], st["buf"].shape[1] - 1)[:, None],
+                    axis=1)[:, 0]
+                tok_in = jnp.where(feeding, buf_tok, st["tok"])
+                # a slot whose ingest buffer drained but has prompt left on
+                # the host stalls (no step) until the next refill
+                stalled = st["more"] & ~feeding
+                stepping = st["act"] & ~stalled
+                logits, cache = T.decode_step(
+                    cfg, params, cache, tok_in, st["cur"], stepping)
+                ks = jax.vmap(lambda k: jax.random.split(k, 2))(st["keys"])
+                sampled = S.sample_tokens(logits, st["temp"], st["top_k"],
+                                          st["top_p"], ks[:, 1])
+                last_prompt = (feeding & ~st["more"]
+                               & (st["bpos"] + 1 >= st["avail"]))
+                emit = stepping & (~feeding | last_prompt)
+                cur2 = st["cur"] + stepping.astype(st["cur"].dtype)
+                left2 = st["left"] - emit.astype(st["left"].dtype)
+                # ring-cap stop: cur2 == max_len means this step wrote the
+                # last ring position — the NEXT write would wrap and evict
+                # position 0.  (Not max_len - 1: that fired one step early
+                # on the ingest path, costing cap-length chunked prompts
+                # their final token vs unchunked admission.)
+                done = (emit & ((sampled == st["eos"]) | (left2 <= 0))
+                        | (stepping & (cur2 >= max_len)))
+                st2 = {**st,
+                       "tok": jnp.where(emit, sampled, st["tok"]),
+                       "cur": cur2,
+                       "act": st["act"] & ~done,
+                       "keys": jnp.where(emit[:, None], ks[:, 0], st["keys"]),
+                       "bpos": st["bpos"] + feeding.astype(st["bpos"].dtype),
+                       "left": left2}
+                return (cache, st2), (sampled, emit)
+
+            (cache, st), (toks, emits) = jax.lax.scan(
+                body, (cache, st), None, length=steps)
+            return cache, st, toks, emits
+
+        return window
 
     @classmethod
     def from_artifact(cls, path: str, *, max_slots: int, max_len: int,
                       source: jax.Array | None = None,
-                      backend: str | None = None) -> "Engine":
+                      backend: str | None = None,
+                      sampling: SamplingParams | None = None,
+                      sync_every: int = 8,
+                      prefill_chunk: int | None = None) -> "Engine":
         """Boot an engine straight from a saved compression artifact —
         the compress-offline / serve-forever workflow across processes."""
         from repro.api import load_artifact  # local: api imports models too
 
         art = load_artifact(path)
         return cls(art.cfg, art.params, max_slots=max_slots, max_len=max_len,
-                   source=source, backend=backend)
+                   source=source, backend=backend, sampling=sampling,
+                   sync_every=sync_every, prefill_chunk=prefill_chunk)
+
+    # -- back-compat conveniences -------------------------------------------
+
+    @property
+    def slot_req(self) -> list[Request | None]:
+        return self.scheduler.slot_req
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def unfinished(self) -> dict[str, int]:
+        """Requests not yet finished: queued vs admitted-but-mid-flight."""
+        return {"queued": self.scheduler.queue_depth,
+                "in_flight": self.scheduler.occupancy}
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    def submit(self, req: Request) -> Request:
+        return self.scheduler.submit(req)
 
-    def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+    def _finish(self, slot: int):
+        self.finished.append(self.scheduler.slot_req[slot])
+        self.scheduler.release(slot)
+        st = self._st
+        st["act"][slot] = False
+        st["avail"][slot] = 0
+        st["bpos"][slot] = 0
+        st["more"][slot] = False
+        st["left"][slot] = 0
 
     def _admit(self):
-        free = self._free_slots()
-        wave = []
-        while free and self.queue:
-            slot = free.pop(0)
-            req = self.queue.pop(0)
-            self.slot_req[slot] = req
-            wave.append((slot, req))
+        wave = self.scheduler.take_wave()
         if not wave:
             return
+        first_lens = [self.scheduler.first_chunk_len(r) for _, r in wave]
         # Bucket the wave to power-of-two (rows, prompt-len) shapes so a
         # stream of ragged admissions reuses O(log) jit traces.  The row
         # cap is the slot count; the length cap is max_len (padding past
         # the ring would silently drop a fittable prompt prefix).
-        P_real = max(len(r.prompt) for _, r in wave)
         W = _bucket(len(wave), self.B)
-        P = _bucket(P_real, self.max_len)
+        P = _bucket(max(first_lens), self.max_len)
         toks = np.zeros((W, P), np.int32)
         lens = np.zeros((W,), np.int32)
         for i, (_, r) in enumerate(wave):
-            toks[i, : len(r.prompt)] = r.prompt
-            lens[i] = len(r.prompt)
+            toks[i, : first_lens[i]] = r.prompt[: first_lens[i]]
+            lens[i] = first_lens[i]
         logits, new_cache = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray(lens))
         slots = jnp.asarray([s for s, _ in wave])
         self.cache = _merge_slot(self.cache, new_cache, slots)
-        first = np.asarray(jnp.argmax(logits, axis=-1))
+        # Sample each wave row's first token with the SAME policy + key
+        # split the decode window would use — a request's stream is then
+        # identical whether its first token comes from the wave prefill
+        # (whole prompt consumed) or from the loop's last ingest step
+        # (chunked).  At temperature=0 this is exact argmax, matching the
+        # seed engine.
+        specs = [r.sampling or self.sampling for _, r in wave]
+        keys0 = np.stack([sp.slot_key(r.uid)
+                          for sp, (_, r) in zip(specs, wave)])
+        ks = jax.vmap(lambda k: jax.random.split(k, 2))(jnp.asarray(keys0))
+        n = len(wave)
+        first = np.asarray(S.sample_tokens(
+            logits[:n],
+            jnp.asarray([sp.temperature for sp in specs], jnp.float32),
+            jnp.asarray([sp.top_k for sp in specs], jnp.int32),
+            jnp.asarray([sp.top_p for sp in specs], jnp.float32),
+            ks[:, 1]))
+        ks = np.asarray(ks)
+        self.host_syncs += 1
+        self.admission_syncs += 1
+        st = self._st
         for i, (slot, r) in enumerate(wave):
-            r.out_tokens.append(int(first[i]))
-            self.cur[slot] = lens[i]
+            sp = specs[i]
+            st["cur"][slot] = first_lens[i]
+            st["keys"][slot] = keys0[i]
+            st["temp"][slot] = sp.temperature
+            st["top_k"][slot] = sp.top_k
+            st["top_p"][slot] = sp.top_p
+            st["eos"][slot] = -1 if r.eos_id is None else r.eos_id
+            st["bpos"][slot] = 0
+            st["act"][slot] = True
+            rest = r.prompt[first_lens[i]:]
+            if rest.size == 0:
+                # whole prompt prefilled: emit the first generated token
+                # right away (as the seed engine did) and advance the key
+                st["keys"][slot] = ks[i, 0]
+                r.out_tokens.append(int(first[i]))
+                self._admit_tokens += 1
+                st["tok"][slot] = first[i]
+                st["left"][slot] = r.max_new_tokens - 1
+                st["avail"][slot] = 0
+                st["more"][slot] = False
+                if r.done:
+                    self._finish(slot)
+            else:
+                # chunked prefill: stream the remainder through the
+                # decode loop's ingest buffer
+                self.scheduler.set_pending(slot, rest)
+                self._load_chunk(slot)
+                st["tok"][slot] = 0
+                st["left"][slot] = r.max_new_tokens
 
-    # -- one engine step ----------------------------------------------------
+    def _load_chunk(self, slot: int):
+        chunk = self.scheduler.next_chunk(slot)
+        st = self._st
+        w = chunk.shape[0]
+        st["buf"][slot, :w] = chunk
+        st["avail"][slot] = w
+        st["bpos"][slot] = 0
+        st["more"][slot] = self.scheduler.pending_len(slot) > 0
+
+    def _refill(self):
+        st = self._st
+        for slot, r in enumerate(self.scheduler.slot_req):
+            if (r is not None and st["act"][slot]
+                    and st["bpos"][slot] >= st["avail"][slot]
+                    and self.scheduler.pending_len(slot) > 0):
+                self._load_chunk(slot)
+
+    # -- one engine step (= one decode window) -------------------------------
 
     def step(self):
+        """Admit + refill, then run one ``sync_every``-token fused decode
+        window and harvest it (the single host sync of the step)."""
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+        self._refill()
+        st = self._st
+        if not st["act"].any():
             return
-        toks = np.zeros(self.B, np.int32)
-        act = np.zeros(self.B, bool)
-        for i in active:
-            toks[i] = self.slot_req[i].out_tokens[-1]
-            act[i] = True
-        # Inactive slots still ride through the batched step (their logits
-        # are discarded) but the active mask freezes their cache rows — a
-        # freed slot stays inert instead of ring-writing garbage at its
-        # stale cur every step.
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self.cur, jnp.int32), jnp.asarray(act))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i in active:
-            r = self.slot_req[i]
-            self.cur[i] += 1
-            r.out_tokens.append(int(nxt[i]))
-            if r.done or self.cur[i] >= self.max_len - 1:
-                self.finished.append(r)
-                self.slot_req[i] = None
+        self._occupancy_sum += self.scheduler.occupancy
+        self._queue_depth_sum += self.scheduler.queue_depth
+        state = {k: jnp.asarray(v) for k, v in st.items()}
+        self.cache, state, toks, emits = self._window(
+            self.params, self.cache, state)
+        self._harvest(state, toks, emits)
+
+    def _harvest(self, state, toks, emits):
+        toks = np.asarray(toks)                 # (K, B)
+        emits = np.asarray(emits)               # (K, B)
+        self._st = {k: np.array(v) for k, v in state.items()}
+        self.host_syncs += 1
+        self.windows += 1
+        self.tokens_emitted += int(emits.sum())
+        slot_req = self.scheduler.slot_req
+        for k in range(toks.shape[0]):
+            for i in np.nonzero(emits[k])[0]:
+                slot_req[i].out_tokens.append(int(toks[k, i]))
+        for slot, r in enumerate(slot_req):
+            if r is not None and not self._st["act"][slot]:
+                self._finish(slot)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Drive until drained or ``max_steps`` windows.  On timeout the
+        engine warns and leaves the backlog inspectable via
+        ``engine.unfinished`` (callers distinguish drain from timeout)."""
+        t0 = time.perf_counter()
         steps = 0
-        while (self.queue or any(self.slot_req)) and steps < max_steps:
+        while self.scheduler.has_work and steps < max_steps:
             self.step()
             steps += 1
+        self._run_seconds += time.perf_counter() - t0
+        if self.scheduler.has_work:
+            u = self.unfinished
+            warnings.warn(
+                f"Engine.run stopped at max_steps={max_steps} with "
+                f"{u['queued']} queued and {u['in_flight']} in-flight "
+                f"requests unfinished (not a drain)", RuntimeWarning,
+                stacklevel=2)
         return self.finished
+
+    # -- metrics -------------------------------------------------------------
+
+    def metrics(self) -> dict[str, Any]:
+        """Serving counters since construction (host_syncs counts one per
+        decode-window harvest plus one per admission wave)."""
+        tokens = self.tokens_emitted + self._admit_tokens
+        w = max(self.windows, 1)
+        return {
+            "tokens": tokens,
+            "windows": self.windows,
+            "sync_every": self.sync_every,
+            "host_syncs": self.host_syncs,
+            "admission_syncs": self.admission_syncs,
+            "host_syncs_per_token": self.host_syncs / max(tokens, 1),
+            "decode_syncs_per_token": self.windows / max(self.tokens_emitted, 1),
+            "occupancy_mean": self._occupancy_sum / w,
+            "queue_depth_mean": self._queue_depth_sum / w,
+            "run_seconds": self._run_seconds,
+            "tokens_per_s": tokens / self._run_seconds
+                            if self._run_seconds else 0.0,
+        }

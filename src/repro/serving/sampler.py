@@ -1,0 +1,106 @@
+"""On-device token sampling for the serving engine.
+
+``SamplingParams`` is the per-request policy (greedy / temperature /
+top-k / top-p); ``sample_tokens`` is the batched, jit-friendly kernel the
+executor's fused decode loop calls every step.  Every knob is a per-slot
+*array* (not a Python value), so one trace serves any mix of requests —
+a greedy slot and a top-p slot ride the same ``lax.scan`` iteration.
+
+Determinism: each slot carries its own PRNG key (derived from
+``SamplingParams.seed`` and the request uid), advanced once per *emitted*
+token — a request's sampled stream is therefore reproducible run-to-run
+and independent of its batch-mates or of scheduler stalls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = jnp.float32(-1e30)
+_TEMP_EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding policy.
+
+    temperature  0.0 -> greedy argmax (exact parity with the seed engine);
+                 otherwise logits are scaled by 1/temperature.
+    top_k        keep only the k highest logits (0 -> disabled).
+    top_p        keep the minimal nucleus whose probability mass reaches
+                 top_p, computed on the temperature-scaled distribution
+                 after top-k (1.0 -> disabled).
+    seed         folded with the request uid into the slot's PRNG key.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+
+    def slot_key(self, uid: int) -> np.ndarray:
+        """The (2,) uint32 PRNG key a slot starts from for this request."""
+        return np.asarray(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), uid))
+
+
+GREEDY = SamplingParams()
+
+
+def filtered_logits(logits: jax.Array, top_k: jax.Array,
+                    top_p: jax.Array) -> jax.Array:
+    """Apply per-row top-k then minimal-nucleus top-p masking.
+
+    logits (B, V) float32; top_k (B,) int32 (0 disables); top_p (B,)
+    float32 (>= 1 disables).  Top-k keeps *exactly* k entries (ties broken
+    by argsort order); top-p keeps the smallest prefix of the sorted
+    distribution whose cumulative probability reaches top_p (the entry
+    that crosses the threshold is kept; the top-1 always survives).
+    """
+    V = logits.shape[-1]
+    order = jnp.argsort(-logits, axis=-1)            # descending indices
+    ranks = jnp.argsort(order, axis=-1)              # rank of each entry
+    k = jnp.where(top_k > 0, jnp.minimum(top_k, V), V)
+    keep_k = ranks < k[:, None]
+    masked = jnp.where(keep_k, logits, NEG_INF)
+
+    sorted_l = jnp.take_along_axis(masked, order, axis=-1)
+    probs = jax.nn.softmax(sorted_l, axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs      # mass strictly above
+    keep_sorted = before < top_p[:, None]
+    keep_sorted = keep_sorted.at[:, 0].set(True)
+    keep_p = jnp.take_along_axis(keep_sorted, ranks, axis=-1)
+    return jnp.where(keep_k & keep_p, logits, NEG_INF)
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array,
+                  keys: jax.Array) -> jax.Array:
+    """One sampled token per row.  logits (B, V); knobs (B,) arrays;
+    keys (B, 2) uint32 per-slot PRNG keys (use-once — the caller carries
+    the split).  Rows with temperature <= 0 return exact argmax; an
+    all-greedy batch skips the sort-based filtering entirely (lax.cond),
+    so a greedy serving engine pays nothing for the sampling machinery."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def sampled(_):
+        t = jnp.maximum(temperature, _TEMP_EPS)[:, None]
+        masked = filtered_logits(logits / t, top_k, top_p)
+        s = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
+        return jnp.where(temperature <= 0.0, greedy, s)
+
+    return jax.lax.cond(jnp.all(temperature <= 0.0),
+                        lambda _: greedy, sampled, None)

@@ -1,0 +1,141 @@
+"""Admission policy and slot lifecycle for the serving engine.
+
+The scheduler owns everything *about requests* that is not model math:
+the FIFO queue, the slot -> request map, per-slot un-ingested prompt
+remainders (chunked prefill), and admission-time validation.  The
+executor (``engine.Engine``) asks it for admission waves and prompt
+chunks and tells it when slots finish; it never touches device state.
+
+Chunked prefill: a prompt longer than ``prefill_chunk`` is admitted in
+pieces — the first ``prefill_chunk`` tokens go through the batched wave
+prefill, the remainder is streamed through the decode loop's ingest
+buffer chunk by chunk, so one long prompt never stalls the whole decode
+batch behind a single huge prefill wave.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.serving.sampler import SamplingParams
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                    # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    sampling: SamplingParams | None = None  # None -> engine default
+    truncate: bool = False                # allow prompt truncation at submit
+    truncated: bool = False               # set when truncation happened
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.out_tokens) >= self.max_new_tokens:
+            return True
+        return bool(self.out_tokens) and self.out_tokens[-1] == self.eos_id
+
+
+class Scheduler:
+    """FIFO admission + slot lifecycle + chunked-prefill bookkeeping."""
+
+    def __init__(self, max_slots: int, max_len: int,
+                 prefill_chunk: int | None = None):
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.queue: deque[Request] = deque()
+        self.slot_req: list[Request | None] = [None] * max_slots
+        # un-ingested prompt tail per slot (chunked prefill)
+        self._pending: list[np.ndarray | None] = [None] * max_slots
+        self.admitted_uids: list[int] = []    # admission order (FIFO audit)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> Request:
+        """Validate and enqueue.  The ring holds ``max_len`` positions and
+        generation needs at least one, so prompts are capped at
+        ``max_len - 1``: longer ones raise, or are truncated to their
+        *last* max_len - 1 tokens when ``req.truncate`` is set."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        cap = self.max_len - 1
+        if prompt.shape[0] > cap:
+            if not req.truncate:
+                raise ValueError(
+                    f"request uid={req.uid}: prompt length {prompt.shape[0]} "
+                    f"exceeds the engine's max_len - 1 = {cap} (the ring "
+                    f"needs one free position to generate); shorten the "
+                    f"prompt, raise max_len, or set Request.truncate=True "
+                    f"to keep the last {cap} tokens")
+            prompt = prompt[-cap:]
+            req.truncated = True
+        if prompt.shape[0] == 0:
+            raise ValueError(f"request uid={req.uid}: empty prompt")
+        req.prompt = prompt
+        self.queue.append(req)
+        return req
+
+    # -- admission ----------------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def take_wave(self) -> list[tuple[int, Request]]:
+        """Admit queued requests into free slots, strictly FIFO."""
+        wave = []
+        free = self.free_slots()
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.popleft()
+            self.slot_req[slot] = req
+            self.admitted_uids.append(req.uid)
+            wave.append((slot, req))
+        return wave
+
+    def first_chunk_len(self, req: Request) -> int:
+        """Prompt tokens the admission wave prefill covers for ``req``."""
+        if self.prefill_chunk is None:
+            return len(req.prompt)
+        return min(len(req.prompt), self.prefill_chunk)
+
+    def set_pending(self, slot: int, rest: np.ndarray):
+        self._pending[slot] = rest if rest.size else None
+
+    def pending_len(self, slot: int) -> int:
+        p = self._pending[slot]
+        return 0 if p is None else int(p.shape[0])
+
+    def next_chunk(self, slot: int) -> np.ndarray:
+        """Pop the next <= prefill_chunk pending prompt tokens for a slot."""
+        p = self._pending[slot]
+        if p is None:
+            return np.zeros((0,), np.int32)
+        width = self.prefill_chunk or p.shape[0]
+        chunk, rest = p[:width], p[width:]
+        self._pending[slot] = rest if rest.size else None
+        return chunk
+
+    # -- lifecycle / metrics -------------------------------------------------
+
+    def release(self, slot: int):
+        self.slot_req[slot] = None
+        self._pending[slot] = None
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    @property
+    def occupancy(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)

@@ -1,0 +1,233 @@
+"""Scheduler: chunked prefill interleaving, FIFO admission under slot
+churn, submit-time validation, and run() timeout reporting."""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    cfg = get_config("qwen3-4b", smoke=True, **kw)
+    return dataclasses.replace(cfg, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg(recalkv_ratio=0.5)
+    return cfg, T.init_params(cfg, KEY)
+
+
+class TestChunkedPrefill:
+    def test_decode_progresses_between_chunks(self, model):
+        """A long prompt admitted in prefill_chunk pieces must not stall an
+        already-decoding slot: the decoder emits tokens while the long
+        prompt is still being ingested."""
+        cfg, params = model
+        g = np.random.default_rng(0)
+        eng = Engine(cfg, params, max_slots=2, max_len=40, sync_every=2,
+                     prefill_chunk=3)
+        short = g.integers(0, cfg.vocab_size, 4).astype(np.int32)
+        long_ = g.integers(0, cfg.vocab_size, 24).astype(np.int32)
+        eng.submit(Request(uid=0, prompt=short.copy(), max_new_tokens=20))
+        eng.step()                      # admits+starts the decoder slot
+        eng.submit(Request(uid=1, prompt=long_.copy(), max_new_tokens=4))
+        req1 = eng.queue[0]
+        progress = []                   # decoder token count per window
+        for _ in range(64):
+            if req1.out_tokens:         # long prompt fully ingested
+                break
+            eng.step()
+            req0 = eng.slot_req[0] or next(
+                r for r in eng.finished if r.uid == 0)
+            progress.append(len(req0.out_tokens))
+        assert req1.out_tokens, "long prompt never finished ingesting"
+        # the decoder kept emitting across >= 2 ingest windows
+        assert len(progress) >= 2
+        assert progress[-1] > progress[0]
+
+    def test_chunked_tokens_match_unchunked(self, model):
+        """Streaming a prompt through the ingest path must produce the
+        same greedy continuation as one full prefill."""
+        cfg, params = model
+        g = np.random.default_rng(1)
+        long_ = g.integers(0, cfg.vocab_size, 21).astype(np.int32)
+
+        def serve(chunk):
+            eng = Engine(cfg, params, max_slots=2, max_len=40, sync_every=4,
+                         prefill_chunk=chunk)
+            eng.submit(Request(uid=0, prompt=long_.copy(), max_new_tokens=6))
+            return eng.run()[0].out_tokens
+
+        ref = serve(None)
+        assert serve(4) == ref
+        assert serve(7) == ref          # chunk not dividing the prompt
+
+    def test_cap_length_prompt_chunked_matches_unchunked(self, model):
+        """Regression: the ring-cap stop used to fire one step early on
+        the ingest path — a max_len-1 prompt admitted chunked lost its
+        final token vs the same prompt through one full prefill."""
+        cfg, params = model
+        g = np.random.default_rng(8)
+        prompt = g.integers(0, cfg.vocab_size, 15).astype(np.int32)
+
+        def serve(chunk):
+            eng = Engine(cfg, params, max_slots=1, max_len=16,
+                         prefill_chunk=chunk)
+            eng.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=5))
+            return eng.run()[0].out_tokens
+
+        ref = serve(None)
+        assert len(ref) == 2            # ring full after one decode write
+        assert serve(4) == ref
+
+    def test_sampled_stream_invariant_to_chunking(self, model):
+        """Regression: the first generated token used to be the prefill
+        argmax for unchunked admission but a sampler draw for chunked —
+        a sampled request's stream must not depend on prefill_chunk or
+        sync_every."""
+        from repro.serving import SamplingParams
+        cfg, params = model
+        g = np.random.default_rng(7)
+        long_ = g.integers(0, cfg.vocab_size, 18).astype(np.int32)
+        sp = SamplingParams(temperature=0.9, top_k=64, seed=13)
+
+        def serve(sync_every, chunk):
+            eng = Engine(cfg, params, max_slots=2, max_len=40, sampling=sp,
+                         sync_every=sync_every, prefill_chunk=chunk)
+            eng.submit(Request(uid=0, prompt=long_.copy(), max_new_tokens=8))
+            return eng.run()[0].out_tokens
+
+        ref = serve(8, None)
+        assert serve(8, 5) == ref
+        assert serve(3, 4) == ref
+
+    def test_chunk_boundary_cases(self, model):
+        """chunk == len, chunk > len, chunk == 1 all serve correctly."""
+        cfg, params = model
+        g = np.random.default_rng(2)
+        prompt = g.integers(0, cfg.vocab_size, 6).astype(np.int32)
+
+        def serve(chunk):
+            eng = Engine(cfg, params, max_slots=1, max_len=40,
+                         prefill_chunk=chunk)
+            eng.submit(Request(uid=0, prompt=prompt.copy(), max_new_tokens=4))
+            return eng.run()[0].out_tokens
+
+        ref = serve(None)
+        assert serve(6) == ref
+        assert serve(100) == ref
+        assert serve(1) == ref
+
+
+class TestFIFO:
+    def test_admission_order_preserved_under_churn(self, model):
+        """Requests with wildly different lengths/budgets must still be
+        admitted strictly in submission order as slots free up."""
+        cfg, params = model
+        g = np.random.default_rng(3)
+        eng = Engine(cfg, params, max_slots=2, max_len=40, sync_every=2)
+        n = 7
+        for i in range(n):
+            plen = int(g.integers(3, 12))
+            eng.submit(Request(
+                uid=i, prompt=g.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=int(g.integers(2, 9))))
+        done = eng.run()
+        assert len(done) == n
+        assert eng.scheduler.admitted_uids == list(range(n))
+
+    def test_fifo_with_chunked_long_prompt_in_front(self, model):
+        """A long chunked prompt at the head of the queue must not be
+        overtaken at admission by later short requests."""
+        cfg, params = model
+        g = np.random.default_rng(4)
+        eng = Engine(cfg, params, max_slots=1, max_len=40, sync_every=2,
+                     prefill_chunk=4)
+        eng.submit(Request(uid=0,
+                           prompt=g.integers(0, cfg.vocab_size, 20).astype(np.int32),
+                           max_new_tokens=3))
+        eng.submit(Request(uid=1,
+                           prompt=g.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                           max_new_tokens=3))
+        done = eng.run()
+        assert eng.scheduler.admitted_uids == [0, 1]
+        assert len(done) == 2
+
+
+class TestSubmitValidation:
+    def test_overlong_prompt_rejected_with_clear_message(self, model):
+        """Regression: the seed engine crashed deep inside prefill when a
+        prompt exceeded max_len; now submit() rejects it up front."""
+        cfg, params = model
+        eng = Engine(cfg, params, max_slots=1, max_len=16)
+        prompt = np.arange(40, dtype=np.int32) % cfg.vocab_size
+        with pytest.raises(ValueError, match=r"max_len"):
+            eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=2))
+        assert eng.unfinished == {"queued": 0, "in_flight": 0}
+
+    def test_truncate_flag_keeps_tail_and_marks_request(self, model):
+        cfg, params = model
+        eng = Engine(cfg, params, max_slots=1, max_len=16)
+        prompt = (np.arange(40, dtype=np.int32) % cfg.vocab_size)
+        req = eng.submit(Request(uid=0, prompt=prompt.copy(),
+                                 max_new_tokens=3, truncate=True))
+        assert req.truncated
+        np.testing.assert_array_equal(req.prompt, prompt[-15:])
+        done = eng.run()
+        assert len(done) == 1 and len(done[0].out_tokens) >= 1
+
+    def test_exact_cap_prompt_is_accepted(self, model):
+        cfg, params = model
+        eng = Engine(cfg, params, max_slots=1, max_len=16)
+        prompt = (np.arange(15, dtype=np.int32) % cfg.vocab_size)
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+        done = eng.run()
+        assert len(done) == 1
+
+    def test_empty_prompt_rejected(self, model):
+        cfg, params = model
+        eng = Engine(cfg, params, max_slots=1, max_len=16)
+        with pytest.raises(ValueError, match="empty"):
+            eng.submit(Request(uid=0, prompt=np.zeros(0, np.int32)))
+
+
+class TestRunTimeout:
+    def test_timeout_warns_and_reports_unfinished(self, model):
+        """Regression: run(max_steps) used to return silently with work
+        still queued/mid-flight — callers could not tell drain from
+        timeout."""
+        cfg, params = model
+        g = np.random.default_rng(5)
+        eng = Engine(cfg, params, max_slots=1, max_len=40, sync_every=1)
+        for i in range(3):
+            eng.submit(Request(
+                uid=i, prompt=g.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                max_new_tokens=8))
+        with pytest.warns(RuntimeWarning, match="max_steps=1"):
+            eng.run(max_steps=1)
+        u = eng.unfinished
+        assert u["queued"] == 2 and u["in_flight"] == 1
+
+    def test_drain_does_not_warn(self, model):
+        cfg, params = model
+        g = np.random.default_rng(6)
+        eng = Engine(cfg, params, max_slots=2, max_len=40)
+        eng.submit(Request(uid=0,
+                           prompt=g.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                           max_new_tokens=3))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            done = eng.run()
+        assert not [w for w in caught if "max_steps" in str(w.message)]
+        assert len(done) == 1
+        assert eng.unfinished == {"queued": 0, "in_flight": 0}
