@@ -12,6 +12,14 @@ Each run APPENDS one trajectory row to ``BENCH_serving.json`` so the
 numbers are comparable across PRs.  On CPU the pallas rows run the
 kernels in interpret mode — a correctness trace whose ratio becomes a
 speed claim only on TPU.
+
+Mesh rows: the latent/einsum load is re-run over engine mesh shapes
+(``1x1`` and ``2x4``) so the sharded window's CPU overhead (collectives +
+forced host devices) is a recorded trajectory, not an anecdote.  A shape
+needing more devices than this process has is measured in a forced-host
+subprocess (``--one-mesh-row``), since the device count must be fixed
+before jax initializes.  The structural 1-sync-per-window assertion runs
+on every row, mesh rows included.
 """
 
 from __future__ import annotations
@@ -19,7 +27,10 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -27,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import mesh_from_spec
 from repro.models import transformer as T
 from repro.serving import Engine, Request
 
@@ -39,17 +51,19 @@ VARIANTS = {
     "int8_latent": ({"recalkv_ratio": 0.5}, {"cache_quant_bits": 8}),
 }
 
+MESH_SHAPES = ("1x1", "2x4")
+
 
 def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
                  max_len: int, requests: int, new_tokens: int,
-                 sync_every: int) -> dict:
+                 sync_every: int, mesh_spec: str | None = None) -> dict:
     kw, extra = VARIANTS[variant]
     cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
                               dtype=jnp.float32, attn_backend=backend,
                               **extra)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = Engine(cfg, params, max_slots=slots, max_len=max_len,
-                 sync_every=sync_every)
+                 sync_every=sync_every, mesh=mesh_from_spec(mesh_spec))
     g = np.random.default_rng(1)
     for i in range(requests):
         plen = int(g.integers(4, max_len // 3))
@@ -69,6 +83,10 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
     return {
         "variant": variant,
         "backend": backend,
+        "mesh": m["mesh"],
+        # per-row platform: the forced-host 2x4 row runs in a CPU
+        # subprocess even when the parent entry's platform is tpu/gpu
+        "platform": jax.default_backend(),
         "tokens": m["tokens"],
         "tokens_per_s": round(m["tokens_per_s"], 2),
         "host_syncs_per_token": round(m["host_syncs_per_token"], 4),
@@ -108,9 +126,69 @@ def bench_device_loop(arch: str, variant: str, *, slots: int, max_len: int,
     }
 
 
+def _subprocess_mesh_row(arch: str, shape: str, *, slots: int, max_len: int,
+                         requests: int, new_tokens: int,
+                         sync_every: int) -> dict:
+    """Measure a mesh shape needing more devices than this process has:
+    re-exec this script with forced host devices (XLA device count is
+    fixed at jax init, so it cannot change in-process)."""
+    need = math.prod(int(v) for v in shape.split("x"))
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    xla_flags = " ".join(filter(None, [
+        os.environ.get("XLA_FLAGS"),
+        f"--xla_force_host_platform_device_count={need}"]))
+    env = {**os.environ,
+           "XLA_FLAGS": xla_flags,
+           "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": src + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--one-mesh-row", shape, "--arch", arch,
+           "--slots", str(slots), "--max-len", str(max_len),
+           "--requests", str(requests), "--new-tokens", str(new_tokens),
+           "--sync-every", str(sync_every)]
+    res = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=1800)
+    if res.returncode != 0:
+        raise RuntimeError(f"mesh row {shape} subprocess failed:\n"
+                           f"{res.stderr[-3000:]}")
+    line = [l for l in res.stdout.splitlines() if l.startswith("MESHROW ")][0]
+    return json.loads(line[len("MESHROW "):])
+
+
+def bench_mesh_rows(arch: str, *, slots: int, max_len: int, requests: int,
+                    new_tokens: int, sync_every: int,
+                    have_rows: list[dict] | None = None) -> list[dict]:
+    """Latent/einsum load over engine mesh shapes (in-process when the
+    devices exist, forced-host subprocess otherwise).  Shapes already
+    covered by ``have_rows`` are skipped — the variant matrix's own
+    latent/einsum row IS the 1x1 measurement (the engine's default mesh
+    is (1, 1)), so it is not re-run."""
+    rows = []
+    kw = dict(slots=slots, max_len=max_len, requests=requests,
+              new_tokens=new_tokens, sync_every=sync_every)
+    for shape in MESH_SHAPES:
+        if any(r.get("mesh") == shape and r["variant"] == "latent"
+               and r["backend"] == "einsum" for r in have_rows or []):
+            continue
+        need = math.prod(int(v) for v in shape.split("x"))
+        t0 = time.time()
+        if need <= jax.local_device_count():
+            row = bench_engine(arch, "latent", "einsum", mesh_spec=shape,
+                               **kw)
+        else:
+            row = _subprocess_mesh_row(arch, shape, **kw)
+        row["bench_seconds"] = round(time.time() - t0, 1)
+        rows.append(row)
+        print(f"serving/latent/einsum/mesh={shape}: "
+              f"{row['tokens_per_s']:.1f} tok/s, "
+              f"{row['host_syncs_per_token']:.3f} syncs/tok")
+    return rows
+
+
 def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
         requests: int = 6, new_tokens: int = 16,
-        sync_every: int = 8) -> dict:
+        sync_every: int = 8, mesh_rows: bool = True) -> dict:
     rows = []
     for variant in VARIANTS:
         for backend in ("einsum", "pallas"):
@@ -124,8 +202,12 @@ def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
                   f"{row['tokens_per_s']:.1f} tok/s, "
                   f"{row['host_syncs_per_token']:.3f} syncs/tok, "
                   f"cache {row['cache_bytes']/2**20:.2f} MiB")
+    if mesh_rows:
+        rows += bench_mesh_rows(arch, slots=slots, max_len=max_len,
+                                requests=requests, new_tokens=new_tokens,
+                                sync_every=sync_every, have_rows=rows)
     # saturating multi-slot load -> the acceptance bound is demonstrated:
-    # <= 1 host sync per sync_every decoded tokens
+    # <= 1 host sync per sync_every decoded tokens (mesh rows included)
     if requests >= slots >= 2 and new_tokens >= 2 * sync_every:
         for row in rows:
             assert row["decode_syncs_per_token"] <= 1.0 / sync_every + 1e-9, row
@@ -165,11 +247,25 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--mesh-rows", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="append mesh-shape rows (1x1, 2x4 forced-host)")
+    ap.add_argument("--one-mesh-row", default=None, metavar="SHAPE",
+                    help="internal: print one mesh row as MESHROW json "
+                         "(run in a forced-host subprocess) and exit")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args(argv)
+    if args.one_mesh_row:
+        row = bench_engine(args.arch, "latent", "einsum", slots=args.slots,
+                           max_len=args.max_len, requests=args.requests,
+                           new_tokens=args.new_tokens,
+                           sync_every=args.sync_every,
+                           mesh_spec=args.one_mesh_row)
+        print("MESHROW " + json.dumps(row))
+        return
     entry = run(args.arch, slots=args.slots, max_len=args.max_len,
                 requests=args.requests, new_tokens=args.new_tokens,
-                sync_every=args.sync_every)
+                sync_every=args.sync_every, mesh_rows=args.mesh_rows)
     append_trajectory(entry, args.out)
     print(f"trajectory row appended to {os.path.abspath(args.out)}")
 

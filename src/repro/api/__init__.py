@@ -15,7 +15,7 @@ from repro.api.artifact import (
     load_artifact,
     save_artifact,
 )
-from repro.api.facade import calibrate, compress
+from repro.api.facade import calibrate, compress, serve
 from repro.api.registry import (
     KVCompressor,
     get_strategy,
@@ -31,5 +31,5 @@ __all__ = [
     "CalibrationData", "CompressionArtifact", "CompressionSpec",
     "KVCompressor", "RankPolicy", "SamplingParams", "calibrate", "compress",
     "get_strategy", "list_strategies", "load_artifact", "register_strategy",
-    "save_artifact", "unregister_strategy",
+    "save_artifact", "serve", "unregister_strategy",
 ]

@@ -1,17 +1,23 @@
-"""The two public verbs: ``calibrate`` once, ``compress`` many times.
+"""The three public verbs: ``calibrate`` once, ``compress`` many times,
+``serve`` anywhere.
 
     from repro.api import CompressionSpec, RankPolicy, calibrate, compress
+    from repro.launch import make_production_mesh
 
     calib = calibrate(cfg, params, batches, fisher=True)
     art = compress(cfg, params,
                    CompressionSpec("recalkv",
                                    rank_policy=RankPolicy(keep_ratio=0.5)),
                    calib)
-    art.save("experiments/qwen3_r50")      # later: Engine.from_artifact(...)
+    art.save("experiments/qwen3_r50")      # later: serve(...)
+    eng = serve(art, max_slots=128, max_len=32768,
+                mesh=make_production_mesh())
 
 ``compress`` also accepts the raw calibration batches directly (it will
 capture stats — and Fisher scores when the rank policy asks — itself) and
-a bare method name instead of a full spec.
+a bare method name instead of a full spec.  ``serve`` boots the
+mesh-native continuous-batching engine from an artifact (in-memory or a
+saved path) — the compress-offline / serve-forever workflow in one call.
 """
 
 from __future__ import annotations
@@ -86,3 +92,25 @@ def compress(cfg: ModelConfig, params: Any,
             else [list(r) for r in ccfg.recalkv.ranks_by_layer])
     return CompressionArtifact(cfg=ccfg, params=cparams,
                                provenance=provenance)
+
+
+def serve(artifact: CompressionArtifact | str, *, max_slots: int,
+          max_len: int, mesh=None, **engine_kw):
+    """Boot a serving :class:`repro.serving.Engine` from a compression
+    artifact — either the in-memory result of :func:`compress` or a path
+    produced by ``save_artifact``.
+
+    ``mesh`` (a ("data", "model") jax Mesh, see ``repro.launch.mesh``)
+    makes the engine mesh-native: params placed by the sharding rules,
+    the cache pool sharded slot x sequence, and the fused decode window
+    jitted with explicit in/out shardings.  Omitted, the same code path
+    runs on a degenerate single-device mesh.  Remaining ``engine_kw``
+    (``sampling``, ``sync_every``, ``prefill_chunk``, ``backend``,
+    ``source``) pass through to the Engine."""
+    from repro.serving.engine import Engine  # local: engine imports api too
+
+    if isinstance(artifact, str):
+        return Engine.from_artifact(artifact, max_slots=max_slots,
+                                    max_len=max_len, mesh=mesh, **engine_kw)
+    return Engine(artifact.cfg, artifact.params, max_slots=max_slots,
+                  max_len=max_len, mesh=mesh, **engine_kw)

@@ -10,18 +10,77 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh, passing Auto axis_types only where the jax version
+    has them (0.4.x predates jax.sharding.AxisType; Auto is its default
+    behavior there anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 v5e chips) or 2x16x16 (512 chips, 2 pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
-def make_test_mesh(data: int = 2, model: int = 2):
-    """Small host-device mesh for integration tests (requires
-    xla_force_host_platform_device_count >= data*model in that process)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+def make_test_mesh(data: int = 2, model: int = 2, *, skip: bool = False,
+                   degrade: bool = False):
+    """Small host-device mesh for integration tests.
+
+    Needs ``data * model`` addressable devices (force with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initializes).  When fewer exist:
+      * default       — raise with the XLA_FLAGS hint (no silent surprises);
+      * ``skip=True``    — ``pytest.skip`` (the shared guard for mesh tests,
+        so every test file stops hand-rolling its own device-count check);
+      * ``degrade=True`` — halve axes toward (1, 1) until the mesh fits,
+        so opportunistic callers (benches) still get *a* mesh.
+    """
+    have = len(jax.devices())
+    if data * model > have:
+        msg = (f"mesh ({data}, {model}) needs {data * model} devices, "
+               f"have {have}")
+        if jax.default_backend() == "cpu":
+            # only sensible advice on CPU — on an accelerator host forcing
+            # host-platform devices would silently serve on CPU instead
+            msg += (f"; set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={data * model} "
+                    f"before jax initializes")
+        if skip:
+            import pytest
+            pytest.skip(msg)
+        if not degrade:
+            raise RuntimeError(msg)
+        while data * model > have and model > 1:
+            model = (model + 1) // 2
+        while data * model > have and data > 1:
+            data = (data + 1) // 2
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def single_device_mesh():
+    """(1, 1) ("data", "model") mesh over the default device.
+
+    The serving engine's fallback: with it, the mesh-sharded window is the
+    ONLY code path — single-device serving is just the degenerate mesh,
+    not a separate branch."""
+    return _make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_from_spec(spec: str | None):
+    """Parse a ``--mesh`` CLI spec ("DATA,MODEL" or "DATAxMODEL", e.g.
+    "2,4" or "2x4") into a ("data", "model") mesh; None -> the
+    single-device fallback."""
+    if spec is None:
+        return single_device_mesh()
+    try:
+        data, model = (int(p) for p in spec.replace("x", ",").split(","))
+    except ValueError:
+        raise ValueError(f"--mesh expects DATA,MODEL (e.g. 2,4), got "
+                         f"{spec!r}") from None
+    return make_test_mesh(data, model)

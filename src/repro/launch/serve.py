@@ -4,6 +4,12 @@
 spins up the scheduler/sampler/executor engine, feeds it synthetic
 prompts, and reports throughput, host-sync rate, slot occupancy and
 queue depth, comparing dense vs ReCalKV cache footprints.
+
+``--mesh 2,4`` serves over a (data=2, model=4) mesh — slots shard over
+"data", the cache ring's sequence axis over "model" (force host devices
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to try it on
+CPU).  Without ``--mesh`` the engine runs the same code path on a
+degenerate (1, 1) mesh.
 """
 
 from __future__ import annotations
@@ -15,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, RECALKV_APPLICABLE, get_config
+from repro.launch.mesh import mesh_from_spec
 from repro.models import transformer as T
 from repro.serving import Engine, Request, SamplingParams
 
@@ -46,6 +53,9 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0, help="0 = disabled")
     ap.add_argument("--top-p", type=float, default=1.0, help="1 = disabled")
     ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="mesh shape, e.g. 2,4 (slots shard over data, "
+                         "cache sequence over model); default single-device")
     args = ap.parse_args(argv)
 
     kw = {"smoke": args.smoke}
@@ -67,10 +77,12 @@ def main(argv=None):
     eng = Engine(cfg, params, max_slots=args.slots, max_len=args.max_len,
                  source=src, backend=args.backend, sampling=sampling,
                  sync_every=args.sync_every,
-                 prefill_chunk=args.prefill_chunk)
+                 prefill_chunk=args.prefill_chunk,
+                 mesh=mesh_from_spec(args.mesh))
     print(f"[serve] {cfg.name}: cache {cache_bytes(eng.cache)/2**20:.1f} MiB "
           f"({args.slots} slots x {args.max_len} positions), "
-          f"sync_every={args.sync_every}")
+          f"sync_every={args.sync_every}, mesh={eng.mesh_str} "
+          f"({len(jax.devices())} devices)")
 
     g = np.random.default_rng(1)
     for i in range(args.requests):

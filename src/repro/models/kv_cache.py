@@ -418,6 +418,21 @@ def _merge(caches, updates, cur, stacked: bool, active):
     return _merge_leaf(caches, updates, cur, stacked, active)
 
 
+def constrain_caches(caches: Params, shardings) -> Params:
+    """Pin a cache pytree to ``shardings`` (a matching tree of
+    NamedShardings, or None for a no-op).
+
+    Called once per decode iteration, after ``apply_decode_writes``: the
+    fused loop's scan carry then *stays* slot x sequence sharded instead
+    of SPMD re-deriving the ring's layout from each iteration's mixed
+    (head-sharded params x sequence-sharded cache) contractions — a
+    layout flip inside the scan body would reshard the entire ring every
+    step."""
+    if shardings is None:
+        return caches
+    return jax.tree.map(jax.lax.with_sharding_constraint, caches, shardings)
+
+
 def apply_decode_writes(caches: Params, updates: Params, cur: jax.Array,
                         active: jax.Array | None = None) -> Params:
     """Merge deferred per-layer decode updates into the caches (§Perf it. 3).

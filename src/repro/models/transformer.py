@@ -577,14 +577,19 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def decode_step(cfg: ModelConfig, params: Params, caches: Params,
                 tokens: jax.Array, cur: jax.Array,
-                active: jax.Array | None = None):
+                active: jax.Array | None = None, *,
+                cache_shardings=None):
     """One decode step.  tokens: (B,) int32, cur: (B,) absolute positions.
     ``active`` (B,) bool masks cache writes for idle batch rows (serving
-    slots between requests).  Returns (logits (B, V), new caches)."""
+    slots between requests).  ``cache_shardings`` (optional NamedSharding
+    tree matching ``caches``) pins the updated cache's layout so a fused
+    multi-step loop never reshards its carry mid-scan.  Returns
+    (logits (B, V), new caches)."""
     x = embed_tokens(cfg, params, tokens[:, None])
     ctx = {"cur": cur}
     x, updates, _ = run_stack(cfg, params, x, ctx, caches=caches, decode=True)
     caches = KC.apply_decode_writes(caches, updates, cur, active)
+    caches = KC.constrain_caches(caches, cache_shardings)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return logits_for(cfg, params, x)[:, 0], caches
 
@@ -592,20 +597,24 @@ def decode_step(cfg: ModelConfig, params: Params, caches: Params,
 def decode_loop(cfg: ModelConfig, params: Params, caches: Params,
                 tokens: jax.Array, cur: jax.Array, steps: int, *,
                 active: jax.Array | None = None, rng: jax.Array | None = None,
-                sample_fn=None):
+                sample_fn=None, cache_shardings=None):
     """Fused multi-token decode: ``steps`` iterations of step -> sample ->
     feed under one ``lax.scan``, the sampled token living in device carry
     (no host round-trip per token — the caller syncs once per loop).
 
     tokens/cur: (B,) as in :func:`decode_step`.  ``sample_fn(logits, key)
     -> (B,) int32`` picks the next token (greedy argmax when None; ``rng``
-    seeds the per-step key split, only used when sampling).  Returns
-    (caches, last_tokens, cur, out_tokens (B, steps))."""
+    seeds the per-step key split, only used when sampling).
+    ``cache_shardings`` accepts pre-sharded caches: the scan carry is
+    pinned to that layout every iteration, so a mesh caller pays zero
+    reshards inside the loop.  Returns (caches, last_tokens, cur,
+    out_tokens (B, steps))."""
     key0 = rng if rng is not None else jax.random.PRNGKey(0)
 
     def body(carry, _):
         caches, tok, cur, key = carry
-        logits, caches = decode_step(cfg, params, caches, tok, cur, active)
+        logits, caches = decode_step(cfg, params, caches, tok, cur, active,
+                                     cache_shardings=cache_shardings)
         if sample_fn is None:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:

@@ -14,6 +14,17 @@ The serving subsystem is split three ways:
                 finished slots, refill prompt-ingest buffers, and run
                 admission (batched, shape-bucketed wave prefill).
 
+The engine is MESH-NATIVE: ``Engine(mesh=...)`` device-puts params via
+``sharding.rules.param_specs`` and jits the window with explicit
+``in_shardings``/``out_shardings`` — cache rings sharded slot x sequence
+per ``CACHE_RULES`` (the softmax over the sharded S axis becomes a psum
+LSE merge; the latent ``A @ z_v`` contraction psums only a tiny
+``(B, H, r_v)``, the low-rank win compounding with tensor parallelism),
+and the rest of the device carry (last-token, cur, active, per-slot PRNG
+keys, ingest buffer) sharded on the slot axis per ``carry_specs``.
+Without a mesh the engine runs on a degenerate (1, 1) mesh — the sharded
+window IS the single-device path, not a branch.
+
 Chunked prefill rides the same loop: a long prompt's first
 ``prefill_chunk`` tokens go through the wave prefill; the remainder sits
 in a per-slot device buffer and is *fed* through decode steps (cache
@@ -27,6 +38,7 @@ compression the same HBM holds 2x the slots (the paper's serving win).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 import warnings
 from typing import Any
@@ -35,11 +47,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.mesh import single_device_mesh
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving import sampler as S
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
+from repro.sharding import rules as R
 
 __all__ = ["Engine", "Request", "SamplingParams"]
 
@@ -76,25 +90,46 @@ class Engine:
     requests and finished-slot turnaround (latency).
     ``prefill_chunk`` bounds how much prompt one admission wave prefills
     at once; the remainder streams through the decode loop.
+    ``mesh`` is a ("data", "model") jax Mesh (see ``launch.mesh``); the
+    slot axis shards over "data", the cache ring's sequence axis over
+    "model".  Default: a (1, 1) single-device mesh.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_len: int, source: jax.Array | None = None,
                  backend: str | None = None,
                  sampling: SamplingParams | None = None,
-                 sync_every: int = 8, prefill_chunk: int | None = None):
+                 sync_every: int = 8, prefill_chunk: int | None = None,
+                 mesh: jax.sharding.Mesh | None = None):
         if backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=backend)
         if sync_every < 1:
             raise ValueError("sync_every must be >= 1")
-        self.cfg, self.params = cfg, params
+        self.cfg = cfg
         self.B, self.max_len = max_slots, max_len
         self.source = source
         self.sampling = sampling or S.GREEDY
         self.sync_every = sync_every
+        self.mesh = mesh if mesh is not None else single_device_mesh()
+        # slots-per-shard admission locality: only meaningful when the
+        # slot axis actually shards (divisible); else one logical shard
+        n_slot_shards = math.prod(
+            self.mesh.shape[a] for a in R.batch_axes(self.mesh))
+        if n_slot_shards < 1 or max_slots % n_slot_shards:
+            n_slot_shards = 1
         self.scheduler = Scheduler(max_slots, max_len,
-                                   prefill_chunk=prefill_chunk)
-        self.cache = T.init_decode_cache(cfg, max_slots, max_len)
+                                   prefill_chunk=prefill_chunk,
+                                   slot_shards=n_slot_shards)
+        # Mesh-native placement: params by PARAM_RULES (TP heads / FSDP),
+        # the pooled cache rings by CACHE_RULES (slot x sequence).
+        param_shardings = R.to_named(
+            R.param_specs(params, self.mesh, grains=R.head_grains(cfg)),
+            self.mesh)
+        self.params = jax.device_put(params, param_shardings)
+        cache = T.init_decode_cache(cfg, max_slots, max_len)
+        self._cache_shardings = R.to_named(
+            R.cache_specs(cache, self.mesh), self.mesh)
+        self.cache = jax.device_put(cache, self._cache_shardings)
         self.finished: list[Request] = []
         # per-slot host mirror of the device loop state (synced once per
         # window); the cache itself never leaves the device
@@ -114,7 +149,8 @@ class Engine:
             "bpos": np.zeros(max_slots, np.int32),
             "more": np.zeros(max_slots, bool),
         }
-        # metrics
+        # metrics (sums and `windows` advance atomically at each window
+        # boundary in _harvest, so metrics() mid-stream is consistent)
         self.host_syncs = 0          # device->host harvest points
         self.admission_syncs = 0     # host_syncs spent on wave prefills
         self.windows = 0
@@ -135,20 +171,36 @@ class Engine:
         # the paper halves.  (CPU ignores donation and would warn, so
         # only donate where it takes effect.)
         donate = (1,) if jax.default_backend() != "cpu" else ()
-        self._window = jax.jit(self._make_window(cfg, max_len, sync_every),
-                               donate_argnums=donate)
+        in_sh, out_sh = R.window_shardings(
+            self.mesh, self.params, self.cache, self._st,
+            param_shardings=param_shardings,
+            cache_shardings=self._cache_shardings)
+        logits_spec = jax.sharding.NamedSharding(
+            self.mesh, R.slot_stacked_spec(max_slots, self.mesh,
+                                           lead_dims=0))
+        self._window = jax.jit(
+            self._make_window(cfg, max_len, sync_every,
+                              cache_shardings=self._cache_shardings,
+                              logits_spec=logits_spec),
+            donate_argnums=donate, in_shardings=in_sh, out_shardings=out_sh)
 
     # -- fused decode window -------------------------------------------------
 
     @staticmethod
-    def _make_window(cfg: ModelConfig, max_len: int, steps: int):
+    def _make_window(cfg: ModelConfig, max_len: int, steps: int, *,
+                     cache_shardings=None, logits_spec=None):
         """Build the jitted window fn: ``steps`` fused decode iterations.
 
         Per iteration, per slot: pick the fed token (ingest buffer while
         prompt remains, else last sampled), run one batched decode_step
         (inactive/stalled rows masked from cache writes), sample, then
         update emit/termination flags — all under one lax.scan, so the
-        only host sync is the caller harvesting the stacked outputs."""
+        only host sync is the caller harvesting the stacked outputs.
+
+        ``cache_shardings``/``logits_spec`` pin the scan carry's ring
+        layout and the sampler's slot-sharded logits so the loop body
+        never reshards mid-scan (the mesh must not smuggle per-step
+        transfers back in)."""
 
         def window(params, cache, st):
             def body(carry, _):
@@ -164,10 +216,12 @@ class Engine:
                 stalled = st["more"] & ~feeding
                 stepping = st["act"] & ~stalled
                 logits, cache = T.decode_step(
-                    cfg, params, cache, tok_in, st["cur"], stepping)
+                    cfg, params, cache, tok_in, st["cur"], stepping,
+                    cache_shardings=cache_shardings)
                 ks = jax.vmap(lambda k: jax.random.split(k, 2))(st["keys"])
                 sampled = S.sample_tokens(logits, st["temp"], st["top_k"],
-                                          st["top_p"], ks[:, 1])
+                                          st["top_p"], ks[:, 1],
+                                          spec=logits_spec)
                 last_prompt = (feeding & ~st["more"]
                                & (st["bpos"] + 1 >= st["avail"]))
                 emit = stepping & (~feeding | last_prompt)
@@ -201,7 +255,8 @@ class Engine:
                       backend: str | None = None,
                       sampling: SamplingParams | None = None,
                       sync_every: int = 8,
-                      prefill_chunk: int | None = None) -> "Engine":
+                      prefill_chunk: int | None = None,
+                      mesh: jax.sharding.Mesh | None = None) -> "Engine":
         """Boot an engine straight from a saved compression artifact —
         the compress-offline / serve-forever workflow across processes."""
         from repro.api import load_artifact  # local: api imports models too
@@ -209,7 +264,8 @@ class Engine:
         art = load_artifact(path)
         return cls(art.cfg, art.params, max_slots=max_slots, max_len=max_len,
                    source=source, backend=backend, sampling=sampling,
-                   sync_every=sync_every, prefill_chunk=prefill_chunk)
+                   sync_every=sync_every, prefill_chunk=prefill_chunk,
+                   mesh=mesh)
 
     # -- back-compat conveniences -------------------------------------------
 
@@ -226,6 +282,12 @@ class Engine:
         """Requests not yet finished: queued vs admitted-but-mid-flight."""
         return {"queued": self.scheduler.queue_depth,
                 "in_flight": self.scheduler.occupancy}
+
+    @property
+    def mesh_str(self) -> str:
+        """Mesh shape joined over ALL axes in mesh order (e.g. "1x1",
+        "2x4", "2x16x16" for a multi-pod mesh)."""
+        return "x".join(str(self.mesh.shape[a]) for a in self.mesh.axis_names)
 
     # -- admission ----------------------------------------------------------
 
@@ -341,20 +403,26 @@ class Engine:
         st = self._st
         if not st["act"].any():
             return
-        self._occupancy_sum += self.scheduler.occupancy
-        self._queue_depth_sum += self.scheduler.queue_depth
+        # window-boundary snapshot: the load THIS window runs with —
+        # folded into the means in _harvest, atomically with `windows`
+        occ, qd = self.scheduler.occupancy, self.scheduler.queue_depth
         state = {k: jnp.asarray(v) for k, v in st.items()}
         self.cache, state, toks, emits = self._window(
             self.params, self.cache, state)
-        self._harvest(state, toks, emits)
+        self._harvest(state, toks, emits, occ, qd)
 
-    def _harvest(self, state, toks, emits):
+    def _harvest(self, state, toks, emits, occ: int, qd: int):
         toks = np.asarray(toks)                 # (K, B)
         emits = np.asarray(emits)               # (K, B)
         self._st = {k: np.array(v) for k, v in state.items()}
+        # every window-scoped counter advances together, here and only
+        # here — a mid-stream metrics() call never sees sums from one
+        # window paired with counts from another
         self.host_syncs += 1
         self.windows += 1
         self.tokens_emitted += int(emits.sum())
+        self._occupancy_sum += occ
+        self._queue_depth_sum += qd
         slot_req = self.scheduler.slot_req
         for k in range(toks.shape[0]):
             for i in np.nonzero(emits[k])[0]:
@@ -386,17 +454,26 @@ class Engine:
 
     def metrics(self) -> dict[str, Any]:
         """Serving counters since construction (host_syncs counts one per
-        decode-window harvest plus one per admission wave)."""
+        decode-window harvest plus one per admission wave).
+
+        Safe to call mid-stream: window-scoped sums and ``windows``
+        advance atomically at each harvest, and the instantaneous
+        ``occupancy``/``queue_depth`` read the scheduler — the host-side
+        truth at every window boundary — never the device mirror's
+        active flags (which are stale between harvests)."""
         tokens = self.tokens_emitted + self._admit_tokens
         w = max(self.windows, 1)
         return {
             "tokens": tokens,
             "windows": self.windows,
             "sync_every": self.sync_every,
+            "mesh": self.mesh_str,
             "host_syncs": self.host_syncs,
             "admission_syncs": self.admission_syncs,
             "host_syncs_per_token": self.host_syncs / max(tokens, 1),
             "decode_syncs_per_token": self.windows / max(self.tokens_emitted, 1),
+            "occupancy": self.scheduler.occupancy,
+            "queue_depth": self.scheduler.queue_depth,
             "occupancy_mean": self._occupancy_sum / w,
             "queue_depth_mean": self._queue_depth_sum / w,
             "run_seconds": self._run_seconds,

@@ -87,13 +87,23 @@ def filtered_logits(logits: jax.Array, top_k: jax.Array,
 
 def sample_tokens(logits: jax.Array, temperature: jax.Array,
                   top_k: jax.Array, top_p: jax.Array,
-                  keys: jax.Array) -> jax.Array:
+                  keys: jax.Array, *, spec=None) -> jax.Array:
     """One sampled token per row.  logits (B, V); knobs (B,) arrays;
     keys (B, 2) uint32 per-slot PRNG keys (use-once — the caller carries
     the split).  Rows with temperature <= 0 return exact argmax; an
     all-greedy batch skips the sort-based filtering entirely (lax.cond),
-    so a greedy serving engine pays nothing for the sampling machinery."""
+    so a greedy serving engine pays nothing for the sampling machinery.
+
+    ``spec`` (optional NamedSharding for the (B, V) logits: slot axis
+    sharded, vocab replicated) pins the sampler's working set under a
+    mesh.  Logits arrive vocab-sharded from the tensor-parallel lm_head;
+    every sampling op (argsort/cumsum over V, the per-row categorical
+    draw) is row-local, so one explicit reshard up front makes the whole
+    filter+draw local to the slot shard instead of letting SPMD re-derive
+    (and possibly re-gather) per op."""
     logits = logits.astype(jnp.float32)
+    if spec is not None:
+        logits = jax.lax.with_sharding_constraint(logits, spec)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def sampled(_):

@@ -45,12 +45,21 @@ class Scheduler:
     """FIFO admission + slot lifecycle + chunked-prefill bookkeeping."""
 
     def __init__(self, max_slots: int, max_len: int,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None, slot_shards: int = 1):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if slot_shards < 1 or max_slots % slot_shards:
+            raise ValueError(
+                f"slot_shards={slot_shards} must divide max_slots="
+                f"{max_slots} (each addressable shard owns whole slots)")
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
+        # When the engine's cache pool is slot-sharded over a mesh, slots
+        # [k*max_slots/slot_shards, (k+1)*...) live on shard k.  Admission
+        # packs a wave into as few shards as possible so the wave-prefill
+        # scatter touches few shards' rows instead of gathering the pool.
+        self.slot_shards = slot_shards
         self.queue: deque[Request] = deque()
         self.slot_req: list[Request | None] = [None] * max_slots
         # un-ingested prompt tail per slot (chunked prefill)
@@ -87,10 +96,32 @@ class Scheduler:
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def take_wave(self) -> list[tuple[int, Request]]:
-        """Admit queued requests into free slots, strictly FIFO."""
-        wave = []
+    def _wave_slot_order(self, want: int) -> list[int]:
+        """Free slots ordered shard-group-aware for a wave of ``want``
+        requests: the tightest single group that fits the whole wave
+        (best fit — emptier groups stay contiguous for bigger waves),
+        else fullest-first so the wave spans the fewest groups."""
         free = self.free_slots()
+        if self.slot_shards == 1 or not free:
+            return free
+        per = self.max_slots // self.slot_shards
+        groups: dict[int, list[int]] = {}
+        for s in free:
+            groups.setdefault(s // per, []).append(s)
+        by_size = sorted(groups.values(), key=lambda g: (len(g), g[0]))
+        fit = next((g for g in by_size if len(g) >= want), None)
+        if fit is not None:
+            rest = [g for g in by_size if g is not fit]
+            return fit + [s for g in rest for s in g]
+        by_size.sort(key=lambda g: (-len(g), g[0]))
+        return [s for g in by_size for s in g]
+
+    def take_wave(self) -> list[tuple[int, Request]]:
+        """Admit queued requests into free slots, strictly FIFO by request
+        (slot choice is shard-aware, see ``_wave_slot_order``)."""
+        wave = []
+        free = self._wave_slot_order(min(len(self.free_slots()),
+                                         len(self.queue)))
         while free and self.queue:
             slot = free.pop(0)
             req = self.queue.popleft()

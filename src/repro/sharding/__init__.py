@@ -2,10 +2,12 @@ from repro.sharding.rules import (
     batch_axes,
     batch_specs,
     cache_specs,
+    carry_specs,
     opt_specs,
     param_specs,
     to_named,
+    window_shardings,
 )
 
-__all__ = ["batch_axes", "batch_specs", "cache_specs", "opt_specs",
-           "param_specs", "to_named"]
+__all__ = ["batch_axes", "batch_specs", "cache_specs", "carry_specs",
+           "opt_specs", "param_specs", "to_named", "window_shardings"]

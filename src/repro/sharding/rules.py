@@ -144,7 +144,26 @@ def _resolve(prefs, shape, dtype, mesh: Mesh, offset: int):
     return P(*spec)
 
 
-def _spec_for(path, leaf, mesh: Mesh, rules, default=()):
+def head_grains(cfg) -> dict[str, int]:
+    """Model-axis sharding grain per attention projection, from a
+    (duck-typed) ModelConfig.
+
+    These projections' outputs are reshaped per head (or sliced into
+    latent + rope parts) and fed through qk-norm / RoPE: a "model" tile
+    narrower than the grain splits a head's rotation pairs across devices
+    — useless for tensor parallelism (every score matmul contracts over
+    the head dim) and a resharding hazard inside fused decode loops.
+    For MLA, wkv_a's whole output (latent ‖ rope slice) is one grain: it
+    is rmsnorm'd and rope'd as a unit, so TP never splits it."""
+    mla = getattr(cfg, "mla", None)
+    if mla is not None:
+        return {"wq_b": mla.qk_nope_dim + mla.qk_rope_dim,
+                "wkv_a": mla.kv_lora_rank + mla.qk_rope_dim,
+                "wkv_b": mla.qk_nope_dim + mla.v_head_dim}
+    return dict.fromkeys(("wq", "wk", "wv"), cfg.d_head)
+
+
+def _spec_for(path, leaf, mesh: Mesh, rules, default=(), grains=None):
     names = _path_names(path)
     name = names[-1]
     # scanned stack: params/caches under top-level "blocks" carry (n_periods,)
@@ -159,13 +178,22 @@ def _spec_for(path, leaf, mesh: Mesh, rules, default=()):
             prefs = rules.get(name, default)
     if len(shape) - offset < 1 or not prefs:
         return P()
+    grain = grains.get(name) if grains else None
+    if (grain and "model" in mesh.shape
+            and shape[-1] % (mesh.shape["model"] * grain)):
+        prefs = tuple(p for p in prefs if p != ("model", -1))
     return _resolve(prefs, shape, dtype, mesh, offset)
 
 
-def param_specs(params, mesh: Mesh):
-    """PartitionSpec tree for a parameter pytree (shapes or arrays)."""
+def param_specs(params, mesh: Mesh, grains: dict[str, int] | None = None):
+    """PartitionSpec tree for a parameter pytree (shapes or arrays).
+
+    ``grains`` (see :func:`head_grains`) enforces head-grain TP on
+    attention projections when the ModelConfig is known — e.g. the
+    serving engine passes ``head_grains(cfg)``."""
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: _spec_for(path, leaf, mesh, PARAM_RULES), params)
+        lambda path, leaf: _spec_for(path, leaf, mesh, PARAM_RULES,
+                                     grains=grains), params)
 
 
 def cache_specs(caches, mesh: Mesh):
@@ -191,6 +219,57 @@ def opt_specs(opt_state, params_spec, mesh: Mesh):
         else:
             out[k] = P()
     return out
+
+
+def carry_specs(carry, mesh: Mesh):
+    """Specs for the serving engine's device carry (last-token, cur,
+    active flags, per-slot PRNG keys, sampler knobs, ingest buffer):
+    dim 0 of every leaf is the SLOT axis, sharded over the batch axes
+    when divisible; all other dims replicated.  Together with CACHE_RULES
+    (slot over batch, sequence over model) this keeps admission, harvest,
+    sampling and chunked-prefill ingest transfer-free on a mesh — each
+    addressable shard owns whole slots."""
+    def one(path, leaf):
+        if len(getattr(leaf, "shape", ())) < 1:
+            return P()
+        return _resolve((("batch", 0),), leaf.shape, leaf.dtype, mesh, 0)
+    return jax.tree_util.tree_map_with_path(one, carry)
+
+
+def slot_stacked_spec(n_slots: int, mesh: Mesh, lead_dims: int = 1) -> P:
+    """Spec for per-window stacked outputs like toks/emits (steps, B):
+    ``lead_dims`` replicated axes, then the slot axis over the batch
+    axes."""
+    names = batch_axes(mesh)
+    n = math.prod(mesh.shape[a] for a in names)
+    if not names or n_slots % n:
+        return P()
+    dp = names if len(names) > 1 else names[0]
+    return P(*([None] * lead_dims), dp)
+
+
+def window_shardings(mesh: Mesh, params, cache, carry,
+                     grains: dict[str, int] | None = None, *,
+                     param_shardings=None, cache_shardings=None):
+    """(in_shardings, out_shardings) for the serving engine's fused decode
+    window ``window(params, cache, carry) -> (cache, carry, toks, emits)``.
+
+    Arguments may be arrays, numpy arrays, or ShapeDtypeStructs — only
+    shape/dtype are read.  Params follow PARAM_RULES (TP heads / FSDP,
+    head-grained via ``grains``), cache rings follow CACHE_RULES (slot x
+    sequence), carry leaves follow carry_specs (slot axis); the stacked
+    (steps, B) token/emit outputs shard their slot dim.  Callers that
+    already derived the param/cache NamedSharding trees (the engine does,
+    for device_put) pass them via ``param_shardings``/``cache_shardings``
+    so the jit's in_shardings cannot diverge from actual placement."""
+    ps = (param_shardings if param_shardings is not None
+          else to_named(param_specs(params, mesh, grains=grains), mesh))
+    cs = (cache_shardings if cache_shardings is not None
+          else to_named(cache_specs(cache, mesh), mesh))
+    ss = to_named(carry_specs(carry, mesh), mesh)
+    n_slots = jax.tree.leaves(carry)[0].shape[0]
+    ts = NamedSharding(mesh, slot_stacked_spec(n_slots, mesh))
+    return (ps, cs, ss), (cs, ss, ts, ts)
 
 
 def batch_specs(batch, mesh: Mesh):

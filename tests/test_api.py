@@ -19,6 +19,7 @@ from repro.api import (
     load_artifact,
     register_strategy,
     save_artifact,
+    serve,
     unregister_strategy,
 )
 from repro.configs import get_config
@@ -232,6 +233,32 @@ class TestArtifactRoundTrip:
         disk = serve(Engine.from_artifact(str(tmp_path / "art"),
                                           max_slots=2, max_len=48))
         assert mem == disk
+
+    def test_serve_verb_matches_engine(self, dense_model, calib, tmp_path):
+        """repro.api.serve boots the same engine from an in-memory
+        artifact or a saved path — the third verb of the facade."""
+        import repro.api as api
+
+        cfg, params = dense_model
+        art = compress(cfg, params, CompressionSpec(
+            "recalkv", rank_policy=RankPolicy(keep_ratio=0.5)), calib)
+        save_artifact(art, str(tmp_path / "art"))
+
+        g = np.random.default_rng(4)
+        prompts = [g.integers(0, cfg.vocab_size, 5 + i).astype(np.int32)
+                   for i in range(2)]
+
+        def drive(eng):
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=p.copy(), max_new_tokens=4))
+            return {r.uid: r.out_tokens for r in eng.run()}
+
+        ref = drive(Engine(art.cfg, art.params, max_slots=2, max_len=48))
+        mem_eng = api.serve(art, max_slots=2, max_len=48)
+        assert mem_eng.mesh_str == "1x1"      # degenerate-mesh default
+        assert drive(mem_eng) == ref
+        assert drive(api.serve(str(tmp_path / "art"),
+                               max_slots=2, max_len=48)) == ref
 
     def test_load_missing_and_wrong_kind(self, tmp_path, dense_model):
         with pytest.raises(FileNotFoundError):

@@ -1,0 +1,190 @@
+"""Mesh-sharded serving parity.
+
+On a forced multi-device CPU host (``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``, see the `mesh` CI job) the
+engine on a (data=2, model=4) mesh must emit token streams TOKEN-FOR-TOKEN
+equal to the single-device engine — greedy and sampled, dense / latent /
+int8-latent caches, full and chunked prefill — and keep the
+1-sync-per-window invariant (sharding must not smuggle per-step host
+round-trips back in).  With fewer devices every test here skips via the
+shared ``make_test_mesh(skip=True)`` guard.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.serving import Engine, Request, SamplingParams
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+
+CASES = {
+    "dense": {},
+    "latent": {"recalkv_ratio": 0.5},
+    "int8_latent": {"recalkv_ratio": 0.5, "cache_quant_bits": 8},
+}
+
+SAMPLED = SamplingParams(temperature=0.9, top_k=32, top_p=0.9, seed=11)
+
+
+@pytest.fixture(scope="module")
+def mesh24():
+    return make_test_mesh(2, 4, skip=True)
+
+
+def _model(case):
+    extra = CASES[case]
+    kw = {k: extra[k] for k in ("recalkv_ratio",) if k in extra}
+    cfg = get_config("qwen3-4b", smoke=True, **kw)
+    cfg = dataclasses.replace(
+        cfg, dtype=jnp.float32,
+        **{k: v for k, v in extra.items() if k == "cache_quant_bits"})
+    return cfg, T.init_params(cfg, KEY)
+
+
+def _serve(cfg, params, prompts, mesh, sampling=None, max_new=6, **kw):
+    eng = Engine(cfg, params, max_slots=4, max_len=40, mesh=mesh,
+                 sampling=sampling, **kw)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=max_new))
+    done = eng.run()
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+def _prompts(cfg, n=6, seed=3):
+    g = np.random.default_rng(seed)
+    return [g.integers(0, cfg.vocab_size, 5 + 2 * i).astype(np.int32)
+            for i in range(n)]
+
+
+class TestMeshStreamParity:
+    @pytest.mark.parametrize("case", sorted(CASES))
+    def test_greedy_streams_match_single_device(self, mesh24, case):
+        cfg, params = _model(case)
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts, None)
+        got, eng = _serve(cfg, params, prompts, mesh24)
+        assert eng.mesh_str == "2x4"
+        assert got == ref, case
+
+    @pytest.mark.parametrize("case", sorted(CASES))
+    def test_sampled_streams_match_single_device(self, mesh24, case):
+        cfg, params = _model(case)
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts, None, sampling=SAMPLED)
+        got, _ = _serve(cfg, params, prompts, mesh24, sampling=SAMPLED)
+        assert got == ref, case
+
+    def test_mla_streams_match_single_device(self, mesh24):
+        """MLA per-head widths differ from d_head — the head_grains map
+        must keep wq_b/wkv_a/wkv_b whole under TP (regression for the
+        sub-head-tile RoPE hazard on the absorbed-latent path)."""
+        cfg = dataclasses.replace(get_config("deepseek-v3-671b", smoke=True),
+                                  dtype=jnp.float32)
+        params = T.init_params(cfg, KEY)
+        prompts = _prompts(cfg, n=4)
+        ref, _ = _serve(cfg, params, prompts, None, max_new=5)
+        got, _ = _serve(cfg, params, prompts, mesh24, max_new=5)
+        assert got == ref
+        ref_s, _ = _serve(cfg, params, prompts, None, sampling=SAMPLED,
+                          max_new=5)
+        got_s, _ = _serve(cfg, params, prompts, mesh24, sampling=SAMPLED,
+                          max_new=5)
+        assert got_s == ref_s
+
+    def test_one_sync_per_window_on_mesh(self, mesh24):
+        """The executor's structural contract survives sharding: exactly
+        one harvest per decode window plus one per admission wave."""
+        cfg, params = _model("latent")
+        _, eng = _serve(cfg, params, _prompts(cfg), mesh24, max_new=16)
+        m = eng.metrics()
+        assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m
+        assert m["host_syncs"] < m["tokens"], m
+
+    def test_cache_pool_is_slot_and_sequence_sharded(self, mesh24):
+        """The resident ring is genuinely distributed: slot rows over
+        "data", ring positions over "model" (the psum-LSE-merge layout)."""
+        cfg, params = _model("latent")
+        _, eng = _serve(cfg, params, _prompts(cfg, n=2), mesh24)
+        ring_specs = set()
+        for leaf in jax.tree.leaves(eng.cache):
+            spec = tuple(leaf.sharding.spec)
+            if leaf.ndim >= 3:
+                ring_specs.add(spec)
+        assert ring_specs, "no ring leaves found"
+        for spec in ring_specs:
+            assert "data" in spec, spec      # slot axis sharded
+        assert any("model" in spec for spec in ring_specs), ring_specs
+
+
+class TestFusedLoopParityMesh:
+    """Extends TestFusedLoopParity (test_backend_equiv) to the mesh: the
+    chunked-prefill ingest path and non-greedy sampling must be
+    stream-invariant to the mesh exactly as they are to sync_every /
+    prefill_chunk."""
+
+    @pytest.mark.parametrize("case", sorted(CASES))
+    def test_cap_length_chunked_sampled_matches_single_device(self, mesh24,
+                                                              case):
+        """A cap-length (max_len - 1) prompt admitted in prefill_chunk
+        pieces on the mesh, decoded with non-greedy sampling, produces
+        the identical stream as unchunked single-device admission."""
+        cfg, params = _model(case)
+        g = np.random.default_rng(9)
+        cap = g.integers(0, cfg.vocab_size, 39).astype(np.int32)
+
+        def serve(mesh, chunk, sync_every=4):
+            eng = Engine(cfg, params, max_slots=4, max_len=40, mesh=mesh,
+                         sampling=SAMPLED, prefill_chunk=chunk,
+                         sync_every=sync_every)
+            eng.submit(Request(uid=0, prompt=cap.copy(), max_new_tokens=5))
+            return eng.run()[0].out_tokens
+
+        ref = serve(None, None)
+        assert serve(mesh24, 7) == ref, case
+        assert serve(mesh24, 5, sync_every=3) == ref, case
+
+    def test_mixed_load_chunked_sampled_matches_single_device(self, mesh24):
+        """Chunked long prompts + short greedy + sampled requests mixed in
+        one slot pool behave identically on and off the mesh."""
+        cfg, params = _model("latent")
+        g = np.random.default_rng(21)
+        reqs = []
+        for i in range(6):
+            plen = int(g.integers(3, 30))
+            sp = SAMPLED if i % 2 else None
+            reqs.append((g.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                         sp))
+
+        def serve(mesh):
+            eng = Engine(cfg, params, max_slots=4, max_len=40, mesh=mesh,
+                         prefill_chunk=6, sync_every=4)
+            for i, (pr, sp) in enumerate(reqs):
+                eng.submit(Request(uid=i, prompt=pr.copy(),
+                                   max_new_tokens=6, sampling=sp))
+            return {r.uid: r.out_tokens for r in eng.run()}
+
+        assert serve(mesh24) == serve(None)
+
+
+class TestMeshAdmission:
+    def test_shard_aware_waves_fill_one_shard_group(self, mesh24):
+        """With 4 slots over data=2, a 2-request wave lands on one
+        addressable shard's rows (slots {0,1} or {2,3})."""
+        cfg, params = _model("latent")
+        g = np.random.default_rng(5)
+        eng = Engine(cfg, params, max_slots=4, max_len=40, mesh=mesh24)
+        assert eng.scheduler.slot_shards == 2
+        for i in range(2):
+            eng.submit(Request(
+                uid=i, prompt=g.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                max_new_tokens=20))
+        eng.step()
+        taken = [i for i, r in enumerate(eng.slot_req) if r is not None]
+        assert taken in ([0, 1], [2, 3])

@@ -97,6 +97,74 @@ def test_batch_specs_use_pod_and_data():
     assert tuple(spec)[0] == ("pod", "data")
 
 
+def test_make_test_mesh_guards_device_count():
+    """The shared mesh helper must not silently hand out an unbuildable
+    mesh: raise by default with the XLA_FLAGS hint, shrink toward (1, 1)
+    with degrade=True.  (On hosts with >= the requested devices the
+    request is honored as-is — both branches still hold.)"""
+    from repro.launch.mesh import make_test_mesh
+    have = len(jax.devices())
+    big = 2 * have
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_test_mesh(big, big)
+    mesh = make_test_mesh(big, big, degrade=True)
+    assert tuple(mesh.axis_names) == ("data", "model")
+    assert math.prod(mesh.shape.values()) <= have
+
+
+def test_carry_specs_shard_slot_axis():
+    """The serving engine's device carry shards dim 0 (the slot axis)
+    over the batch axes when divisible, else replicates."""
+    mesh = fake_mesh((2, 4), ("data", "model"))
+    st = {
+        "tok": jax.ShapeDtypeStruct((8,), jnp.int32),
+        "keys": jax.ShapeDtypeStruct((8, 2), jnp.uint32),
+        "buf": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+    }
+    specs = rules.carry_specs(st, mesh)
+    assert tuple(specs["tok"]) == ("data",)
+    assert tuple(specs["keys"])[0] == "data"
+    assert tuple(specs["buf"])[0] == "data"
+    odd = rules.carry_specs({"tok": jax.ShapeDtypeStruct((7,), jnp.int32)},
+                            mesh)
+    assert all(a is None for a in tuple(odd["tok"]))
+
+
+def test_slot_stacked_spec():
+    mesh = fake_mesh((2, 4), ("data", "model"))
+    assert tuple(rules.slot_stacked_spec(8, mesh)) == (None, "data")
+    assert tuple(rules.slot_stacked_spec(7, mesh)) == ()
+
+
+def test_param_specs_head_grain():
+    """With grains given, attention projections never shard inside a
+    head: Hkv*dh = 16 over model=4 would tile 4-wide across dh=8."""
+    mesh = fake_mesh((2, 4), ("data", "model"))
+    grains = {"wk": 8, "wq": 8}
+    wk = {"wk": jax.ShapeDtypeStruct((64, 16), jnp.float32)}
+    free = rules.param_specs(wk, mesh)["wk"]
+    assert tuple(free)[-1] == "model"            # shape-only rule shards it
+    grained = rules.param_specs(wk, mesh, grains=grains)["wk"]
+    assert "model" not in tuple(grained)          # head grain forbids it
+    wq = {"wq": jax.ShapeDtypeStruct((64, 64), jnp.float32)}
+    assert tuple(rules.param_specs(wq, mesh, grains=grains)["wq"])[-1] == "model"
+
+
+def test_head_grains_cover_mla_projections():
+    """MLA's per-head widths differ from d_head, and wkv_a's whole
+    latent ‖ rope output is one grain (rmsnorm + rope operate on it as a
+    unit) — TP must never split any of them."""
+    cfg = get_config("deepseek-v3-671b", smoke=True)
+    grains = rules.head_grains(cfg)
+    a = cfg.mla
+    assert grains == {"wq_b": a.qk_nope_dim + a.qk_rope_dim,
+                      "wkv_a": a.kv_lora_rank + a.qk_rope_dim,
+                      "wkv_b": a.qk_nope_dim + a.v_head_dim}
+    dense = get_config("qwen3-4b", smoke=True)
+    assert rules.head_grains(dense) == {
+        "wq": dense.d_head, "wk": dense.d_head, "wv": dense.d_head}
+
+
 MINI_DRYRUN = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -108,8 +176,9 @@ MINI_DRYRUN = textwrap.dedent("""
     from repro.optim import AdamWConfig, init_state
     from repro.runtime import TrainConfig, make_train_step
     from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_test_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mesh = make_test_mesh(2, 4)
     named = lambda t: rules.to_named(t, mesh)
     KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)
     out = {}
