@@ -1,0 +1,114 @@
+"""Perf-regression gate over the BENCH_serving.json trajectory.
+
+CI downloads the previous successful run's ``BENCH_serving`` artifact and
+compares this run's freshly-appended entry against the artifact's latest
+entry: any matching (variant, backend, mesh, spec_depth, draft) row whose
+``tokens_per_s`` dropped by more than ``--threshold`` (default 20%) fails
+the job.  Rows only one side has — a new variant, a renamed mesh — are
+reported but never fail, and when no prior artifact exists (first run,
+expired retention, forked repo) the gate SKIPS cleanly: the gate guards
+the trajectory, it must not block bootstrapping it.
+
+CPU throughput on shared runners is noisy; the 20% default is meant to
+catch structural regressions (a lost fusion, an accidental per-token
+sync), not scheduler jitter.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_THRESHOLD = 0.20
+
+# identity of a row within an entry; everything else is measurement
+ROW_KEY = ("variant", "backend", "mesh", "spec_depth", "draft")
+
+
+def row_key(row: dict) -> tuple:
+    return tuple(row.get(k) for k in ROW_KEY)
+
+
+def _fmt(key: tuple) -> str:
+    return "/".join("-" if v is None else str(v) for v in key)
+
+
+def compare_entries(prev: dict, new: dict,
+                    threshold: float = DEFAULT_THRESHOLD) -> dict:
+    """Compare two trajectory entries.  Returns a report dict:
+    ``regressions`` (matching rows past the threshold), ``compared``,
+    ``only_prev`` / ``only_new`` (unmatched row keys, informational),
+    and ``skipped_reason`` when the entries are not comparable (different
+    arch or load config — a changed bench is a new baseline, not a
+    regression)."""
+    report = {"regressions": [], "compared": 0,
+              "only_prev": [], "only_new": [], "skipped_reason": None}
+    if prev.get("arch") != new.get("arch") or \
+            prev.get("config") != new.get("config"):
+        report["skipped_reason"] = (
+            f"bench identity changed (arch {prev.get('arch')!r} -> "
+            f"{new.get('arch')!r}, config {prev.get('config')} -> "
+            f"{new.get('config')}): new baseline")
+        return report
+    prev_rows = {row_key(r): r for r in prev.get("rows", [])}
+    new_rows = {row_key(r): r for r in new.get("rows", [])}
+    report["only_prev"] = sorted(_fmt(k) for k in prev_rows.keys()
+                                 - new_rows.keys())
+    report["only_new"] = sorted(_fmt(k) for k in new_rows.keys()
+                                - prev_rows.keys())
+    for key in sorted(prev_rows.keys() & new_rows.keys(), key=_fmt):
+        p, n = prev_rows[key]["tokens_per_s"], new_rows[key]["tokens_per_s"]
+        report["compared"] += 1
+        if p > 0 and n < (1.0 - threshold) * p:
+            report["regressions"].append({
+                "row": _fmt(key), "prev_tokens_per_s": p,
+                "new_tokens_per_s": n, "drop": round(1.0 - n / p, 3)})
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", required=True,
+                    help="previous run's BENCH_serving.json (may not exist)")
+    ap.add_argument("--new", required=True,
+                    help="this run's BENCH_serving.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="fractional tokens/s drop that fails (default 0.2)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.prev):
+        print(f"[perf-gate] no previous artifact at {args.prev}: skipping "
+              f"(first run or expired retention)")
+        return 0
+    with open(args.prev) as f:
+        prev_traj = json.load(f)
+    with open(args.new) as f:
+        new_traj = json.load(f)
+    if not prev_traj or not new_traj:
+        print("[perf-gate] empty trajectory on one side: skipping")
+        return 0
+
+    report = compare_entries(prev_traj[-1], new_traj[-1],
+                             threshold=args.threshold)
+    if report["skipped_reason"]:
+        print(f"[perf-gate] skipped: {report['skipped_reason']}")
+        return 0
+    for side in ("only_prev", "only_new"):
+        for k in report[side]:
+            print(f"[perf-gate] {side.replace('_', ' ')}: {k} (not compared)")
+    if report["regressions"]:
+        print(f"[perf-gate] FAIL: {len(report['regressions'])} row(s) "
+              f"dropped > {args.threshold:.0%} tokens/s:")
+        for r in report["regressions"]:
+            print(f"  {r['row']}: {r['prev_tokens_per_s']} -> "
+                  f"{r['new_tokens_per_s']} tok/s (-{r['drop']:.1%})")
+        return 1
+    print(f"[perf-gate] OK: {report['compared']} matching rows within "
+          f"{args.threshold:.0%} of the previous run")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

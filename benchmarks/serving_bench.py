@@ -56,14 +56,16 @@ MESH_SHAPES = ("1x1", "2x4")
 
 def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
                  max_len: int, requests: int, new_tokens: int,
-                 sync_every: int, mesh_spec: str | None = None) -> dict:
+                 sync_every: int, mesh_spec: str | None = None,
+                 spec_depth: int = 0, draft: str | None = None) -> dict:
     kw, extra = VARIANTS[variant]
     cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
                               dtype=jnp.float32, attn_backend=backend,
                               **extra)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = Engine(cfg, params, max_slots=slots, max_len=max_len,
-                 sync_every=sync_every, mesh=mesh_from_spec(mesh_spec))
+                 sync_every=sync_every, mesh=mesh_from_spec(mesh_spec),
+                 spec_depth=spec_depth, draft=draft)
     g = np.random.default_rng(1)
     for i in range(requests):
         plen = int(g.integers(4, max_len // 3))
@@ -77,10 +79,12 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
     assert len(finished) == requests, "bench load did not drain"
     # the executor's structural contract: exactly one host sync per
     # sync_every-step decode window (plus one per admission wave) — syncs
-    # no longer scale with decoded tokens as in the seed engine
+    # no longer scale with decoded tokens as in the seed engine (and a
+    # speculative window still costs ONE sync however many tokens it
+    # verifies)
     assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m
     assert m["host_syncs"] < m["tokens"], m
-    return {
+    row = {
         "variant": variant,
         "backend": backend,
         "mesh": m["mesh"],
@@ -94,6 +98,11 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
         "occupancy_mean": round(m["occupancy_mean"], 2),
         "cache_bytes": cache_bytes,
     }
+    if spec_depth:
+        row["spec_depth"] = spec_depth
+        row["draft"] = m["draft"]
+        row["accept_rate"] = round(m["accept_rate"], 4)
+    return row
 
 
 def bench_device_loop(arch: str, variant: str, *, slots: int, max_len: int,
@@ -169,7 +178,8 @@ def bench_mesh_rows(arch: str, *, slots: int, max_len: int, requests: int,
               new_tokens=new_tokens, sync_every=sync_every)
     for shape in MESH_SHAPES:
         if any(r.get("mesh") == shape and r["variant"] == "latent"
-               and r["backend"] == "einsum" for r in have_rows or []):
+               and r["backend"] == "einsum" and not r.get("spec_depth")
+               for r in have_rows or []):
             continue
         need = math.prod(int(v) for v in shape.split("x"))
         t0 = time.time()
@@ -184,6 +194,9 @@ def bench_mesh_rows(arch: str, *, slots: int, max_len: int, requests: int,
               f"{row['tokens_per_s']:.1f} tok/s, "
               f"{row['host_syncs_per_token']:.3f} syncs/tok")
     return rows
+
+
+SPEC_CONFIGS = ((2, "ngram"), (2, "layers:2"))
 
 
 def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
@@ -202,6 +215,21 @@ def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
                   f"{row['tokens_per_s']:.1f} tok/s, "
                   f"{row['host_syncs_per_token']:.3f} syncs/tok, "
                   f"cache {row['cache_bytes']/2**20:.2f} MiB")
+    # speculative rows: the latent cache's halved footprint buys slots;
+    # speculation spends them on step count — accept rate is the recorded
+    # trajectory (tokens/s on CPU interpret-ish models is a correctness
+    # trace; the ratio becomes a speed claim on real accelerators)
+    for spec_depth, draft in SPEC_CONFIGS:
+        t0 = time.time()
+        row = bench_engine(arch, "latent", "einsum", slots=slots,
+                           max_len=max_len, requests=requests,
+                           new_tokens=new_tokens, sync_every=sync_every,
+                           spec_depth=spec_depth, draft=draft)
+        row["bench_seconds"] = round(time.time() - t0, 1)
+        rows.append(row)
+        print(f"serving/latent/einsum/spec={spec_depth}/{draft}: "
+              f"{row['tokens_per_s']:.1f} tok/s, "
+              f"accept rate {row['accept_rate']:.2f}")
     if mesh_rows:
         rows += bench_mesh_rows(arch, slots=slots, max_len=max_len,
                                 requests=requests, new_tokens=new_tokens,

@@ -56,6 +56,14 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="mesh shape, e.g. 2,4 (slots shard over data, "
                          "cache sequence over model); default single-device")
+    ap.add_argument("--spec-depth", type=int, default=0,
+                    help="speculative decoding: draft tokens verified per "
+                         "window iteration (0 disables; streams are "
+                         "invariant to this knob)")
+    ap.add_argument("--draft", default=None,
+                    help="draft proposer for --spec-depth > 0: 'ngram' "
+                         "(prompt lookup, default) or 'layers:K' (self-"
+                         "draft from the target's first K layers)")
     args = ap.parse_args(argv)
 
     kw = {"smoke": args.smoke}
@@ -78,11 +86,14 @@ def main(argv=None):
                  source=src, backend=args.backend, sampling=sampling,
                  sync_every=args.sync_every,
                  prefill_chunk=args.prefill_chunk,
-                 mesh=mesh_from_spec(args.mesh))
+                 mesh=mesh_from_spec(args.mesh),
+                 spec_depth=args.spec_depth, draft=args.draft)
+    spec = (f", spec_depth={args.spec_depth} ({eng.metrics()['draft']})"
+            if args.spec_depth else "")
     print(f"[serve] {cfg.name}: cache {cache_bytes(eng.cache)/2**20:.1f} MiB "
           f"({args.slots} slots x {args.max_len} positions), "
           f"sync_every={args.sync_every}, mesh={eng.mesh_str} "
-          f"({len(jax.devices())} devices)")
+          f"({len(jax.devices())} devices){spec}")
 
     g = np.random.default_rng(1)
     for i in range(args.requests):
@@ -98,6 +109,10 @@ def main(argv=None):
           f"(decode windows: {m['decode_syncs_per_token']:.3f}), "
           f"occupancy {m['occupancy_mean']:.2f}/{args.slots}, "
           f"queue depth {m['queue_depth_mean']:.2f}")
+    if args.spec_depth:
+        print(f"[serve] speculation: accept rate {m['accept_rate']:.2f} "
+              f"({m['draft_accepted']}/{m['draft_proposed']} draft tokens "
+              f"accepted)")
     if eng.unfinished["queued"] or eng.unfinished["in_flight"]:
         print(f"[serve] WARNING unfinished: {eng.unfinished}")
     return finished

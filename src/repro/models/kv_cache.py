@@ -381,6 +381,191 @@ def decode_attn_mla(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     return y, {"ckv": ckv_new, "krope": kr_new, "pos": cur.astype(jnp.int32)}
 
 
+# ---------------------------------------------------------------------------
+# Verify readers (speculative decoding: S fed tokens per step, x: (B, S, d))
+# ---------------------------------------------------------------------------
+#
+# The verify step generalizes the single-token decode readers to S
+# consecutive positions cur..cur+S-1 processed in ONE pass: query j
+# attends the ring (entries with pos <= cur+j) plus a causal block over
+# the S fresh K/V columns.  Ring writes stay DEFERRED one level further
+# than decode: the (B, S, ...) entry updates are returned to the caller,
+# which commits only the ACCEPTED prefix (apply_verify_writes) after the
+# accept/reject pass — a rejected draft token never touches any ring, so
+# the cache after a speculative round is identical to sequential decode.
+# Masked self columns contribute exp(NEG_INF - m) == 0 exactly, keeping
+# each valid query's softmax bitwise equal to its single-token form.
+
+
+def _joint_softmax(logits_c: jax.Array, logits_s: jax.Array):
+    """Softmax over [ring columns | S self columns] without concatenating
+    (the multi-column generalization of ``_two_part_softmax``; for a
+    single self column the two are bitwise identical).
+    logits_c: (..., S_ring);  logits_s: (..., S_new)."""
+    m = jnp.maximum(jnp.max(logits_c, axis=-1, keepdims=True),
+                    jnp.max(logits_s, axis=-1, keepdims=True))
+    e_c = jnp.exp(logits_c - m)
+    e_s = jnp.exp(logits_s - m)
+    denom = (jnp.sum(e_c, axis=-1, keepdims=True)
+             + jnp.sum(e_s, axis=-1, keepdims=True))
+    return e_c / denom, e_s / denom
+
+
+def _verify_masks(cache_pos: jax.Array, cur: jax.Array, S: int,
+                  feed_mask: jax.Array, window: int | None):
+    """(ring, self) attention masks for an S-token verify step.
+
+    ring: (B, S, L) — query j sees ring entries with 0 <= pos <= cur+j
+    (window-limited); self: (B, S, S) — query j sees fresh columns n <= j
+    that are actual feed candidates (``feed_mask``)."""
+    pos_q = cur[:, None] + jnp.arange(S, dtype=cur.dtype)[None, :]
+    ring = (cache_pos[:, None, :] >= 0) & (cache_pos[:, None, :]
+                                           <= pos_q[:, :, None])
+    j = jnp.arange(S)
+    self_m = (j[None, :, None] >= j[None, None, :]) & feed_mask[:, None, :]
+    if window is not None:
+        ring &= cache_pos[:, None, :] > pos_q[:, :, None] - window
+        self_m &= j[None, None, :] > j[None, :, None] - window
+    return pos_q, ring, self_m
+
+
+def verify_attn_dense(p: Params, x: jax.Array, cache: Params,
+                      cfg: ModelConfig, cur: jax.Array,
+                      feed_mask: jax.Array, window: int | None,
+                      theta: float | None = None):
+    """Dense S-token verify.  Returns (y (B, S, d), deferred updates with
+    (B, S, ...) entry leaves — committed by the caller per accept mask).
+    Always the einsum path: the pallas kernels are single-query."""
+    B, S = x.shape[:2]
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    g = H // Hkv
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k_new = (x @ p["wk"]).reshape(B, S, Hkv, dh)
+    v_new = (x @ p["wv"]).reshape(B, S, Hkv, dh)
+    q = L.maybe_head_norm(q, p.get("q_norm"), cfg.norm_eps)
+    k_new = L.maybe_head_norm(k_new, p.get("k_norm"), cfg.norm_eps)
+    pos_q, ring_m, self_m = _verify_masks(cache["pos"], cur, S, feed_mask,
+                                          window)
+    cos, sin = L.rope_tables(pos_q, dh, theta or cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k_new = L.apply_rope(k_new, cos, sin)
+
+    scale = dh ** -0.5
+    qr = q.reshape(B, S, Hkv, g, dh)
+    k_c = cache["k"].astype(x.dtype)
+    logits_c = (jnp.einsum("bjkgd,bskd->bkgjs", qr, k_c)
+                .astype(jnp.float32) * scale)
+    logits_c = jnp.where(ring_m[:, None, None], logits_c, NEG_INF)
+    logits_s = (jnp.einsum("bjkgd,bnkd->bkgjn", qr, k_new)
+                .astype(jnp.float32) * scale)
+    logits_s = jnp.where(self_m[:, None, None], logits_s, NEG_INF)
+    w_c, w_s = _joint_softmax(logits_c, logits_s)
+    w_c, w_s = w_c.astype(x.dtype), w_s.astype(x.dtype)
+    o = (jnp.einsum("bkgjs,bskd->bjkgd", w_c, cache["v"].astype(x.dtype))
+         + jnp.einsum("bkgjn,bnkd->bjkgd", w_s, v_new))
+    y = o.reshape(B, S, H * dh) @ p["wo"]
+    return y, {"k": k_new, "v": v_new, "pos": pos_q.astype(jnp.int32)}
+
+
+def verify_attn_latent(p: Params, x: jax.Array, cache: Params,
+                       cfg: ModelConfig, cur: jax.Array,
+                       feed_mask: jax.Array, window: int | None,
+                       theta: float | None = None):
+    """ReCalKV S-token verify (see verify_attn_dense): cached keys are
+    reconstructed and RoPE'd by stored position, fresh latents enter as a
+    causal self block, values stay latent through the fused W~_o."""
+    theta = theta or cfg.rope_theta
+    B, S = x.shape[:2]
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    rt = cfg.recalkv
+    s = max(1, min(rt.group_size, Hkv))
+    G = Hkv // s
+    g = H // Hkv
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    q = L.maybe_head_norm(q, p.get("q_norm"), cfg.norm_eps)
+    pos_q, ring_m, self_m = _verify_masks(cache["pos"], cur, S, feed_mask,
+                                          window)
+    cos_q, sin_q = L.rope_tables(pos_q, dh, theta)
+    q = L.apply_rope(q, cos_q, sin_q)
+    qr = q.reshape(B, S, Hkv, g, dh)
+
+    zk_new = jnp.einsum("bjd,gdr->bjgr", x, p["l_k"]).astype(x.dtype)
+    zv_new = jnp.einsum("bjd,gdr->bjgr", x, p["l_v"]).astype(x.dtype)
+    entry = latent_cache_entry(cfg, zk_new, zv_new)
+    zk_c, zv_c = latent_cache_arrays(cache, x.dtype)
+    zk_self, zv_self = latent_cache_arrays(entry, x.dtype)
+
+    k = L.reconstruct_keys(zk_c, p["r_k"], Hkv, dh)
+    k = L.maybe_head_norm(k, p.get("k_norm"), cfg.norm_eps)
+    cos_k, sin_k = L.rope_tables(jnp.maximum(cache["pos"], 0), dh, theta)
+    k = L.apply_rope(k, cos_k, sin_k)
+    k_self = L.reconstruct_keys(zk_self, p["r_k"], Hkv, dh)
+    k_self = L.maybe_head_norm(k_self, p.get("k_norm"), cfg.norm_eps)
+    k_self = L.apply_rope(k_self, cos_q, sin_q)             # (B, S, Hkv, dh)
+
+    scale = dh ** -0.5
+    logits_c = (jnp.einsum("bjkgd,bskd->bkgjs", qr, k)
+                .astype(jnp.float32) * scale)
+    logits_c = jnp.where(ring_m[:, None, None], logits_c, NEG_INF)
+    logits_s = (jnp.einsum("bjkgd,bnkd->bkgjn", qr, k_self)
+                .astype(jnp.float32) * scale)
+    logits_s = jnp.where(self_m[:, None, None], logits_s, NEG_INF)
+    w_c, w_s = _joint_softmax(logits_c, logits_s)
+    Lr = zk_c.shape[1]
+    w_cg = w_c.astype(x.dtype).reshape(B, G, s * g, S, Lr)
+    w_sg = w_s.astype(x.dtype).reshape(B, G, s * g, S, S)
+    o_lat = (jnp.einsum("bGhjs,bsGr->bjGhr", w_cg, zv_c)
+             + jnp.einsum("bGhjn,bnGr->bjGhr", w_sg, zv_self))
+    o_lat = o_lat.reshape(B, S, H, -1)
+    y = jnp.einsum("bjhr,hrd->bjd", o_lat, p["wo_fused"])
+    return y, {**entry, "pos": pos_q.astype(jnp.int32)}
+
+
+def verify_attn_mla(p: Params, x: jax.Array, cache: Params,
+                    cfg: ModelConfig, cur: jax.Array, feed_mask: jax.Array):
+    """Absorbed-MLA S-token verify (see verify_attn_dense)."""
+    a = cfg.mla
+    B, S = x.shape[:2]
+    H = cfg.num_heads
+    dn, dr, dv = a.qk_nope_dim, a.qk_rope_dim, a.v_head_dim
+    q_lat = L.rmsnorm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, S, H, dn + dr)
+    pos_q, ring_m, self_m = _verify_masks(cache["pos"], cur, S, feed_mask,
+                                          None)
+    cos, sin = L.rope_tables(pos_q, dr, cfg.rope_theta)
+    q_pe = L.apply_rope(q[..., dn:], cos, sin)              # (B, S, H, dr)
+    q_nope = q[..., :dn]
+
+    kv_a = x @ p["wkv_a"]
+    ckv_new = L.rmsnorm(kv_a[..., : a.kv_lora_rank], p["kv_a_norm"],
+                        cfg.norm_eps).astype(x.dtype)
+    kr_new = L.apply_rope(
+        kv_a[..., a.kv_lora_rank:][:, :, None, :], cos, sin)[:, :, 0]
+    kr_new = kr_new.astype(x.dtype)
+
+    wkv_b = p["wkv_b"].reshape(a.kv_lora_rank, H, dn + dv)
+    w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_abs = jnp.einsum("bjhd,rhd->bjhr", q_nope, w_k)
+    scale = (dn + dr) ** -0.5
+    logits_c = (
+        jnp.einsum("bjhr,bsr->bhjs", q_abs, cache["ckv"].astype(x.dtype))
+        + jnp.einsum("bjhd,bsd->bhjs", q_pe, cache["krope"].astype(x.dtype))
+    ).astype(jnp.float32) * scale
+    logits_c = jnp.where(ring_m[:, None], logits_c, NEG_INF)
+    logits_s = (jnp.einsum("bjhr,bnr->bhjn", q_abs, ckv_new)
+                + jnp.einsum("bjhd,bnd->bhjn", q_pe, kr_new)
+                ).astype(jnp.float32) * scale
+    logits_s = jnp.where(self_m[:, None], logits_s, NEG_INF)
+    w_c, w_s = _joint_softmax(logits_c, logits_s)
+    w_c, w_s = w_c.astype(x.dtype), w_s.astype(x.dtype)
+    o_lat = (jnp.einsum("bhjs,bsr->bjhr", w_c, cache["ckv"].astype(x.dtype))
+             + jnp.einsum("bhjn,bnr->bjhr", w_s, ckv_new))
+    o = jnp.einsum("bjhr,rhd->bjhd", o_lat, w_v)
+    y = o.reshape(B, S, H * dv) @ p["wo"]
+    return y, {"ckv": ckv_new, "krope": kr_new,
+               "pos": pos_q.astype(jnp.int32)}
+
+
 def _merge_leaf(cache_leaf, upd, cur: jax.Array, stacked: bool,
                 active: jax.Array | None):
     if upd is None:
@@ -450,14 +635,74 @@ def apply_decode_writes(caches: Params, updates: Params, cur: jax.Array,
     }
 
 
+def _slice_update_leaf(path, upd, j: int):
+    """Column j of an S-position verify update leaf.  Leaves under the
+    scanned "blocks" subtree carry a leading (n_periods,) stack axis."""
+    if upd is None:
+        return None
+    key0 = getattr(path[0], "key", None)
+    return upd[:, :, j] if key0 == "blocks" else upd[:, j]
+
+
+def apply_verify_writes(caches: Params, updates: Params, cur: jax.Array,
+                        mask: jax.Array) -> Params:
+    """Commit an S-position verify step's deferred writes for the accepted
+    prefix only.
+
+    ``updates`` is the tree returned by ``transformer.verify_step`` (entry
+    leaves (B, S, ...)); column j writes at position cur + j where
+    ``mask[:, j]``.  Columns are applied in ascending j (last-wins exactly
+    as S sequential decode writes would), so the ring after a speculative
+    round is identical to sequential decode of the accepted tokens —
+    rejected draft positions never write at all."""
+    S = mask.shape[1]
+    for j in range(S):
+        upd_j = jax.tree_util.tree_map_with_path(
+            lambda path, u: _slice_update_leaf(path, u, j), updates,
+            is_leaf=lambda u: u is None)
+        caches = apply_decode_writes(caches, upd_j, cur + j,
+                                     active=mask[:, j])
+    return caches
+
+
+def invalidate_positions(caches: Params, cur: jax.Array,
+                         mask: jax.Array) -> Params:
+    """Mark ring entries at position ``cur`` as empty (pos = -1) for rows
+    where ``mask``.  Used to retire a draft model's ring entries for
+    rejected proposals: the draft writes as it proposes (each proposal
+    attends the previous one), so rejected columns must be struck from
+    the position index or they would shadow the slot until overwritten."""
+    def one(path, leaf):
+        names = _path_keys(path)
+        if names[-1] != "pos":
+            return leaf
+        stacked = names[0] == "blocks"
+        b_ax = 1 if stacked else 0
+        Lr = leaf.shape[b_ax + 1]
+        slot = (cur % Lr).astype(jnp.int32)
+        hit = (jnp.arange(Lr, dtype=jnp.int32)[None, :] == slot[:, None])
+        hit &= mask[:, None]
+        if stacked:
+            hit = hit[None]
+        return jnp.where(hit, jnp.int32(-1), leaf)
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def _path_keys(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
 def decode_cross_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig):
-    B = x.shape[0]
+    """Cross-attention reader for decode (x: (B, 1, d)) and verify
+    (x: (B, S, d)) steps — the source is static, so the token axis is
+    just a query axis."""
+    B, T = x.shape[:2]
     H, dh = cfg.num_heads, cfg.d_head
-    q = (x @ p["wq"]).reshape(B, 1, H, dh)
+    q = (x @ p["wq"]).reshape(B, T, H, dh)
     q = L.maybe_head_norm(q, p.get("q_norm"), cfg.norm_eps)
     o = L._attend(q, cache["k"].astype(x.dtype), cache["v"].astype(x.dtype),
                   None, dh ** -0.5)
-    return o.reshape(B, 1, H * dh) @ p["wo"], cache
+    return o.reshape(B, T, H * dh) @ p["wo"], cache
 
 
 def decode_cross_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig):

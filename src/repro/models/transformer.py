@@ -386,6 +386,68 @@ def block_decode(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Block application — multi-token verify step (speculative decoding)
+# ---------------------------------------------------------------------------
+
+VERIFY_KINDS = ("attn", "attn_dense", "local", "cross", "attn_cross")
+
+
+def block_verify(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                 cache: Params, ctx: dict):
+    """One block for a (B, S, d) verify step over S fed tokens at
+    positions cur..cur+S-1.  Returns (x, updates, aux) with DEFERRED
+    (B, S, ...) entry updates — the caller commits only the accepted
+    prefix via ``kv_cache.apply_verify_writes``.
+
+    Recurrent blocks (mamba / rglru) are unsupported: their state update
+    is not position-addressed, so a rejected token could not be rolled
+    back by masking the write."""
+    if kind in ("mamba", "rglru"):
+        raise NotImplementedError(
+            f"speculative verify is unsupported for recurrent "
+            f"{kind!r} blocks")
+    aux = jnp.float32(0.0)
+    cur, feed_mask = ctx["cur"], ctx["feed_mask"]
+    if kind == "cross":
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        reader = (KC.decode_cross_latent if cfg.recalkv is not None
+                  else KC.decode_cross_dense)
+        y, _ = reader(p["cross"], h, cache["cross"], cfg)
+        x = x + y
+        h, a = L.ffn(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg,
+                     dense=True)
+        return x + h, {"cross": None}, aux + a
+
+    window = cfg.window_for(kind)
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        y, sc = KC.verify_attn_mla(p["attn"], h, cache["self"], cfg, cur,
+                                   feed_mask)
+    elif cfg.recalkv is not None:
+        y, sc = KC.verify_attn_latent(p["attn"], h, cache["self"], cfg, cur,
+                                      feed_mask, window,
+                                      theta=_theta(cfg, kind))
+    else:
+        y, sc = KC.verify_attn_dense(p["attn"], h, cache["self"], cfg, cur,
+                                     feed_mask, window,
+                                     theta=_theta(cfg, kind))
+    x = x + y
+    updates = {"self": sc}
+
+    if kind == "attn_cross":
+        hx = L.rmsnorm(x, p["lnx"], cfg.norm_eps)
+        reader = (KC.decode_cross_latent if cfg.recalkv is not None
+                  else KC.decode_cross_dense)
+        y, _ = reader(p["cross"], hx, cache["cross"], cfg)
+        x = x + y
+        updates["cross"] = None
+
+    h, a = L.ffn(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg,
+                 dense=(kind in ("attn_dense", "attn_cross")))
+    return x + h, updates, aux + a
+
+
+# ---------------------------------------------------------------------------
 # Stack runner (prefix unrolled -> scanned periods -> suffix unrolled)
 # ---------------------------------------------------------------------------
 
@@ -396,11 +458,16 @@ def _layer_layout(cfg: ModelConfig):
 
 
 def run_stack(cfg: ModelConfig, params: Params, x: jax.Array, ctx: dict,
-              caches: Params | None, *, decode: bool = False):
+              caches: Params | None, *, decode: bool = False,
+              verify: bool = False):
     """Apply the whole stack.  Returns (x, new_caches, aux)."""
     prefix, pattern, suffix, n_per = _layer_layout(cfg)
-    apply_fn = block_decode if decode else partial(
-        block_full, want_cache=caches is not None)
+    if verify:
+        apply_fn = block_verify
+    elif decode:
+        apply_fn = block_decode
+    else:
+        apply_fn = partial(block_full, want_cache=caches is not None)
     want_cache = caches is not None
     aux = jnp.float32(0.0)
     new_caches: Params = {"prefix": [], "blocks": None, "suffix": []}
@@ -592,6 +659,39 @@ def decode_step(cfg: ModelConfig, params: Params, caches: Params,
     caches = KC.constrain_caches(caches, cache_shardings)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return logits_for(cfg, params, x)[:, 0], caches
+
+
+def verify_step(cfg: ModelConfig, params: Params, caches: Params,
+                tokens: jax.Array, cur: jax.Array, feed_mask: jax.Array):
+    """Speculative-decoding target verification: logits for S fed tokens
+    in ONE pass (one weight/cache read amortized over S positions — the
+    step-count lever low-rank caches leave on the table).
+
+    tokens: (B, S) int32 — tokens[:, 0] is the slot's next sequential
+    feed, columns 1.. are draft proposals.  cur: (B,) absolute position
+    of column 0.  feed_mask: (B, S) bool marks candidate columns (masked
+    columns contribute no K/V and their logits are garbage).
+
+    Cache writes are NOT applied here: the deferred (B, S, ...) updates
+    are returned so the caller can run accept/reject on the logits and
+    commit only the accepted prefix via :func:`commit_verify_writes` —
+    the ring then never sees a rejected token.  Returns
+    (logits (B, S, V) float32, updates)."""
+    x = embed_tokens(cfg, params, jnp.maximum(tokens, 0))
+    ctx = {"cur": cur, "feed_mask": feed_mask}
+    x, updates, _ = run_stack(cfg, params, x, ctx, caches=caches,
+                              decode=True, verify=True)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits_for(cfg, params, x), updates
+
+
+def commit_verify_writes(caches: Params, updates: Params, cur: jax.Array,
+                         mask: jax.Array, *, cache_shardings=None) -> Params:
+    """Apply a verify step's deferred writes for the accepted prefix
+    (``mask`` (B, S) bool) and re-pin the cache layout (see
+    :func:`decode_step`)."""
+    caches = KC.apply_verify_writes(caches, updates, cur, mask)
+    return KC.constrain_caches(caches, cache_shardings)
 
 
 def decode_loop(cfg: ModelConfig, params: Params, caches: Params,

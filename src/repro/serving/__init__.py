@@ -1,8 +1,10 @@
 """Serving subsystem: scheduler (admission) / sampler (token choice) /
-engine (executor with the fused device-resident decode loop)."""
+draft (speculative proposers) / engine (executor with the fused
+device-resident decode loop)."""
 
+from repro.serving.draft import DraftSpec
 from repro.serving.engine import Engine
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["Engine", "Request", "SamplingParams", "Scheduler"]
+__all__ = ["DraftSpec", "Engine", "Request", "SamplingParams", "Scheduler"]

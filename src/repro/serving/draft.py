@@ -1,0 +1,123 @@
+"""Draft proposers for speculative decoding on the serving engine.
+
+Two draft families, selected by the engine's ``draft=`` spec string:
+
+  "ngram"      prompt-lookup proposer: match the token about to be fed
+               (and its predecessor) against the slot's own fed-token
+               history and propose the tokens that followed the most
+               recent earlier occurrence.  No parameters, no extra cache
+               — pays off on repetitive continuations (code, extraction,
+               self-repetition).
+  "layers:K"   self-draft from the target's own first K layers (shared
+               embed / final norm / lm_head, zero extra parameters): the
+               truncated stack runs its own (cheap, K-layer) ring cache
+               and proposes greedily.  The classic layer-skip draft.
+
+Proposals are *guesses*: the target's verify step accepts a proposal only
+when it equals the token the target's own sampler would have emitted
+(per-slot key stream and all), so draft quality affects throughput, never
+the token stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftSpec:
+    """Parsed ``draft=`` engine option."""
+
+    kind: str                  # "ngram" | "layers"
+    layers: int = 0            # draft depth for kind == "layers"
+
+    @classmethod
+    def parse(cls, spec: "str | DraftSpec | None") -> "DraftSpec | None":
+        if spec is None or isinstance(spec, DraftSpec):
+            return spec
+        s = str(spec).strip().lower()
+        if s in ("", "none"):
+            return None
+        if s == "ngram":
+            return cls("ngram")
+        for sep in (":", "="):
+            if s.startswith("layers" + sep):
+                try:
+                    k = int(s.split(sep, 1)[1])
+                except ValueError:
+                    break
+                return cls("layers", k)
+        raise ValueError(
+            f"draft spec {spec!r} not understood: expected 'ngram' or "
+            f"'layers:K' (first K layers of the target as a self-draft)")
+
+
+def ngram_propose(hist: jax.Array, cur: jax.Array, tok_in: jax.Array,
+                  depth: int) -> jax.Array:
+    """Prompt-lookup proposals.  hist: (B, L) fed-token history (position
+    p holds the token fed at p; entries at p >= cur are stale).  cur: (B,)
+    next feed position; tok_in: (B,) the token about to be fed at cur.
+
+    Matches the bigram (hist[cur-1], tok_in) against history and proposes
+    the ``depth`` tokens that followed its most recent earlier occurrence.
+    Unknown positions are filled with -1 — never equal to a sampled token,
+    so they are simply rejected by verification."""
+    B, Lh = hist.shape
+    prev = jnp.take_along_axis(
+        hist, jnp.clip(cur - 1, 0, Lh - 1)[:, None], axis=1)[:, 0]
+    idx = jnp.arange(Lh - 1, dtype=cur.dtype)
+    m = ((hist[:, :-1] == prev[:, None]) & (hist[:, 1:] == tok_in[:, None])
+         & (idx[None, :] + 1 < cur[:, None]) & (cur[:, None] >= 2))
+    p = jnp.max(jnp.where(m, idx[None, :], -1), axis=1)       # (B,) or -1
+    offs = p[:, None] + 2 + jnp.arange(depth, dtype=cur.dtype)[None, :]
+    known = (p[:, None] >= 0) & (offs < cur[:, None])
+    prop = jnp.take_along_axis(hist, jnp.clip(offs, 0, Lh - 1), axis=1)
+    return jnp.where(known, prop, jnp.int32(-1))
+
+
+def make_layer_draft(cfg: ModelConfig, params,
+                     k: int) -> tuple[ModelConfig, dict]:
+    """Self-draft from the target's first ``k`` layers.
+
+    Returns (draft_cfg, draft_params) where the params VIEW shares the
+    target's leaves (embed, final norm, lm_head, the first k blocks) —
+    no new weights.  ``expanded_layers`` of the truncated config is by
+    construction the first k kinds of the target's, so per-layer state
+    (e.g. Fisher-allocated ranks indexed by global layer position) lines
+    up."""
+    if not 1 <= k <= cfg.num_layers:
+        raise ValueError(
+            f"layers draft wants {k} layers; target has {cfg.num_layers}")
+    kinds = cfg.expanded_layers()[:k]
+    if any(kd in ("mamba", "rglru") for kd in kinds):
+        raise ValueError("layers draft cannot include recurrent blocks")
+    dcfg = dataclasses.replace(cfg, name=f"{cfg.name}-draft{k}",
+                               num_layers=k)
+    dparams = {kk: params[kk] for kk in ("embed", "final_norm")}
+    if "lm_head" in params:
+        dparams["lm_head"] = params["lm_head"]
+    if "encoder" in params:
+        dparams["encoder"] = params["encoder"]
+    npfx = len(cfg.prefix_pattern)
+    if not cfg.scan_layers or cfg.num_periods == 0:
+        dparams["prefix"] = tuple(params["prefix"][:k])
+        dparams["blocks"], dparams["suffix"] = (), ()
+        return dcfg, dparams
+    dparams["prefix"] = tuple(params["prefix"][:min(k, npfx)])
+    blocks, suffix = (), ()
+    body = k - npfx
+    if body > 0:
+        m, rem = divmod(body, cfg.period)
+        if m > 0:
+            blocks = tuple(jax.tree.map(lambda a: a[:m], b)
+                           for b in params["blocks"])
+        if rem > 0:
+            suffix = tuple(jax.tree.map(lambda a: a[m], b)
+                           for b in params["blocks"][:rem])
+    dparams["blocks"], dparams["suffix"] = blocks, suffix
+    return dcfg, dparams

@@ -31,6 +31,21 @@ in a per-slot device buffer and is *fed* through decode steps (cache
 writes at the token's true position, sampled outputs discarded until the
 final prompt token), so decode-phase slots keep emitting between chunks.
 
+Speculative decoding (``spec_depth > 0``) upgrades each window iteration
+from one token to up to ``spec_depth + 1``: a draft (prompt-lookup
+n-gram, or the target's own first K layers — see ``serving.draft``)
+proposes ``spec_depth`` tokens, and ONE multi-token ``T.verify_step``
+scores all proposals against target logits.  Acceptance is the
+deterministic specialization of accept/reject-with-residual-resampling:
+the per-slot sampler (policy + key stream) is a deterministic function,
+so a proposal is accepted iff it equals the token the target would have
+emitted, and the first rejection emits the target's own draw (the
+residual collapses onto it).  Keys still advance once per *emitted*
+token and rejected proposals never touch any ring, so token streams are
+invariant to speculation depth — the draft buys step-count, never
+changes output.  The accept mask and fed-token history ride the same
+slot-sharded device carry (``rules.carry_specs``); no new collectives.
+
 With ReCalKV enabled the resident cache is the *latent* ring — at 50%
 compression the same HBM holds 2x the slots (the paper's serving win).
 """
@@ -48,14 +63,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.mesh import single_device_mesh
+from repro.models import kv_cache as KC
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving import draft as D
 from repro.serving import sampler as S
+from repro.serving.draft import DraftSpec
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 from repro.sharding import rules as R
 
-__all__ = ["Engine", "Request", "SamplingParams"]
+__all__ = ["Engine", "Request", "SamplingParams", "DraftSpec"]
 
 
 def _merge_slot(pool_cache, new_cache, slots: jax.Array):
@@ -93,6 +111,10 @@ class Engine:
     ``mesh`` is a ("data", "model") jax Mesh (see ``launch.mesh``); the
     slot axis shards over "data", the cache ring's sequence axis over
     "model".  Default: a (1, 1) single-device mesh.
+    ``spec_depth`` turns on speculative decoding: up to that many draft
+    tokens verified per window iteration (0 disables).  ``draft`` picks
+    the proposer — "ngram" (default) or "layers:K" (self-draft from the
+    target's first K layers); token streams are invariant to both knobs.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
@@ -100,16 +122,36 @@ class Engine:
                  backend: str | None = None,
                  sampling: SamplingParams | None = None,
                  sync_every: int = 8, prefill_chunk: int | None = None,
-                 mesh: jax.sharding.Mesh | None = None):
+                 mesh: jax.sharding.Mesh | None = None,
+                 spec_depth: int = 0,
+                 draft: str | DraftSpec | None = None):
         if backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=backend)
         if sync_every < 1:
             raise ValueError("sync_every must be >= 1")
+        if spec_depth < 0:
+            raise ValueError("spec_depth must be >= 0")
+        if spec_depth > 0:
+            bad = [k for k in cfg.expanded_layers() if k in ("mamba",
+                                                             "rglru")]
+            if bad:
+                raise ValueError(
+                    f"spec_depth > 0 needs position-addressed caches; "
+                    f"{cfg.name} has recurrent {sorted(set(bad))} blocks "
+                    f"whose state cannot roll back a rejected token")
         self.cfg = cfg
         self.B, self.max_len = max_slots, max_len
         self.source = source
         self.sampling = sampling or S.GREEDY
         self.sync_every = sync_every
+        self.spec_depth = spec_depth
+        parsed_draft = DraftSpec.parse(draft)
+        if parsed_draft is not None and spec_depth == 0:
+            raise ValueError(
+                f"draft={draft!r} requires spec_depth > 0 — a draft with "
+                f"no speculation depth would be silently ignored")
+        self.draft = (parsed_draft or DraftSpec("ngram")
+                      if spec_depth > 0 else None)
         self.mesh = mesh if mesh is not None else single_device_mesh()
         # slots-per-shard admission locality: only meaningful when the
         # slot axis actually shards (divisible); else one logical shard
@@ -130,6 +172,26 @@ class Engine:
         self._cache_shardings = R.to_named(
             R.cache_specs(cache, self.mesh), self.mesh)
         self.cache = jax.device_put(cache, self._cache_shardings)
+        # Layer-fraction draft: a VIEW over the target's first K layers
+        # (no new weights) with its own — much smaller — ring cache,
+        # sharded by the same rules and carried through the window.
+        self.draft_params = self.draft_cache = None
+        self._draft_cfg = self._draft_cache_shardings = None
+        draft_param_shardings = None
+        if self.draft is not None and self.draft.kind == "layers":
+            dcfg, dparams = D.make_layer_draft(cfg, self.params,
+                                               self.draft.layers)
+            self._draft_cfg = dcfg
+            draft_param_shardings = R.to_named(
+                R.param_specs(dparams, self.mesh,
+                              grains=R.head_grains(dcfg)), self.mesh)
+            self.draft_params = jax.device_put(dparams,
+                                               draft_param_shardings)
+            dcache = T.init_decode_cache(dcfg, max_slots, max_len)
+            self._draft_cache_shardings = R.to_named(
+                R.cache_specs(dcache, self.mesh), self.mesh)
+            self.draft_cache = jax.device_put(
+                dcache, self._draft_cache_shardings)
         self.finished: list[Request] = []
         # per-slot host mirror of the device loop state (synced once per
         # window); the cache itself never leaves the device
@@ -149,6 +211,11 @@ class Engine:
             "bpos": np.zeros(max_slots, np.int32),
             "more": np.zeros(max_slots, bool),
         }
+        if spec_depth > 0:
+            # fed-token history: the n-gram draft's corpus, rebuilt from
+            # the prompt at admission and extended on-device as tokens
+            # are fed (a (B, max_len) carry leaf under carry_specs)
+            self._st["hist"] = np.zeros((max_slots, max_len), np.int32)
         # metrics (sums and `windows` advance atomically at each window
         # boundary in _harvest, so metrics() mid-stream is consistent)
         self.host_syncs = 0          # device->host harvest points
@@ -159,30 +226,54 @@ class Engine:
         self._occupancy_sum = 0
         self._queue_depth_sum = 0
         self._run_seconds = 0.0
+        self.draft_proposed = 0      # draft tokens fed to verification
+        self.draft_accepted = 0      # ... accepted (free extra tokens)
 
         self._prefill = jax.jit(
             lambda p, t, l: T.prefill(cfg, p, t, l, max_len=max_len,
                                       source=None if source is None
                                       else source[: t.shape[0]]),
             static_argnames=())
-        # Donate the cache buffer into the window: self.cache is rebound
-        # to the output, so XLA can update the ring in place instead of
-        # holding two full caches live — the cache IS the HBM footprint
-        # the paper halves.  (CPU ignores donation and would warn, so
-        # only donate where it takes effect.)
-        donate = (1,) if jax.default_backend() != "cpu" else ()
+        if self.draft_cache is not None:
+            dcfg = self._draft_cfg
+            self._draft_prefill = jax.jit(
+                lambda p, t, l: T.prefill(dcfg, p, t, l, max_len=max_len,
+                                          source=None if source is None
+                                          else source[: t.shape[0]]))
+        # Donate the cache buffer(s) into the window: self.cache is
+        # rebound to the output, so XLA can update the ring in place
+        # instead of holding two full caches live — the cache IS the HBM
+        # footprint the paper halves.  (CPU ignores donation and would
+        # warn, so only donate where it takes effect.)
         in_sh, out_sh = R.window_shardings(
             self.mesh, self.params, self.cache, self._st,
             param_shardings=param_shardings,
-            cache_shardings=self._cache_shardings)
+            cache_shardings=self._cache_shardings,
+            draft_params=self.draft_params, draft_cache=self.draft_cache,
+            draft_param_shardings=draft_param_shardings,
+            draft_cache_shardings=self._draft_cache_shardings,
+            spec_outputs=spec_depth > 0)
         logits_spec = jax.sharding.NamedSharding(
             self.mesh, R.slot_stacked_spec(max_slots, self.mesh,
                                            lead_dims=0))
-        self._window = jax.jit(
-            self._make_window(cfg, max_len, sync_every,
-                              cache_shardings=self._cache_shardings,
-                              logits_spec=logits_spec),
-            donate_argnums=donate, in_shardings=in_sh, out_shardings=out_sh)
+        if spec_depth == 0:
+            window_fn = self._make_window(
+                cfg, max_len, sync_every,
+                cache_shardings=self._cache_shardings,
+                logits_spec=logits_spec)
+            donate = (1,)
+        else:
+            window_fn = self._make_spec_window(
+                cfg, max_len, sync_every, spec_depth, draft=self.draft,
+                draft_cfg=self._draft_cfg,
+                cache_shardings=self._cache_shardings,
+                draft_cache_shardings=self._draft_cache_shardings,
+                logits_spec=logits_spec)
+            donate = (2, 3) if self.draft_cache is not None else (1,)
+        if jax.default_backend() == "cpu":
+            donate = ()
+        self._window = jax.jit(window_fn, donate_argnums=donate,
+                               in_shardings=in_sh, out_shardings=out_sh)
 
     # -- fused decode window -------------------------------------------------
 
@@ -249,6 +340,167 @@ class Engine:
 
         return window
 
+    # -- speculative decode window -------------------------------------------
+
+    @staticmethod
+    def _make_spec_window(cfg: ModelConfig, max_len: int, steps: int,
+                          depth: int, *, draft: DraftSpec, draft_cfg=None,
+                          cache_shardings=None, draft_cache_shardings=None,
+                          logits_spec=None):
+        """Build the jitted speculative window: ``steps`` iterations, each
+        verifying up to ``depth`` draft tokens in ONE target pass.
+
+        Per iteration, per slot: propose ``depth`` tokens (n-gram lookup
+        over the fed-token history, or greedy steps of the layer draft),
+        run one S = depth + 1 token ``T.verify_step``, then walk the S
+        positions in order: position j's target draw (the slot's policy
+        with its j-th key split) is the token sequential decoding would
+        emit there, so a proposal is accepted iff it matches; the first
+        mismatch emits the draw itself (deterministic residual) and stops
+        the round.  Only the accepted prefix is committed to the ring and
+        keys advance exactly once per emitted token — the sequential body
+        is the S = 1 special case, so streams are depth-invariant.
+        Ingesting (chunked-prefill) slots keep their one-token-per-
+        iteration behavior: their columns >= 1 are never candidates."""
+        S_pos = depth + 1
+        has_draft_model = draft.kind == "layers"
+
+        def round_body(params, dparams, cache, dcache, st):
+            feeding = st["bpos"] < st["avail"]
+            buf_tok = jnp.take_along_axis(
+                st["buf"],
+                jnp.minimum(st["bpos"], st["buf"].shape[1] - 1)[:, None],
+                axis=1)[:, 0]
+            tok_in = jnp.where(feeding, buf_tok, st["tok"])
+            stalled = st["more"] & ~feeding
+            stepping = st["act"] & ~stalled
+            speculating = stepping & ~feeding
+            cur = st["cur"]
+            js = jnp.arange(S_pos, dtype=cur.dtype)
+            cap_ok = (cur[:, None] + js[None, :]) < max_len      # (B, S)
+
+            # --- proposals (B, depth)
+            if has_draft_model:
+                props = []
+                d_tok, d_cur = tok_in, cur
+                # S_pos draft steps: feeds [tok_in, d1..d_depth], so the
+                # draft ring also covers the last (bonus) position on
+                # full acceptance; rejected columns are struck from its
+                # position index below.
+                for j in range(S_pos):
+                    act_j = (stepping if j == 0
+                             else speculating & cap_ok[:, j])
+                    dlogits, dcache = T.decode_step(
+                        draft_cfg, dparams, dcache, d_tok, d_cur, act_j,
+                        cache_shardings=draft_cache_shardings)
+                    d_cur = d_cur + act_j.astype(d_cur.dtype)
+                    if j < depth:
+                        d_tok = jnp.argmax(dlogits, -1).astype(jnp.int32)
+                        props.append(d_tok)
+                props = jnp.stack(props, axis=1)
+            else:
+                props = D.ngram_propose(st["hist"], cur, tok_in, depth)
+
+            # --- one multi-token target pass over [tok_in | proposals]
+            fed = jnp.concatenate([tok_in[:, None], props], axis=1)
+            cand = jnp.concatenate(
+                [stepping[:, None], speculating[:, None] & cap_ok[:, 1:]],
+                axis=1)                                          # (B, S)
+            logits, updates = T.verify_step(cfg, params, cache, fed, cur,
+                                            cand)
+            last_prompt = (feeding & ~st["more"]
+                           & (st["bpos"] + 1 >= st["avail"]))
+
+            # --- in-order accept / residual walk (j == emission index)
+            keys_state = st["keys"]
+            tok2 = st["tok"]
+            done_any = jnp.zeros_like(st["act"])
+            nemit = jnp.zeros_like(cur)
+            cols = []
+            emit_prev = s_prev = None
+            for j in range(S_pos):
+                if j == 0:
+                    valid_j = stepping
+                    emit_j = stepping & (~feeding | last_prompt)
+                else:
+                    valid_j = (emit_prev & ~done_any & cand[:, j]
+                               & (fed[:, j] == s_prev))
+                    emit_j = valid_j
+                ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys_state)
+                s_j = S.sample_tokens(logits[:, j], st["temp"],
+                                      st["top_k"], st["top_p"], ks[:, 1],
+                                      spec=logits_spec)
+                nemit = nemit + emit_j.astype(cur.dtype)
+                left_j = st["left"] - nemit
+                done_j = (emit_j & ((s_j == st["eos"]) | (left_j <= 0))
+                          | (valid_j & (cur + j + 1 >= max_len)))
+                done_any = done_any | done_j
+                keys_state = jnp.where(emit_j[:, None], ks[:, 0],
+                                       keys_state)
+                tok2 = jnp.where(emit_j, s_j, tok2)
+                cols.append((valid_j, emit_j, s_j))
+                emit_prev, s_prev = emit_j, s_j
+            valid = jnp.stack([c[0] for c in cols], axis=1)      # (B, S)
+            emits_r = jnp.stack([c[1] for c in cols], axis=1)
+            toks_r = jnp.stack([c[2] for c in cols], axis=1)
+
+            # --- commit the accepted prefix (rejected tokens never wrote)
+            cache = T.commit_verify_writes(cache, updates, cur, valid,
+                                           cache_shardings=cache_shardings)
+            if has_draft_model:
+                # the draft wrote as it proposed; strike rejected columns
+                # from its position index so they can't shadow the slot
+                for j in range(1, S_pos):
+                    dcache = KC.invalidate_positions(
+                        dcache, cur + j, cand[:, j] & ~valid[:, j])
+            hist = st["hist"]
+            iota = jnp.arange(hist.shape[1], dtype=cur.dtype)[None, :]
+            for j in range(S_pos):
+                hit = (iota == (cur + j)[:, None]) & valid[:, j][:, None]
+                hist = jnp.where(hit, fed[:, j][:, None], hist)
+
+            st2 = {**st,
+                   "tok": tok2,
+                   "cur": cur + valid.astype(cur.dtype).sum(axis=1),
+                   "act": st["act"] & ~done_any,
+                   "keys": keys_state,
+                   "bpos": st["bpos"] + feeding.astype(st["bpos"].dtype),
+                   "left": st["left"] - nemit,
+                   "hist": hist}
+            accepted = valid[:, 1:].astype(jnp.int32).sum(axis=1)
+            # count only REAL proposals: the n-gram draft pads unknown
+            # positions with -1 (guaranteed rejects), which would deflate
+            # accept_rate below what the draft actually achieves on the
+            # positions it dared to predict
+            proposed = ((cand[:, 1:] & (fed[:, 1:] >= 0))
+                        .astype(jnp.int32).sum(axis=1))
+            return cache, dcache, st2, (toks_r, emits_r, accepted,
+                                        proposed)
+
+        if has_draft_model:
+            def window(params, dparams, cache, dcache, st):
+                def body(carry, _):
+                    cache, dcache, st = carry
+                    cache, dcache, st2, ys = round_body(
+                        params, dparams, cache, dcache, st)
+                    return (cache, dcache, st2), ys
+                (cache, dcache, st), (toks, emits, acc, prop) = \
+                    jax.lax.scan(body, (cache, dcache, st), None,
+                                 length=steps)
+                return cache, dcache, st, toks, emits, acc, prop
+        else:
+            def window(params, cache, st):
+                def body(carry, _):
+                    cache, st = carry
+                    cache, _, st2, ys = round_body(params, None, cache,
+                                                   None, st)
+                    return (cache, st2), ys
+                (cache, st), (toks, emits, acc, prop) = jax.lax.scan(
+                    body, (cache, st), None, length=steps)
+                return cache, st, toks, emits, acc, prop
+
+        return window
+
     @classmethod
     def from_artifact(cls, path: str, *, max_slots: int, max_len: int,
                       source: jax.Array | None = None,
@@ -256,7 +508,9 @@ class Engine:
                       sampling: SamplingParams | None = None,
                       sync_every: int = 8,
                       prefill_chunk: int | None = None,
-                      mesh: jax.sharding.Mesh | None = None) -> "Engine":
+                      mesh: jax.sharding.Mesh | None = None,
+                      spec_depth: int = 0,
+                      draft: str | DraftSpec | None = None) -> "Engine":
         """Boot an engine straight from a saved compression artifact —
         the compress-offline / serve-forever workflow across processes."""
         from repro.api import load_artifact  # local: api imports models too
@@ -265,7 +519,7 @@ class Engine:
         return cls(art.cfg, art.params, max_slots=max_slots, max_len=max_len,
                    source=source, backend=backend, sampling=sampling,
                    sync_every=sync_every, prefill_chunk=prefill_chunk,
-                   mesh=mesh)
+                   mesh=mesh, spec_depth=spec_depth, draft=draft)
 
     # -- back-compat conveniences -------------------------------------------
 
@@ -324,6 +578,12 @@ class Engine:
             self.params, jnp.asarray(toks), jnp.asarray(lens))
         slots = jnp.asarray([s for s, _ in wave])
         self.cache = _merge_slot(self.cache, new_cache, slots)
+        if self.draft_cache is not None:
+            # the layer draft consumes the same wave so its ring tracks
+            # the target's (its logits here are irrelevant)
+            _, dnew = self._draft_prefill(
+                self.draft_params, jnp.asarray(toks), jnp.asarray(lens))
+            self.draft_cache = _merge_slot(self.draft_cache, dnew, slots)
         # Sample each wave row's first token with the SAME policy + key
         # split the decode window would use — a request's stream is then
         # identical whether its first token comes from the wave prefill
@@ -355,6 +615,11 @@ class Engine:
             st["eos"][slot] = -1 if r.eos_id is None else r.eos_id
             st["bpos"][slot] = 0
             st["act"][slot] = True
+            if "hist" in st:
+                # the WHOLE prompt is known at admission (even the not-
+                # yet-ingested tail): seed the n-gram corpus up front
+                st["hist"][slot] = 0
+                st["hist"][slot, : len(r.prompt)] = r.prompt
             rest = r.prompt[first_lens[i]:]
             if rest.size == 0:
                 # whole prompt prefilled: emit the first generated token
@@ -397,7 +662,14 @@ class Engine:
 
     def step(self):
         """Admit + refill, then run one ``sync_every``-token fused decode
-        window and harvest it (the single host sync of the step)."""
+        window and harvest it (the single host sync of the step).
+
+        Wall-clock accrues HERE (not in run()), so callers driving
+        ``step()`` directly — benches, external event loops — still get a
+        meaningful ``tokens_per_s`` out of :meth:`metrics`.  Idle no-op
+        calls (nothing active, nothing admitted) accrue nothing: an
+        event loop polling an empty engine must not dilute the rate."""
+        t0 = time.perf_counter()
         self._admit()
         self._refill()
         st = self._st
@@ -407,13 +679,26 @@ class Engine:
         # folded into the means in _harvest, atomically with `windows`
         occ, qd = self.scheduler.occupancy, self.scheduler.queue_depth
         state = {k: jnp.asarray(v) for k, v in st.items()}
-        self.cache, state, toks, emits = self._window(
-            self.params, self.cache, state)
-        self._harvest(state, toks, emits, occ, qd)
+        acc = prop = None
+        if self.draft_cache is not None:
+            (self.cache, self.draft_cache, state, toks, emits, acc,
+             prop) = self._window(self.params, self.draft_params,
+                                  self.cache, self.draft_cache, state)
+        elif self.spec_depth > 0:
+            self.cache, state, toks, emits, acc, prop = self._window(
+                self.params, self.cache, state)
+        else:
+            self.cache, state, toks, emits = self._window(
+                self.params, self.cache, state)
+        self._harvest(state, toks, emits, occ, qd, acc, prop)
+        self._run_seconds += time.perf_counter() - t0
 
-    def _harvest(self, state, toks, emits, occ: int, qd: int):
-        toks = np.asarray(toks)                 # (K, B)
-        emits = np.asarray(emits)               # (K, B)
+    def _harvest(self, state, toks, emits, occ: int, qd: int,
+                 acc=None, prop=None):
+        toks = np.asarray(toks)                 # (K, B) or (K, B, S)
+        emits = np.asarray(emits)
+        if toks.ndim == 2:                      # non-speculative window
+            toks, emits = toks[:, :, None], emits[:, :, None]
         self._st = {k: np.array(v) for k, v in state.items()}
         # every window-scoped counter advances together, here and only
         # here — a mid-stream metrics() call never sees sums from one
@@ -423,10 +708,14 @@ class Engine:
         self.tokens_emitted += int(emits.sum())
         self._occupancy_sum += occ
         self._queue_depth_sum += qd
+        if acc is not None:
+            self.draft_accepted += int(np.asarray(acc).sum())
+            self.draft_proposed += int(np.asarray(prop).sum())
         slot_req = self.scheduler.slot_req
         for k in range(toks.shape[0]):
-            for i in np.nonzero(emits[k])[0]:
-                slot_req[i].out_tokens.append(int(toks[k, i]))
+            for j in range(toks.shape[2]):
+                for i in np.nonzero(emits[k, :, j])[0]:
+                    slot_req[i].out_tokens.append(int(toks[k, i, j]))
         for slot, r in enumerate(slot_req):
             if r is not None and not self._st["act"][slot]:
                 self._finish(slot)
@@ -434,13 +723,12 @@ class Engine:
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive until drained or ``max_steps`` windows.  On timeout the
         engine warns and leaves the backlog inspectable via
-        ``engine.unfinished`` (callers distinguish drain from timeout)."""
-        t0 = time.perf_counter()
+        ``engine.unfinished`` (callers distinguish drain from timeout).
+        Wall-clock accrues per :meth:`step`, so run() stays additive."""
         steps = 0
         while self.scheduler.has_work and steps < max_steps:
             self.step()
             steps += 1
-        self._run_seconds += time.perf_counter() - t0
         if self.scheduler.has_work:
             u = self.unfinished
             warnings.warn(
@@ -468,6 +756,14 @@ class Engine:
             "windows": self.windows,
             "sync_every": self.sync_every,
             "mesh": self.mesh_str,
+            "spec_depth": self.spec_depth,
+            "draft": (None if self.draft is None else
+                      (self.draft.kind if self.draft.kind == "ngram"
+                       else f"layers:{self.draft.layers}")),
+            "draft_proposed": self.draft_proposed,
+            "draft_accepted": self.draft_accepted,
+            "accept_rate": (self.draft_accepted / self.draft_proposed
+                            if self.draft_proposed else 0.0),
             "host_syncs": self.host_syncs,
             "admission_syncs": self.admission_syncs,
             "host_syncs_per_token": self.host_syncs / max(tokens, 1),

@@ -22,6 +22,13 @@ import numpy as np
 
 NEG_INF = jnp.float32(-1e30)
 _TEMP_EPS = 1e-6
+# Scaled logits are clipped to +-_SCALED_MAX before filtering: a tiny
+# temperature divides logits toward float32 infinity, and one inf turns
+# the top-p softmax (and then the whole filtered row) into NaN.  The
+# bound sits well inside float32 range but above any real logit scale,
+# and NEG_INF masking stays strictly below it, so ordering — hence the
+# sampled stream — is unchanged for sane inputs.
+_SCALED_MAX = jnp.float32(1e29)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,9 +97,12 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
                   keys: jax.Array, *, spec=None) -> jax.Array:
     """One sampled token per row.  logits (B, V); knobs (B,) arrays;
     keys (B, 2) uint32 per-slot PRNG keys (use-once — the caller carries
-    the split).  Rows with temperature <= 0 return exact argmax; an
-    all-greedy batch skips the sort-based filtering entirely (lax.cond),
-    so a greedy serving engine pays nothing for the sampling machinery.
+    the split).  Rows with temperature below the ``_TEMP_EPS`` floor
+    (including 0) return exact argmax — a sub-floor temperature is
+    already a collapsed distribution, and scaling by its reciprocal
+    would overflow float32; an all-greedy batch skips the sort-based
+    filtering entirely (lax.cond), so a greedy serving engine pays
+    nothing for the sampling machinery.
 
     ``spec`` (optional NamedSharding for the (B, V) logits: slot axis
     sharded, vocab replicated) pins the sampler's working set under a
@@ -105,12 +115,17 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
     if spec is not None:
         logits = jax.lax.with_sharding_constraint(logits, spec)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # Temperatures below the clamp floor are semantically greedy (the
+    # distribution has collapsed onto argmax) — route them to the exact
+    # argmax branch instead of scaling logits by up to 1/_TEMP_EPS, which
+    # could overflow float32 and NaN the whole filtered row.
+    is_greedy = temperature < _TEMP_EPS
 
     def sampled(_):
         t = jnp.maximum(temperature, _TEMP_EPS)[:, None]
-        masked = filtered_logits(logits / t, top_k, top_p)
+        scaled = jnp.clip(logits / t, -_SCALED_MAX, _SCALED_MAX)
+        masked = filtered_logits(scaled, top_k, top_p)
         s = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
-        return jnp.where(temperature <= 0.0, greedy, s)
+        return jnp.where(is_greedy, greedy, s)
 
-    return jax.lax.cond(jnp.all(temperature <= 0.0),
-                        lambda _: greedy, sampled, None)
+    return jax.lax.cond(jnp.all(is_greedy), lambda _: greedy, sampled, None)

@@ -72,7 +72,15 @@ class Scheduler:
         """Validate and enqueue.  The ring holds ``max_len`` positions and
         generation needs at least one, so prompts are capped at
         ``max_len - 1``: longer ones raise, or are truncated to their
-        *last* max_len - 1 tokens when ``req.truncate`` is set."""
+        *last* max_len - 1 tokens when ``req.truncate`` is set.
+        ``max_new_tokens`` must be >= 1 — admission always emits the
+        first sampled token, so a zero/negative budget would silently
+        overshoot it."""
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request uid={req.uid}: max_new_tokens="
+                f"{req.max_new_tokens} must be >= 1 (admission emits the "
+                f"first generated token unconditionally)")
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         cap = self.max_len - 1
         if prompt.shape[0] > cap:

@@ -250,18 +250,31 @@ def slot_stacked_spec(n_slots: int, mesh: Mesh, lead_dims: int = 1) -> P:
 
 def window_shardings(mesh: Mesh, params, cache, carry,
                      grains: dict[str, int] | None = None, *,
-                     param_shardings=None, cache_shardings=None):
+                     param_shardings=None, cache_shardings=None,
+                     draft_params=None, draft_cache=None,
+                     draft_param_shardings=None,
+                     draft_cache_shardings=None, spec_outputs=False):
     """(in_shardings, out_shardings) for the serving engine's fused decode
     window ``window(params, cache, carry) -> (cache, carry, toks, emits)``.
 
     Arguments may be arrays, numpy arrays, or ShapeDtypeStructs — only
     shape/dtype are read.  Params follow PARAM_RULES (TP heads / FSDP,
     head-grained via ``grains``), cache rings follow CACHE_RULES (slot x
-    sequence), carry leaves follow carry_specs (slot axis); the stacked
-    (steps, B) token/emit outputs shard their slot dim.  Callers that
-    already derived the param/cache NamedSharding trees (the engine does,
-    for device_put) pass them via ``param_shardings``/``cache_shardings``
-    so the jit's in_shardings cannot diverge from actual placement."""
+    sequence), carry leaves follow carry_specs (slot axis — the
+    speculative accept mask, key chain and fed-token history are ordinary
+    slot-sharded leaves here); the stacked (steps, B[, S]) token/emit
+    outputs shard their slot dim.  Callers that already derived the
+    param/cache NamedSharding trees (the engine does, for device_put)
+    pass them via ``param_shardings``/``cache_shardings`` so the jit's
+    in_shardings cannot diverge from actual placement.
+
+    Speculative windows reuse the same rules: ``spec_outputs`` appends
+    the stacked accepted/proposed counters, and a layer-fraction draft
+    (``draft_params``/``draft_cache``) threads a second param/cache pair
+    through — window(params, draft_params, cache, draft_cache, carry) ->
+    (cache, draft_cache, carry, toks, emits, accepted, proposed).  No new
+    collective patterns: the draft trees follow PARAM_RULES/CACHE_RULES
+    verbatim."""
     ps = (param_shardings if param_shardings is not None
           else to_named(param_specs(params, mesh, grains=grains), mesh))
     cs = (cache_shardings if cache_shardings is not None
@@ -269,6 +282,15 @@ def window_shardings(mesh: Mesh, params, cache, carry,
     ss = to_named(carry_specs(carry, mesh), mesh)
     n_slots = jax.tree.leaves(carry)[0].shape[0]
     ts = NamedSharding(mesh, slot_stacked_spec(n_slots, mesh))
+    if draft_cache is not None:
+        dps = (draft_param_shardings if draft_param_shardings is not None
+               else to_named(param_specs(draft_params, mesh, grains=grains),
+                             mesh))
+        dcs = (draft_cache_shardings if draft_cache_shardings is not None
+               else to_named(cache_specs(draft_cache, mesh), mesh))
+        return (ps, dps, cs, dcs, ss), (cs, dcs, ss, ts, ts, ts, ts)
+    if spec_outputs:
+        return (ps, cs, ss), (cs, ss, ts, ts, ts, ts)
     return (ps, cs, ss), (cs, ss, ts, ts)
 
 

@@ -1,0 +1,105 @@
+"""The serving perf-regression gate: row matching on (variant, backend,
+mesh, spec_depth, draft), threshold semantics, and the skip paths (no
+prior artifact / changed bench identity) that keep CI bootstrappable."""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+from check_serving_regression import compare_entries, main, row_key
+
+
+def _entry(rows, arch="qwen3-4b", cfg=None):
+    return {"arch": arch,
+            "config": cfg or {"slots": 4, "max_len": 48},
+            "rows": rows}
+
+
+def _row(variant="latent", backend="einsum", mesh="1x1", tps=20.0, **kw):
+    return {"variant": variant, "backend": backend, "mesh": mesh,
+            "tokens_per_s": tps, **kw}
+
+
+class TestCompareEntries:
+    def test_no_regression_within_threshold(self):
+        prev = _entry([_row(tps=20.0), _row(variant="dense", tps=10.0)])
+        new = _entry([_row(tps=17.0), _row(variant="dense", tps=9.0)])
+        rep = compare_entries(prev, new, threshold=0.2)
+        assert rep["compared"] == 2
+        assert rep["regressions"] == []
+
+    def test_drop_past_threshold_fails(self):
+        prev = _entry([_row(tps=20.0)])
+        new = _entry([_row(tps=15.0)])          # -25%
+        rep = compare_entries(prev, new, threshold=0.2)
+        assert len(rep["regressions"]) == 1
+        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-"
+        assert rep["regressions"][0]["drop"] == pytest.approx(0.25)
+
+    def test_spec_rows_match_on_depth_and_draft(self):
+        """A spec row only compares against the same (depth, draft) row —
+        never against the unspeculated baseline."""
+        prev = _entry([_row(tps=20.0),
+                       _row(tps=5.0, spec_depth=2, draft="ngram")])
+        new = _entry([_row(tps=20.0),
+                      _row(tps=4.5, spec_depth=2, draft="ngram"),
+                      _row(tps=1.0, spec_depth=2, draft="layers:2")])
+        rep = compare_entries(prev, new, threshold=0.2)
+        assert rep["compared"] == 2
+        assert rep["regressions"] == []
+        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2"]
+
+    def test_mesh_rows_distinct(self):
+        prev = _entry([_row(mesh="1x1", tps=20.0),
+                       _row(mesh="2x4", tps=4.0)])
+        new = _entry([_row(mesh="1x1", tps=20.0),
+                      _row(mesh="2x4", tps=3.0)])       # -25% on the mesh
+        rep = compare_entries(prev, new)
+        assert [r["row"] for r in rep["regressions"]] == \
+            ["latent/einsum/2x4/-/-"]
+
+    def test_changed_bench_identity_skips(self):
+        prev = _entry([_row(tps=20.0)])
+        new = _entry([_row(tps=1.0)], cfg={"slots": 8, "max_len": 48})
+        rep = compare_entries(prev, new)
+        assert rep["skipped_reason"] is not None
+        assert rep["regressions"] == []
+
+    def test_row_key_ignores_measurements(self):
+        a = _row(tps=20.0, tokens=96, bench_seconds=5.0)
+        b = _row(tps=1.0)
+        assert row_key(a) == row_key(b)
+
+
+class TestMainCLI:
+    def test_missing_prev_artifact_skips(self, tmp_path):
+        new = tmp_path / "new.json"
+        new.write_text(json.dumps([_entry([_row()])]))
+        rc = main(["--prev", str(tmp_path / "absent.json"),
+                   "--new", str(new)])
+        assert rc == 0
+
+    def test_regression_exits_nonzero(self, tmp_path):
+        prev = tmp_path / "prev.json"
+        new = tmp_path / "new.json"
+        prev.write_text(json.dumps([_entry([_row(tps=20.0)])]))
+        new.write_text(json.dumps([_entry([_row(tps=10.0)])]))
+        assert main(["--prev", str(prev), "--new", str(new)]) == 1
+        # a looser threshold tolerates the same drop
+        assert main(["--prev", str(prev), "--new", str(new),
+                     "--threshold", "0.6"]) == 0
+
+    def test_compares_latest_entries_only(self, tmp_path):
+        """Trajectories accumulate one entry per run; the gate compares
+        last-vs-last, so an ancient fast entry cannot fail today's run."""
+        prev = tmp_path / "prev.json"
+        new = tmp_path / "new.json"
+        prev.write_text(json.dumps([_entry([_row(tps=100.0)]),
+                                    _entry([_row(tps=10.0)])]))
+        new.write_text(json.dumps([_entry([_row(tps=9.5)])]))
+        assert main(["--prev", str(prev), "--new", str(new)]) == 0

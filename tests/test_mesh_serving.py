@@ -173,6 +173,50 @@ class TestFusedLoopParityMesh:
         assert serve(mesh24) == serve(None)
 
 
+class TestMeshSpeculation:
+    """Speculative decoding composes with the sharded window: the accept
+    mask / key chain / fed-token history are ordinary slot-sharded carry
+    leaves, the draft rings follow CACHE_RULES — streams must equal the
+    single-device spec_depth=0 engine token-for-token, and the window
+    still costs one sync however many tokens it verifies."""
+
+    @pytest.mark.parametrize("depth", [2, 4])
+    @pytest.mark.parametrize("policy", ["greedy", "sampled"])
+    def test_ngram_streams_match_unspeculated_single_device(self, mesh24,
+                                                            policy, depth):
+        cfg, params = _model("latent")
+        sp = None if policy == "greedy" else SAMPLED
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts, None, sampling=sp)
+        got, eng = _serve(cfg, params, prompts, mesh24, sampling=sp,
+                          spec_depth=depth, draft="ngram")
+        assert got == ref, (policy, depth)
+        m = eng.metrics()
+        assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m
+
+    @pytest.mark.parametrize("case", ["dense", "int8_latent"])
+    def test_variants_spec_depth_2_on_mesh(self, mesh24, case):
+        cfg, params = _model(case)
+        prompts = _prompts(cfg, n=4)
+        ref, _ = _serve(cfg, params, prompts, None, sampling=SAMPLED)
+        got, _ = _serve(cfg, params, prompts, mesh24, sampling=SAMPLED,
+                        spec_depth=2, draft="ngram")
+        assert got == ref, case
+
+    def test_layer_draft_on_mesh(self, mesh24):
+        """The layer-fraction draft threads a second (param, ring) pair
+        through the window; its shardings follow the same rules, so the
+        mesh stream must still match single-device unspeculated."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        for sp in (None, SAMPLED):
+            ref, _ = _serve(cfg, params, prompts, None, sampling=sp)
+            got, eng = _serve(cfg, params, prompts, mesh24, sampling=sp,
+                              spec_depth=2, draft="layers:2")
+            assert got == ref
+            assert eng.metrics()["draft_proposed"] > 0
+
+
 class TestMeshAdmission:
     def test_shard_aware_waves_fill_one_shard_group(self, mesh24):
         """With 4 slots over data=2, a 2-request wave lands on one

@@ -44,6 +44,49 @@ class TestSampleTokens:
         np.testing.assert_array_equal(np.asarray(out),
                                       np.asarray(jnp.argmax(logits, -1)))
 
+    def test_tiny_temperature_routes_to_greedy_no_nan(self):
+        """Regression: temperature=1e-8 was clamped to _TEMP_EPS and the
+        scaled logits could overflow float32 to inf, turning the top-p
+        softmax — and every sampled token in the row — into NaN garbage.
+        Sub-floor temperatures are semantically greedy and must return
+        exact argmax."""
+        rng = np.random.default_rng(21)
+        # large-magnitude logits make the overflow concrete: 3e3 / 1e-6
+        # is comfortably finite, but the old path scaled by 1e6 with no
+        # clamp and mixed rows could push the filter into inf territory
+        logits = jnp.asarray(rng.normal(size=(4, 64)) * 3e3, jnp.float32)
+        temps = jnp.asarray([1e-8, 1e-7, 0.0, 1e-9], jnp.float32)
+        out = sample_tokens(logits, temps, jnp.zeros(4, jnp.int32),
+                            jnp.full(4, 0.9), _keys(4))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(jnp.argmax(logits, -1)))
+
+    def test_tiny_temperature_mixed_with_sampled_rows(self):
+        """The greedy routing is per-row: a sub-floor row in a batch with
+        genuinely sampled rows returns argmax while the sampled rows stay
+        finite and in-vocab (no NaN poisoning through the shared filter)."""
+        rng = np.random.default_rng(22)
+        logits = jnp.asarray(rng.normal(size=(3, 32)) * 1e4, jnp.float32)
+        temps = jnp.asarray([1e-8, 0.9, 1e-7], jnp.float32)
+        out = np.asarray(sample_tokens(
+            logits, temps, jnp.full(3, 8, jnp.int32), jnp.full(3, 0.9),
+            _keys(3)))
+        greedy = np.asarray(jnp.argmax(logits, -1))
+        assert out[0] == greedy[0] and out[2] == greedy[2]
+        assert 0 <= out[1] < 32
+
+    def test_huge_logits_with_small_temperature_stay_finite(self):
+        """Scaled logits are clamped before filtering: even logits near
+        the float32 edge divided by a small temperature must produce an
+        in-vocab token, not a NaN-driven index.  (Values that overflow
+        before the clamp tie at the bound, so either max-tier token is
+        acceptable — the contract is finiteness, not ordering at 1e39.)"""
+        logits = jnp.asarray([[1e35, 2e35, -1e35, 0.0]], jnp.float32)
+        out = np.asarray(sample_tokens(
+            logits, jnp.asarray([1e-4]), jnp.zeros(1, jnp.int32),
+            jnp.asarray([0.5]), _keys(1)))
+        assert out[0] in (0, 1)     # a max-tier token, never NaN garbage
+
     def test_per_row_mixed_policies_one_call(self):
         """Greedy and sampled rows coexist in one batched call (one trace
         serves any request mix)."""

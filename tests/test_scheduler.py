@@ -257,6 +257,27 @@ class TestMetricsWindowBoundary:
         eng = Engine(cfg, params, max_slots=1, max_len=16)
         assert eng.metrics()["mesh"] == "1x1"
 
+    def test_bare_step_calls_accrue_tokens_per_s(self, model):
+        """Regression: _run_seconds only accrued inside run(), so callers
+        driving step() directly (benches, external event loops) read
+        tokens_per_s == 0.0 from metrics() despite real decoded work."""
+        cfg, params = model
+        g = np.random.default_rng(14)
+        eng = Engine(cfg, params, max_slots=2, max_len=40, sync_every=4)
+        eng.submit(Request(
+            uid=0, prompt=g.integers(0, cfg.vocab_size, 5).astype(np.int32),
+            max_new_tokens=6))
+        while eng.scheduler.has_work:
+            eng.step()
+        m = eng.metrics()
+        assert m["tokens"] > 0
+        assert m["run_seconds"] > 0.0
+        assert m["tokens_per_s"] > 0.0
+        # run() stays additive on top of step()-accrued time
+        before = m["run_seconds"]
+        eng.run()
+        assert eng.metrics()["run_seconds"] >= before
+
 
 class TestSubmitValidation:
     def test_overlong_prompt_rejected_with_clear_message(self, model):
@@ -293,6 +314,26 @@ class TestSubmitValidation:
         eng = Engine(cfg, params, max_slots=1, max_len=16)
         with pytest.raises(ValueError, match="empty"):
             eng.submit(Request(uid=0, prompt=np.zeros(0, np.int32)))
+
+    @pytest.mark.parametrize("budget", [0, -3])
+    def test_nonpositive_token_budget_rejected(self, model, budget):
+        """Regression: submit() accepted max_new_tokens <= 0 but _admit
+        still emitted the first sampled token (and left the budget at
+        -1) — the request overshot a budget it declared as zero."""
+        cfg, params = model
+        eng = Engine(cfg, params, max_slots=1, max_len=16)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                               max_new_tokens=budget))
+        assert eng.unfinished == {"queued": 0, "in_flight": 0}
+
+    def test_min_budget_of_one_emits_exactly_one(self, model):
+        cfg, params = model
+        eng = Engine(cfg, params, max_slots=1, max_len=16)
+        eng.submit(Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                           max_new_tokens=1))
+        done = eng.run()
+        assert len(done) == 1 and len(done[0].out_tokens) == 1
 
 
 class TestRunTimeout:

@@ -1,0 +1,372 @@
+"""Speculative decoding: the multi-token verify step must reproduce
+sequential decode, and the engine's token streams must be INVARIANT to
+``spec_depth`` and draft choice — greedy and sampled, every cache
+variant, full and chunked prefill — while the 1-sync-per-window contract
+holds and accepted draft tokens are real (accept-rate bookkeeping)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import Engine, Request, SamplingParams
+from repro.serving.draft import DraftSpec, make_layer_draft, ngram_propose
+
+KEY = jax.random.PRNGKey(0)
+
+CASES = {
+    "dense": {},
+    "latent": {"recalkv_ratio": 0.5},
+    "int8_latent": {"recalkv_ratio": 0.5, "cache_quant_bits": 8},
+}
+
+SAMPLED = SamplingParams(temperature=0.9, top_k=32, top_p=0.9, seed=11)
+
+
+def _model(case="latent", arch="qwen3-4b"):
+    extra = dict(CASES[case])
+    kw = {k: extra.pop(k) for k in ("recalkv_ratio",) if k in extra}
+    cfg = get_config(arch, smoke=True, **kw)
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32, **extra)
+    return cfg, T.init_params(cfg, KEY)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {case: _model(case) for case in CASES}
+
+
+def _prompts(cfg, n=5, seed=3):
+    g = np.random.default_rng(seed)
+    return [g.integers(0, cfg.vocab_size, 5 + 2 * i).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve(cfg, params, prompts, sampling=None, max_new=6, **kw):
+    eng = Engine(cfg, params, max_slots=4, max_len=40, sampling=sampling,
+                 **kw)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=max_new))
+    eng.run()
+    return {r.uid: r.out_tokens for r in eng.finished}, eng
+
+
+class TestVerifyStep:
+    """T.verify_step == S sequential T.decode_step calls: same logits,
+    and committing the full prefix leaves the same ring."""
+
+    @pytest.mark.parametrize("case", ["dense", "latent", "int8_latent"])
+    def test_logits_match_sequential(self, models, case):
+        cfg, params = models[case]
+        rng = np.random.default_rng(7)
+        B, P, S = 2, 6, 3
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)),
+                           jnp.int32)
+        lens = jnp.asarray([P, 4], jnp.int32)
+        _, caches = T.prefill(cfg, params, toks, lens, 37)
+        cur = lens.astype(jnp.int32)
+        fed = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        seq = []
+        c, u = caches, cur
+        for j in range(S):
+            lg, c = T.decode_step(cfg, params, c, fed[:, j], u)
+            seq.append(lg)
+            u = u + 1
+        seq = jnp.stack(seq, axis=1)
+        got, updates = T.verify_step(cfg, params, caches, fed, cur,
+                                     jnp.ones((B, S), bool))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(seq),
+                                   rtol=1e-4, atol=1e-5)
+        # committing all S columns == the sequential ring, up to fp noise
+        # in the stored entries: a subsequent step sees the same logits
+        committed = T.commit_verify_writes(caches, updates, cur,
+                                           jnp.ones((B, S), bool))
+        nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B,)), jnp.int32)
+        lg_seq, _ = T.decode_step(cfg, params, c, nxt, cur + S)
+        lg_ver, _ = T.decode_step(cfg, params, committed, nxt, cur + S)
+        np.testing.assert_allclose(np.asarray(lg_ver), np.asarray(lg_seq),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_partial_commit_equals_shorter_sequential(self, models):
+        """Committing only an accepted prefix must leave the ring exactly
+        as if just those tokens had been decoded — a rejected draft token
+        never touches the cache."""
+        cfg, params = models["latent"]
+        rng = np.random.default_rng(8)
+        B, S = 2, 4
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 5)),
+                           jnp.int32)
+        lens = jnp.asarray([5, 5], jnp.int32)
+        _, caches = T.prefill(cfg, params, toks, lens, 37)
+        cur = lens.astype(jnp.int32)
+        fed = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        _, updates = T.verify_step(cfg, params, caches, fed, cur,
+                                   jnp.ones((B, S), bool))
+        keep = 2
+        mask = jnp.asarray([[True] * keep + [False] * (S - keep)] * B)
+        committed = T.commit_verify_writes(caches, updates, cur, mask)
+        c = caches
+        for j in range(keep):
+            _, c = T.decode_step(cfg, params, c, fed[:, j], cur + j)
+        nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B,)), jnp.int32)
+        lg_seq, _ = T.decode_step(cfg, params, c, nxt, cur + keep)
+        lg_ver, _ = T.decode_step(cfg, params, committed, nxt, cur + keep)
+        np.testing.assert_allclose(np.asarray(lg_ver), np.asarray(lg_seq),
+                                   rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("arch", ["deepseek-v3-671b", "h2o-danube-1.8b"])
+    def test_mla_and_sliding_window_verify_match(self, arch):
+        """The MLA (absorbed-latent) and sliding-window verify readers:
+        multi-query logits against the ring must match sequential decode."""
+        cfg = dataclasses.replace(get_config(arch, smoke=True),
+                                  dtype=jnp.float32)
+        params = T.init_params(cfg, KEY)
+        rng = np.random.default_rng(5)
+        B, S = 2, 3
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 6)),
+                           jnp.int32)
+        lens = jnp.asarray([6, 4], jnp.int32)
+        _, caches = T.prefill(cfg, params, toks, lens, 37)
+        cur = lens.astype(jnp.int32)
+        fed = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        seq = []
+        c, u = caches, cur
+        for j in range(S):
+            lg, c = T.decode_step(cfg, params, c, fed[:, j], u)
+            seq.append(lg)
+            u = u + 1
+        got, _ = T.verify_step(cfg, params, caches, fed, cur,
+                               jnp.ones((B, S), bool))
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(jnp.stack(seq, axis=1)),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_mla_engine_streams_invariant(self):
+        """End-to-end MLA (deepseek smoke) speculation: per-head widths
+        differ from d_head, the cache is the (ckv, krope) latent pair."""
+        cfg = dataclasses.replace(get_config("deepseek-v3-671b", smoke=True),
+                                  dtype=jnp.float32)
+        params = T.init_params(cfg, KEY)
+        prompts = _prompts(cfg, n=3)
+        for sp in (None, SAMPLED):
+            ref, _ = _serve(cfg, params, prompts, sp, max_new=5)
+            got, _ = _serve(cfg, params, prompts, sp, max_new=5,
+                            spec_depth=2, draft="ngram")
+            assert got == ref
+
+    def test_recurrent_blocks_rejected(self):
+        cfg = dataclasses.replace(get_config("falcon-mamba-7b", smoke=True),
+                                  dtype=jnp.float32)
+        params = T.init_params(cfg, KEY)
+        with pytest.raises(ValueError, match="recurrent"):
+            Engine(cfg, params, max_slots=1, max_len=16, spec_depth=2)
+
+
+class TestDepthInvariance:
+    """The acceptance bar: for every (policy, cache variant) the token
+    streams at spec_depth in {2, 4} equal spec_depth=0 exactly."""
+
+    @pytest.mark.parametrize("case", sorted(CASES))
+    @pytest.mark.parametrize("policy", ["greedy", "sampled"])
+    def test_streams_invariant_to_spec_depth(self, models, case, policy):
+        cfg, params = models[case]
+        sp = None if policy == "greedy" else SAMPLED
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts, sp)
+        for depth in (2, 4):
+            got, eng = _serve(cfg, params, prompts, sp, spec_depth=depth,
+                              draft="ngram")
+            assert got == ref, (case, policy, depth)
+            m = eng.metrics()
+            # speculation must not break the structural sync contract
+            assert m["host_syncs"] == m["windows"] + m["admission_syncs"]
+            assert m["spec_depth"] == depth and m["draft"] == "ngram"
+
+    @pytest.mark.parametrize("policy", ["greedy", "sampled"])
+    def test_layer_draft_streams_match(self, models, policy):
+        cfg, params = models["latent"]
+        sp = None if policy == "greedy" else SAMPLED
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts, sp)
+        got, eng = _serve(cfg, params, prompts, sp, spec_depth=2,
+                          draft="layers:2")
+        assert got == ref
+        m = eng.metrics()
+        assert m["draft"] == "layers:2"
+        assert m["draft_proposed"] > 0
+        if policy == "greedy":
+            # a self-draft of 2/3 of the target's layers agrees often
+            # enough to be a real lever, not a no-op
+            assert m["draft_accepted"] > 0
+            assert m["accept_rate"] == pytest.approx(
+                m["draft_accepted"] / m["draft_proposed"])
+
+    def test_chunked_cap_length_prompt_invariant(self, models):
+        """Chunked-prefill ingest and speculation share the window; a
+        cap-length prompt fed in chunks must still be depth-invariant."""
+        cfg, params = models["latent"]
+        g = np.random.default_rng(9)
+        cap = g.integers(0, cfg.vocab_size, 39).astype(np.int32)
+
+        def serve(**kw):
+            eng = Engine(cfg, params, max_slots=4, max_len=40,
+                         sampling=SAMPLED, **kw)
+            eng.submit(Request(uid=0, prompt=cap.copy(), max_new_tokens=5))
+            return eng.run()[0].out_tokens
+
+        ref = serve()
+        assert serve(prefill_chunk=7, spec_depth=2, draft="ngram",
+                     sync_every=3) == ref
+        assert serve(prefill_chunk=5, spec_depth=3, draft="layers:2") == ref
+
+    def test_eos_stop_invariant_mid_round(self, models):
+        """An EOS accepted in the middle of a speculative round must stop
+        the stream at exactly the sequential point."""
+        cfg, params = models["latent"]
+        g = np.random.default_rng(12)
+        pr = g.integers(0, cfg.vocab_size, 6).astype(np.int32)
+        full, _ = _serve(cfg, params, [pr], None, max_new=10)
+        eos = int(full[0][3])            # 4th emitted token becomes EOS
+
+        def serve(**kw):
+            eng = Engine(cfg, params, max_slots=2, max_len=40, **kw)
+            eng.submit(Request(uid=0, prompt=pr.copy(), max_new_tokens=10,
+                               eos_id=eos))
+            return eng.run()[0].out_tokens
+
+        ref = serve()
+        assert ref[-1] == eos or len(ref) == 10
+        assert serve(spec_depth=3, draft="layers:2") == ref
+        assert serve(spec_depth=4, draft="ngram") == ref
+
+    def test_pallas_backend_streams_invariant(self, models):
+        """With the pallas decode kernels serving the sequential path,
+        verify always takes the (einsum) multi-query path — streams must
+        still be depth-invariant within the backend."""
+        cfg, params = models["latent"]
+        cfg = dataclasses.replace(cfg, attn_backend="pallas")
+        prompts = _prompts(cfg, n=3)
+        ref, _ = _serve(cfg, params, prompts, SAMPLED)
+        got, _ = _serve(cfg, params, prompts, SAMPLED, spec_depth=2,
+                        draft="ngram")
+        assert got == ref
+
+    def test_repetitive_prompt_ngram_proposes_real_tokens(self, models):
+        """Prompt-lookup on a constant-token prompt: the trailing bigram
+        always has an earlier occurrence, so the draft makes REAL
+        (non-placeholder) proposals — which count toward draft_proposed
+        under the placeholders-don't-count rule — and the stream stays
+        invariant whether or not the model's continuation accepts them."""
+        cfg, params = models["latent"]
+        prompt = np.full(16, 5, np.int32)
+        ref, _ = _serve(cfg, params, [prompt], None, max_new=8)
+        got, eng = _serve(cfg, params, [prompt], None, max_new=8,
+                          spec_depth=3, draft="ngram")
+        assert got == ref
+        assert eng.metrics()["draft_proposed"] > 0
+
+
+class TestDraftModule:
+    def test_parse(self):
+        assert DraftSpec.parse(None) is None
+        assert DraftSpec.parse("none") is None
+        assert DraftSpec.parse("ngram") == DraftSpec("ngram")
+        assert DraftSpec.parse("layers:2") == DraftSpec("layers", 2)
+        assert DraftSpec.parse("layers=3") == DraftSpec("layers", 3)
+        with pytest.raises(ValueError, match="draft spec"):
+            DraftSpec.parse("bogus")
+
+    def test_make_layer_draft_shares_leaves(self):
+        cfg, params = _model("latent")
+        dcfg, dparams = make_layer_draft(cfg, params, 2)
+        assert dcfg.num_layers == 2
+        assert dcfg.expanded_layers() == cfg.expanded_layers()[:2]
+        assert dparams["embed"] is params["embed"]
+        # truncated stack must run standalone
+        toks = jnp.asarray([[1, 2, 3]], jnp.int32)
+        logits, _ = T.prefill(dcfg, dparams, toks,
+                              jnp.asarray([3], jnp.int32), 16)
+        assert logits.shape == (1, cfg.vocab_size)
+
+    def test_make_layer_draft_bounds(self):
+        cfg, params = _model("latent")
+        with pytest.raises(ValueError, match="layers draft"):
+            make_layer_draft(cfg, params, 0)
+        with pytest.raises(ValueError, match="layers draft"):
+            make_layer_draft(cfg, params, cfg.num_layers + 1)
+
+    def test_ngram_propose_prompt_lookup(self):
+        # fed history (positions 0..4): [5, 6, 7, 8, 5]; feeding 6 at
+        # cur=5 -> bigram (hist[4], 6) = (5, 6) matches positions (0, 1)
+        # -> proposes the continuation hist[2:5] = [7, 8, 5] (all three
+        # positions are already-fed, hence known, tokens)
+        hist = jnp.asarray([[5, 6, 7, 8, 5, 0, 0, 0]], jnp.int32)
+        out = ngram_propose(hist, jnp.asarray([5]), jnp.asarray([6]), 3)
+        np.testing.assert_array_equal(np.asarray(out)[0], [7, 8, 5])
+        # depth reaching past the fed history pads with -1
+        out4 = ngram_propose(hist, jnp.asarray([5]), jnp.asarray([6]), 4)
+        np.testing.assert_array_equal(np.asarray(out4)[0], [7, 8, 5, -1])
+
+    def test_ngram_propose_no_match(self):
+        hist = jnp.asarray([[5, 6, 7, 8, 0, 0]], jnp.int32)
+        out = ngram_propose(hist, jnp.asarray([4]), jnp.asarray([9]), 2)
+        np.testing.assert_array_equal(np.asarray(out)[0], [-1, -1])
+
+
+class TestSpecMetrics:
+    def test_defaults_off(self, models):
+        cfg, params = models["latent"]
+        _, eng = _serve(cfg, params, _prompts(cfg, n=1), None)
+        m = eng.metrics()
+        assert m["spec_depth"] == 0 and m["draft"] is None
+        assert m["accept_rate"] == 0.0
+
+    def test_invalid_depth_rejected(self, models):
+        cfg, params = models["latent"]
+        with pytest.raises(ValueError, match="spec_depth"):
+            Engine(cfg, params, max_slots=1, max_len=16, spec_depth=-1)
+
+    def test_draft_without_depth_rejected(self, models):
+        """A draft spec with spec_depth=0 would be silently ignored —
+        an operator benchmarking a draft but forgetting --spec-depth must
+        hear about it (and typos must hit DraftSpec.parse validation)."""
+        cfg, params = models["latent"]
+        with pytest.raises(ValueError, match="spec_depth"):
+            Engine(cfg, params, max_slots=1, max_len=16, draft="layers:2")
+        with pytest.raises(ValueError, match="draft spec"):
+            Engine(cfg, params, max_slots=1, max_len=16, spec_depth=2,
+                   draft="layrs:2")
+
+    def test_ngram_accept_rate_counts_only_real_proposals(self, models):
+        """The n-gram draft pads unknown positions with -1 (guaranteed
+        rejects); those must not inflate the denominator — on a fresh
+        non-repetitive prompt the draft proposes nothing, so proposed
+        stays 0 rather than depth * steps."""
+        cfg, params = models["latent"]
+        g = np.random.default_rng(31)
+        # distinct tokens -> no bigram ever repeats -> no real proposals
+        prompt = np.arange(1, 9, dtype=np.int32)
+        _, eng = _serve(cfg, params, [prompt], None, max_new=4,
+                        spec_depth=3, draft="ngram")
+        m = eng.metrics()
+        assert m["draft_accepted"] == 0
+        # the stream of a random smoke model may coincidentally repeat a
+        # bigram; the bound is that placeholders never count
+        assert m["draft_proposed"] <= 2 * m["tokens"]
+
+    def test_accepted_tokens_reduce_windows(self, models):
+        """With a perfectly predictable (periodic) greedy stream the
+        layer draft accepts enough that the same budget drains in fewer
+        decode windows than sequential decoding."""
+        cfg, params = models["latent"]
+        pat = np.tile(np.asarray([3, 1, 4, 1, 5], np.int32), 5)
+        _, eng0 = _serve(cfg, params, [pat], None, max_new=12,
+                         sync_every=2)
+        _, eng2 = _serve(cfg, params, [pat], None, max_new=12,
+                         sync_every=2, spec_depth=3, draft="layers:2")
+        if eng2.metrics()["draft_accepted"] > 0:
+            assert eng2.metrics()["windows"] < eng0.metrics()["windows"]
