@@ -2,9 +2,9 @@
 
 CI downloads the previous successful run's ``BENCH_serving`` artifact and
 compares this run's freshly-appended entry against the artifact's latest
-entry: any matching (variant, backend, mesh, spec_depth, draft) row whose
-``tokens_per_s`` dropped by more than ``--threshold`` (default 20%) fails
-the job.  Rows only one side has — a new variant, a renamed mesh — are
+entry: any matching (variant, backend, mesh, spec_depth, draft,
+cache_layout, page_size, workload) row whose ``tokens_per_s`` dropped by
+more than ``--threshold`` (default 20%) fails the job.  Rows only one side has — a new variant, a renamed mesh — are
 reported but never fail, and when no prior artifact exists (first run,
 expired retention, forked repo) the gate SKIPS cleanly: the gate guards
 the trajectory, it must not block bootstrapping it.
@@ -23,12 +23,17 @@ import sys
 
 DEFAULT_THRESHOLD = 0.20
 
-# identity of a row within an entry; everything else is measurement
-ROW_KEY = ("variant", "backend", "mesh", "spec_depth", "draft")
+# identity of a row within an entry; everything else is measurement.
+# cache_layout/page_size/workload default for rows predating the paged
+# cache, so old ring baselines keep matching new ring rows, and brand-new
+# identities (paged, shared-prefix workloads) skip cleanly as only_new.
+ROW_KEY = ("variant", "backend", "mesh", "spec_depth", "draft",
+           "cache_layout", "page_size", "workload")
+_KEY_DEFAULTS = {"cache_layout": "ring", "page_size": 0}
 
 
 def row_key(row: dict) -> tuple:
-    return tuple(row.get(k) for k in ROW_KEY)
+    return tuple(row.get(k, _KEY_DEFAULTS.get(k)) for k in ROW_KEY)
 
 
 def _fmt(key: tuple) -> str:

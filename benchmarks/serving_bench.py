@@ -57,7 +57,10 @@ MESH_SHAPES = ("1x1", "2x4")
 def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
                  max_len: int, requests: int, new_tokens: int,
                  sync_every: int, mesh_spec: str | None = None,
-                 spec_depth: int = 0, draft: str | None = None) -> dict:
+                 spec_depth: int = 0, draft: str | None = None,
+                 cache_layout: str = "ring", page_size: int | None = None,
+                 n_pages: int | None = None, prompts=None,
+                 workload: str | None = None) -> dict:
     kw, extra = VARIANTS[variant]
     cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
                               dtype=jnp.float32, attn_backend=backend,
@@ -65,18 +68,22 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = Engine(cfg, params, max_slots=slots, max_len=max_len,
                  sync_every=sync_every, mesh=mesh_from_spec(mesh_spec),
-                 spec_depth=spec_depth, draft=draft)
-    g = np.random.default_rng(1)
-    for i in range(requests):
-        plen = int(g.integers(4, max_len // 3))
-        eng.submit(Request(
-            uid=i, prompt=g.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=new_tokens))
+                 spec_depth=spec_depth, draft=draft,
+                 cache_layout=cache_layout, page_size=page_size,
+                 n_pages=n_pages)
+    if prompts is None:
+        g = np.random.default_rng(1)
+        prompts = [g.integers(0, cfg.vocab_size,
+                              int(g.integers(4, max_len // 3))
+                              ).astype(np.int32)
+                   for _ in range(requests)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
     finished = eng.run()
     m = eng.metrics()
     cache_bytes = sum(l.size * l.dtype.itemsize
                       for l in jax.tree.leaves(eng.cache))
-    assert len(finished) == requests, "bench load did not drain"
+    assert len(finished) == len(prompts), "bench load did not drain"
     # the executor's structural contract: exactly one host sync per
     # sync_every-step decode window (plus one per admission wave) — syncs
     # no longer scale with decoded tokens as in the seed engine (and a
@@ -102,6 +109,19 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
         row["spec_depth"] = spec_depth
         row["draft"] = m["draft"]
         row["accept_rate"] = round(m["accept_rate"], 4)
+    if cache_layout == "paged":
+        # effective footprint = pages actually touched at peak, not the
+        # pool reservation — the number prefix sharing shrinks
+        per_page = cache_bytes / eng.n_pages
+        row["cache_layout"] = "paged"
+        row["page_size"] = eng.page_size
+        row["pool_bytes"] = cache_bytes
+        row["cache_bytes"] = int(round(per_page * m["pages_peak"]))
+        row["pages_peak"] = m["pages_peak"]
+        row["pages_shared"] = m["pages_shared"]
+        row["cow_forks"] = m["cow_forks"]
+    if workload:
+        row["workload"] = workload
     return row
 
 
@@ -196,6 +216,114 @@ def bench_mesh_rows(arch: str, *, slots: int, max_len: int, requests: int,
     return rows
 
 
+def bench_paged_rows(arch: str, *, slots: int, max_len: int, requests: int,
+                     new_tokens: int, sync_every: int) -> list[dict]:
+    """Paged-layout rows: the standard load over the pooled cache (einsum
+    and pallas), then a shared- vs unshared-system-prompt pair whose
+    effective cache_bytes demonstrates prefix sharing — the shared row's
+    peak footprint must be strictly below the unshared run's."""
+    rows = []
+    common = dict(slots=slots, max_len=max_len, requests=requests,
+                  new_tokens=new_tokens, sync_every=sync_every)
+    for backend in ("einsum", "pallas"):
+        t0 = time.time()
+        row = bench_engine(arch, "latent", backend, cache_layout="paged",
+                           **common)
+        row["bench_seconds"] = round(time.time() - t0, 1)
+        rows.append(row)
+        print(f"serving/latent/{backend}/paged: "
+              f"{row['tokens_per_s']:.1f} tok/s, "
+              f"cache {row['cache_bytes']/2**20:.2f} MiB effective "
+              f"(peak {row['pages_peak']} pages)")
+    # shared-prefix pair: same lengths, one load shares a 3-page system
+    # prompt across all requests, the other uses disjoint prompts
+    ps = next(p for p in (8, 4, 2, 1) if max_len % p == 0)
+    vocab = get_config(arch, smoke=True).vocab_size
+    g = np.random.default_rng(2)
+    sysp = g.integers(0, vocab, 3 * ps).astype(np.int32)
+    shared = [np.concatenate([sysp,
+                              g.integers(0, vocab, 4).astype(np.int32)])
+              for _ in range(requests)]
+    unshared = [g.integers(0, vocab, 3 * ps + 4).astype(np.int32)
+                for _ in range(requests)]
+    pair = {}
+    for name, load in (("shared_prefix", shared),
+                       ("unshared_prefix", unshared)):
+        t0 = time.time()
+        row = bench_engine(arch, "latent", "einsum", cache_layout="paged",
+                           page_size=ps, prompts=load, workload=name,
+                           **common)
+        row["bench_seconds"] = round(time.time() - t0, 1)
+        pair[name] = row
+        rows.append(row)
+        print(f"serving/latent/einsum/paged/{name}: "
+              f"cache {row['cache_bytes']/2**20:.2f} MiB effective, "
+              f"{row['pages_shared']} shares, {row['cow_forks']} forks")
+    assert (pair["shared_prefix"]["cache_bytes"]
+            < pair["unshared_prefix"]["cache_bytes"]), pair
+    assert pair["shared_prefix"]["pages_shared"] > 0, pair
+    rows.append(bench_mixed_length(arch, max_len=max_len,
+                                   sync_every=sync_every))
+    return rows
+
+
+def bench_mixed_length(arch: str, *, max_len: int,
+                       sync_every: int) -> dict:
+    """Mixed-length admission: under the SAME pool budget a 4-slot ring
+    engine reserves (4 full-length rings), the paged engine's
+    reach-based page accounting admits more concurrent requests when the
+    load mixes one near-cap prompt with many short ones."""
+    kw, extra = VARIANTS["latent"]
+    cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
+                              dtype=jnp.float32, **extra)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ps = next(p for p in (8, 4, 2, 1) if max_len % p == 0)
+    n_sp = max_len // ps
+    budget = 4 * n_sp + 1                      # 4-slot ring equivalent
+    new_tokens = 2 * sync_every
+    g = np.random.default_rng(3)
+    prompts = ([g.integers(0, cfg.vocab_size,
+                           max_len - new_tokens - 1).astype(np.int32)]
+               + [g.integers(0, cfg.vocab_size, 4).astype(np.int32)
+                  for _ in range(7)])
+
+    def drive(eng):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p.copy(),
+                               max_new_tokens=new_tokens))
+        eng.step()                 # first admission wave + one window
+        conc = eng.scheduler.occupancy
+        eng.run()
+        return conc, eng.metrics()
+
+    t0 = time.time()
+    ring_conc, _ = drive(Engine(cfg, params, max_slots=4, max_len=max_len,
+                                sync_every=sync_every))
+    paged_conc, m = drive(Engine(cfg, params, max_slots=8, max_len=max_len,
+                                 sync_every=sync_every,
+                                 cache_layout="paged", page_size=ps,
+                                 n_pages=budget))
+    assert paged_conc > ring_conc, (paged_conc, ring_conc)
+    print(f"serving/latent/einsum/paged/mixed_length: {paged_conc} "
+          f"concurrent slots vs {ring_conc} ring under {budget - 1} pages")
+    return {
+        "variant": "latent", "backend": "einsum", "mesh": m["mesh"],
+        "platform": jax.default_backend(),
+        "workload": "mixed_length",
+        "cache_layout": "paged", "page_size": ps,
+        "pool_pages": budget,
+        "concurrent_slots": paged_conc,
+        "ring_concurrent_slots": ring_conc,
+        "tokens": m["tokens"],
+        "tokens_per_s": round(m["tokens_per_s"], 2),
+        "host_syncs_per_token": round(m["host_syncs_per_token"], 4),
+        "decode_syncs_per_token": round(m["decode_syncs_per_token"], 4),
+        "occupancy_mean": round(m["occupancy_mean"], 2),
+        "pages_peak": m["pages_peak"],
+        "bench_seconds": round(time.time() - t0, 1),
+    }
+
+
 SPEC_CONFIGS = ((2, "ngram"), (2, "layers:2"))
 
 
@@ -230,6 +358,9 @@ def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
         print(f"serving/latent/einsum/spec={spec_depth}/{draft}: "
               f"{row['tokens_per_s']:.1f} tok/s, "
               f"accept rate {row['accept_rate']:.2f}")
+    rows += bench_paged_rows(arch, slots=slots, max_len=max_len,
+                             requests=requests, new_tokens=new_tokens,
+                             sync_every=sync_every)
     if mesh_rows:
         rows += bench_mesh_rows(arch, slots=slots, max_len=max_len,
                                 requests=requests, new_tokens=new_tokens,

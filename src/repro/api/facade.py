@@ -106,9 +106,11 @@ def serve(artifact: CompressionArtifact | str, *, max_slots: int,
     jitted with explicit in/out shardings.  Omitted, the same code path
     runs on a degenerate single-device mesh.  Remaining ``engine_kw``
     (``sampling``, ``sync_every``, ``prefill_chunk``, ``backend``,
-    ``source``, and the speculative-decoding pair ``spec_depth`` /
-    ``draft`` — the latency lever the latent cache's halved footprint
-    pays for; token streams are invariant to both) pass through to the
+    ``source``, the speculative-decoding pair ``spec_depth`` /
+    ``draft``, and the paged-cache trio ``cache_layout`` /
+    ``page_size`` / ``n_pages`` — ``cache_layout="paged"`` pools cache
+    pages across slots with copy-on-write prompt-prefix sharing; token
+    streams are invariant to all of these) pass through to the
     Engine."""
     from repro.serving.engine import Engine  # local: engine imports api too
 

@@ -182,3 +182,133 @@ def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
         ],
         interpret=interpret,
     )(q, zk, zv, r_k, kn, cos, sin, bias)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: gather stage over page indices via scalar prefetch
+# ---------------------------------------------------------------------------
+#
+# In the paged cache layout the latents live page-major in a shared pool
+# (n_pages, page_size, G, r) and a (B, n_slot_pages) int32 page table
+# maps each slot-page to its physical page.  The gather is an extension
+# of the ring kernel's tail-tile masking: the grid's minor axis walks the
+# SLOT's pages in order, and each step's physical DMA source comes from
+# the scalar-prefetched table (``PrefetchScalarGridSpec`` — the table is
+# resident in SMEM before the grid starts, so block index_maps can read
+# it).  The self token occupies one extra trailing tile — the same
+# [self | -inf padding] column block ``pad_ring`` would produce for the
+# ring kernel at block_s = page_size — so with the ring path tiled at
+# page_size the two kernels see bitwise-identical tile sequences and
+# produce bitwise-identical outputs.
+
+
+def _paged_kernel(ptab_ref, q_ref, zk_ref, zv_ref, zks_ref, zvs_ref, rk_ref,
+                  kn_ref, cos_ref, sin_ref, bias_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale, s, qpk, dh, n_s,
+                  apply_knorm, norm_eps):
+    i_s = pl.program_id(2)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bias = bias_ref[0].astype(jnp.float32)
+    is_self = i_s == n_s - 1
+
+    # Same fully-masked-tile skip as the ring kernel: unmapped slot-pages
+    # resolve to the null page (pos = -1 -> bias = -inf) and cost no MXU
+    # work.  The self tile's column 0 has bias 0, so it always attends.
+    @pl.when(jnp.max(bias) > NEG_INF * 0.5)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        zk = jnp.where(is_self, zks_ref[0, :, 0],
+                       zk_ref[0, :, 0]).astype(jnp.float32)
+        zv = jnp.where(is_self, zvs_ref[0, :, 0],
+                       zv_ref[0, :, 0]).astype(jnp.float32)
+        rk = rk_ref[0].astype(jnp.float32)
+        k = zk @ rk
+        sb = k.shape[0]
+        k = maybe_knorm(k.reshape(sb, s, dh), kn_ref, apply_knorm, norm_eps)
+        attend_block(q, k, zv, cos_ref[0].astype(jnp.float32),
+                     sin_ref[0].astype(jnp.float32), bias,
+                     scale=scale, s=s, qpk=qpk, dh=dh,
+                     m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
+
+    @pl.when(i_s == n_s - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "interpret", "norm_eps"),
+)
+def latent_decode_attention_paged(ptab, q, zk, zv, r_k, zk_self, zv_self,
+                                  cos, sin, bias, *, scale: float,
+                                  interpret: bool = False,
+                                  k_norm: jax.Array | None = None,
+                                  norm_eps: float = 1e-6):
+    """Paged-pool flash decode.
+
+    ptab: (B, n_slot_pages) int32 page table (scalar-prefetched);
+    zk/zv: (n_pages, page_size, G, r) page-major pools;
+    zk_self/zv_self: (B, page_size, G, r) self tiles — row 0 holds the
+    deferred-write latent for position cur, rows 1.. are padding;
+    cos/sin/bias: (B, n_slot_pages*page_size + page_size, ...) SLOT-major
+    tables (ring columns through the table, then the self tile's columns
+    with bias [0, -inf...]).  The wrapper in ``kernels.ops`` builds these
+    from the pool's gathered ``pos`` — int32-cheap next to the latents,
+    which only ever move page-at-a-time inside the kernel.
+    Returns (B, G, Hg, r_v) latent outputs."""
+    B, n_sp = ptab.shape
+    ps = zk.shape[1]
+    _, G, Hg, dh = q.shape
+    rk = zk.shape[3]
+    rv = zv.shape[3]
+    sdh = r_k.shape[-1]
+    s = sdh // dh
+    qpk = Hg // s
+    half = dh // 2
+    apply_knorm, kn = knorm_operand(k_norm, dh)
+    n_s = n_sp + 1                       # slot pages + the self tile
+
+    def pool_map(b, g, i, pt):
+        # Clamped on the self step (i == n_sp): the DMA'd page is unused
+        # there (the kernel reads the self tile), it just must be in range.
+        return (pt[b, jnp.minimum(i, n_sp - 1)], 0, g, 0)
+
+    grid = (B, G, n_s)
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s,
+        apply_knorm=apply_knorm, norm_eps=norm_eps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Hg, dh), lambda b, g, i, pt: (b, g, 0, 0)),
+            pl.BlockSpec((1, ps, 1, rk), pool_map),
+            pl.BlockSpec((1, ps, 1, rv), pool_map),
+            pl.BlockSpec((1, ps, 1, rk), lambda b, g, i, pt: (b, 0, g, 0)),
+            pl.BlockSpec((1, ps, 1, rv), lambda b, g, i, pt: (b, 0, g, 0)),
+            pl.BlockSpec((1, rk, sdh), lambda b, g, i, pt: (g, 0, 0)),
+            pl.BlockSpec((1, dh), lambda b, g, i, pt: (0, 0)),
+            pl.BlockSpec((1, ps, half), lambda b, g, i, pt: (b, i, 0)),
+            pl.BlockSpec((1, ps, half), lambda b, g, i, pt: (b, i, 0)),
+            pl.BlockSpec((1, ps), lambda b, g, i, pt: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hg, rv),
+                               lambda b, g, i, pt: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hg, 1), jnp.float32),
+            pltpu.VMEM((Hg, 1), jnp.float32),
+            pltpu.VMEM((Hg, rv), jnp.float32),
+        ])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, G, Hg, rv), q.dtype),
+        interpret=interpret,
+    )(ptab, q, zk, zv, zk_self, zv_self, r_k, kn, cos, sin, bias)

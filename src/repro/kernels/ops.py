@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill_attention
-from repro.kernels.latent_decode import NEG_INF, latent_decode_attention
+from repro.kernels.latent_decode import (NEG_INF, latent_decode_attention,
+                                         latent_decode_attention_paged)
 from repro.kernels.latent_decode_q import latent_decode_attention_quant
 
 
@@ -152,6 +153,97 @@ def dense_decode(q, cache, cur, *, window: int | None, scale: float,
     return ungroup_outputs(o)
 
 
+def _paged_pos_view(pool_pos: jax.Array, ptab: jax.Array) -> jax.Array:
+    """Slot-major (B, n_slot_pages*page_size) positions gathered through the
+    page table — int32-cheap; the latents themselves stay page-major and
+    only move inside the kernel."""
+    B, n_sp = ptab.shape
+    ps = pool_pos.shape[1]
+    return jnp.take(pool_pos, ptab.reshape(-1), axis=0).reshape(B, n_sp * ps)
+
+
+def _self_tile(entry: jax.Array, ps: int) -> jax.Array:
+    """(B, ...) self entry -> (B, page_size, ...) tile with row 0 real and
+    rows 1.. zero — the same [self | padding] block ``pad_ring`` yields
+    for the ring kernel when the ring length is a tile multiple."""
+    B = entry.shape[0]
+    tile = jnp.zeros((B, ps) + entry.shape[1:], entry.dtype)
+    return tile.at[:, 0].set(entry)
+
+
+def _paged_tables(pos_view: jax.Array, cur: jax.Array, window: int | None,
+                  dh: int, theta: float | None, ps: int):
+    """Slot-major bias/cos/sin covering [table-gathered ring | self tile].
+
+    Self-tile columns: col 0 gets bias 0 and the rotation for position
+    ``cur`` (identity when theta is None — dense caches store post-RoPE
+    keys), cols 1.. get bias -inf and zero tables, matching ``pad_ring``'s
+    padding bitwise."""
+    B = cur.shape[0]
+    half = dh // 2
+    bias_r = decode_bias(pos_view, cur, window)
+    bias_s = jnp.full((B, ps), NEG_INF, jnp.float32).at[:, 0].set(0.0)
+    if theta is None:
+        cos_r = jnp.ones((B, pos_view.shape[1], half), jnp.float32)
+        sin_r = jnp.zeros_like(cos_r)
+        cos_1 = jnp.ones((B, 1, half), jnp.float32)
+        sin_1 = jnp.zeros((B, 1, half), jnp.float32)
+    else:
+        cos_r, sin_r = rope_tables_for(pos_view, dh, theta)
+        cos_1, sin_1 = rope_tables_for(cur[:, None], dh, theta)
+    cos_s = jnp.zeros((B, ps, half), jnp.float32).at[:, :1].set(cos_1)
+    sin_s = jnp.zeros((B, ps, half), jnp.float32).at[:, :1].set(sin_1)
+    return (jnp.concatenate([bias_r, bias_s], axis=1),
+            jnp.concatenate([cos_r, cos_s], axis=1),
+            jnp.concatenate([sin_r, sin_s], axis=1))
+
+
+def latent_decode_paged(q, cache, ptab, r_k, cur, *, theta: float,
+                        window: int | None, scale: float,
+                        interpret: bool | None = None,
+                        self_entry: dict | None = None,
+                        k_norm: jax.Array | None = None,
+                        norm_eps: float = 1e-6):
+    """Paged-pool latent decode: ``cache`` holds page-major {"zk","zv",
+    "pos"} pools (n_pages, page_size, ...) and ``ptab`` (B, n_slot_pages)
+    maps this batch's slot pages.  The kernel gathers latent pages via
+    scalar prefetch; the self entry rides as one extra trailing tile (the
+    deferred-write analogue of ``_extend_ring``).  Returns (B, H, r_v)."""
+    ps = cache["pos"].shape[1]
+    G = cache["zk"].shape[2]
+    dh = q.shape[-1]
+    pos_view = _paged_pos_view(cache["pos"], ptab)
+    bias, cos, sin = _paged_tables(pos_view, cur, window, dh, theta, ps)
+    qg = group_queries(q, G)
+    o = latent_decode_attention_paged(
+        ptab, qg, cache["zk"], cache["zv"], r_k,
+        _self_tile(self_entry["zk"], ps), _self_tile(self_entry["zv"], ps),
+        cos, sin, bias, scale=scale, interpret=_resolve_interpret(interpret),
+        k_norm=k_norm, norm_eps=norm_eps)
+    return ungroup_outputs(o)
+
+
+def dense_decode_paged(q, cache, ptab, cur, *, window: int | None,
+                       scale: float, interpret: bool | None = None,
+                       self_entry: dict | None = None):
+    """Paged dense decode through the paged latent kernel — the same
+    degenerate-latent trick as ``dense_decode`` (identity reconstruction,
+    cos=1/sin=0 since keys are stored post-RoPE), over page-major
+    {"k","v","pos"} pools."""
+    ps = cache["pos"].shape[1]
+    k = cache["k"]
+    Hkv, dh = k.shape[2], k.shape[3]
+    eye = jnp.broadcast_to(jnp.eye(dh, dtype=k.dtype), (Hkv, dh, dh))
+    pos_view = _paged_pos_view(cache["pos"], ptab)
+    bias, cos, sin = _paged_tables(pos_view, cur, window, dh, None, ps)
+    qg = group_queries(q, Hkv)
+    o = latent_decode_attention_paged(
+        ptab, qg, k, cache["v"], eye,
+        _self_tile(self_entry["k"], ps), _self_tile(self_entry["v"], ps),
+        cos, sin, bias, scale=scale, interpret=_resolve_interpret(interpret))
+    return ungroup_outputs(o)
+
+
 def flash_prefill(q, k, v, *, causal: bool = True, window: int | None = None,
                   scale: float | None = None, block: int = 256,
                   interpret: bool | None = None):
@@ -168,6 +260,7 @@ def flash_prefill(q, k, v, *, causal: bool = True, window: int | None = None,
 __all__ = [
     "decode_bias", "rope_tables_for", "group_queries", "ungroup_outputs",
     "default_interpret", "latent_decode", "dense_decode", "flash_prefill",
+    "latent_decode_paged", "dense_decode_paged",
     "latent_decode_attention", "latent_decode_attention_quant",
-    "flash_prefill_attention",
+    "latent_decode_attention_paged", "flash_prefill_attention",
 ]

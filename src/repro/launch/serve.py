@@ -64,6 +64,18 @@ def main(argv=None):
                     help="draft proposer for --spec-depth > 0: 'ngram' "
                          "(prompt lookup, default) or 'layers:K' (self-"
                          "draft from the target's first K layers)")
+    ap.add_argument("--cache-layout", choices=("ring", "paged"),
+                    default="ring",
+                    help="'paged' pools cache pages across slots with "
+                         "copy-on-write prompt-prefix sharing; token "
+                         "streams are identical to 'ring'")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="positions per cache page (paged layout only; "
+                         "default: largest of 16/8/4/2/1 dividing "
+                         "--max-len)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="physical pool pages incl. the null page (paged "
+                         "only; default: ring-equivalent capacity)")
     args = ap.parse_args(argv)
 
     kw = {"smoke": args.smoke}
@@ -87,13 +99,18 @@ def main(argv=None):
                  sync_every=args.sync_every,
                  prefill_chunk=args.prefill_chunk,
                  mesh=mesh_from_spec(args.mesh),
-                 spec_depth=args.spec_depth, draft=args.draft)
+                 spec_depth=args.spec_depth, draft=args.draft,
+                 cache_layout=args.cache_layout, page_size=args.page_size,
+                 n_pages=args.n_pages)
     spec = (f", spec_depth={args.spec_depth} ({eng.metrics()['draft']})"
             if args.spec_depth else "")
+    layout = ("" if args.cache_layout == "ring" else
+              f", paged (page_size={eng.page_size}, "
+              f"{eng.n_pages} pages)")
     print(f"[serve] {cfg.name}: cache {cache_bytes(eng.cache)/2**20:.1f} MiB "
           f"({args.slots} slots x {args.max_len} positions), "
           f"sync_every={args.sync_every}, mesh={eng.mesh_str} "
-          f"({len(jax.devices())} devices){spec}")
+          f"({len(jax.devices())} devices){spec}{layout}")
 
     g = np.random.default_rng(1)
     for i in range(args.requests):
@@ -113,6 +130,9 @@ def main(argv=None):
         print(f"[serve] speculation: accept rate {m['accept_rate']:.2f} "
               f"({m['draft_accepted']}/{m['draft_proposed']} draft tokens "
               f"accepted)")
+    if args.cache_layout == "paged":
+        print(f"[serve] pages: peak {m['pages_peak']}/{m['pages_total']}, "
+              f"{m['pages_shared']} shares, {m['cow_forks']} COW forks")
     if eng.unfinished["queued"] or eng.unfinished["in_flight"]:
         print(f"[serve] WARNING unfinished: {eng.unfinished}")
     return finished

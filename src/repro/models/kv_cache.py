@@ -195,6 +195,71 @@ def latent_cache_arrays(cache: Params, dtype) -> tuple[jax.Array, jax.Array]:
 
 
 # ---------------------------------------------------------------------------
+# Paged layout
+# ---------------------------------------------------------------------------
+#
+# In the paged layout a block's ring leaves live page-major in a shared
+# pool — (n_pages, page_size, ...) instead of (B, max_len, ...) — and a
+# (B, n_slot_pages) int32 page table (carried through the decode window
+# like any other slot state) maps slot-page index -> physical page.
+# Physical page 0 is the reserved null page: its ``pos`` stays -1 and it
+# is never written, so unmapped table entries read as empty ring.  The
+# ``pages`` argument threaded through the readers/writers below is the
+# tuple (ptab, page_size); None means ring layout.  int8 pages keep
+# their quantization scales page-local: zk_s/zv_s are pool leaves
+# (n_pages, page_size, G) gathered and written through the same table.
+
+
+def paged_view(cache: Params, ptab: jax.Array, page_size: int) -> Params:
+    """Slot-major view of a page-major cache dict.
+
+    Each leaf's pages are gathered through the table and folded to a
+    (B, n_slot_pages * page_size, ...) ring — exactly the arrays the ring
+    layout would hold, so every einsum reader (and the quantized kernel
+    path) runs unchanged and bitwise-identically on the view."""
+    B, n_sp = ptab.shape
+    flat = ptab.reshape(-1)
+
+    def one(leaf):
+        v = jnp.take(leaf, flat, axis=0)
+        return v.reshape((B, n_sp * page_size) + leaf.shape[2:])
+
+    return {k: one(v) for k, v in cache.items()}
+
+
+def _paged_merge_leaf(pool, upd, ptab: jax.Array, page_size: int,
+                      cur: jax.Array, stacked: bool,
+                      active: jax.Array | None):
+    """Paged form of ``_merge_leaf``: route each row's slot entry through
+    the page table to (physical page, in-page offset) = (ptab[b, cur//ps],
+    cur %% ps).  Still iota-compare + select — a (P, ps) hit mask over the
+    pool — so the pool stays page x offset sharded under SPMD exactly as
+    the ring stayed slot x sequence sharded.  The null page (0) is never
+    written; allocation guarantees live pages have at most one writer, so
+    ``argmax`` over the hit matrix picks THE writing row."""
+    if upd is None:
+        return pool
+    b_ax = 1 if stacked else 0
+    P = pool.shape[b_ax]
+    B, n_sp = ptab.shape
+    page_idx = jnp.clip((cur // page_size).astype(jnp.int32), 0, n_sp - 1)
+    tgt = jnp.take_along_axis(ptab, page_idx[:, None], axis=1)[:, 0]  # (B,)
+    act = jnp.ones((B,), bool) if active is None else active
+    hit_pb = (jnp.arange(P, dtype=tgt.dtype)[:, None] == tgt[None, :]) \
+        & act[None, :]                                               # (P, B)
+    has = hit_pb.any(axis=1) & (jnp.arange(P) != 0)
+    writer = jnp.argmax(hit_pb, axis=1)                              # (P,)
+    off = (cur % page_size).astype(jnp.int32)
+    hit = has[:, None] & (jnp.arange(page_size, dtype=jnp.int32)[None, :]
+                          == jnp.take(off, writer)[:, None])         # (P, ps)
+    val = jnp.take(upd, writer, axis=b_ax)       # one slot entry per page
+    new = jnp.expand_dims(val, axis=b_ax + 1)
+    shape = [1] * pool.ndim
+    shape[b_ax], shape[b_ax + 1] = P, page_size
+    return jnp.where(hit.reshape(shape), new.astype(pool.dtype), pool)
+
+
+# ---------------------------------------------------------------------------
 # Decode readers (single new token, x: (B, 1, d))
 # ---------------------------------------------------------------------------
 
@@ -223,7 +288,8 @@ def _two_part_softmax(logits_c: jax.Array, logits_s: jax.Array):
 
 def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
                       cur: jax.Array, window: int | None,
-                      theta: float | None = None):
+                      theta: float | None = None,
+                      pages: tuple | None = None):
     """Dense decode with DEFERRED cache writes (§Perf iteration 3).
 
     The new token's K/V enter the softmax as an explicit self column; the
@@ -231,6 +297,8 @@ def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     (apply_decode_writes), so the scan carries only (B, Hkv, dh) updates.
     Masking stays correct: the slot being overwritten holds either an
     empty entry (pos=-1) or one that just fell out of the window."""
+    if pages is not None and cfg.attn_backend != "pallas":
+        cache = paged_view(cache, *pages)
     B = x.shape[0]
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
     g = H // Hkv
@@ -247,10 +315,17 @@ def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
     updates = {"k": k_new, "v": v_new, "pos": cur.astype(jnp.int32)}
     if cfg.attn_backend == "pallas":
         # Joint softmax over [ring | self] inside the kernel: the deferred
-        # write becomes an extra appended ring column at position cur.
-        o = kops.dense_decode(q[:, 0], cache, cur, window=window, scale=scale,
-                              block_s=cfg.attn_block,
-                              self_entry={"k": k_new, "v": v_new})
+        # write becomes an extra appended ring column at position cur.  The
+        # paged kernel gathers pages via a scalar-prefetched table instead
+        # of materializing the slot-major view.
+        if pages is not None:
+            o = kops.dense_decode_paged(
+                q[:, 0], cache, pages[0], cur, window=window, scale=scale,
+                self_entry={"k": k_new, "v": v_new})
+        else:
+            o = kops.dense_decode(q[:, 0], cache, cur, window=window,
+                                  scale=scale, block_s=cfg.attn_block,
+                                  self_entry={"k": k_new, "v": v_new})
         y = o.astype(x.dtype).reshape(B, 1, H * dh) @ p["wo"]
         return y, updates
 
@@ -271,10 +346,18 @@ def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
 
 def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
                        cur: jax.Array, window: int | None,
-                       theta: float | None = None):
+                       theta: float | None = None,
+                       pages: tuple | None = None):
     """ReCalKV decode: reconstruct keys from the latent ring, RoPE by stored
     positions, keep values latent, project through the fused W~_o.
     Deferred-write form (see decode_attn_dense)."""
+    if pages is not None and not (cfg.attn_backend == "pallas"
+                                  and cfg.cache_quant_bits is None):
+        # Einsum and int8-kernel paths read the gathered slot-major view
+        # (page-local scales dequantize exactly as ring-local ones did);
+        # only the float-latent kernel gathers pages in-kernel.
+        cache = paged_view(cache, *pages)
+        pages = None
     theta = theta or cfg.rope_theta
     B = x.shape[0]
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
@@ -298,10 +381,16 @@ def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
         # Kernel path: the deferred write becomes an extra appended ring
         # column at cur, so the kernel's online softmax covers the self
         # token; qk-norm is applied to reconstructed keys in-kernel.
-        o_lat = kops.latent_decode(
-            q[:, 0], cache, p["r_k"], cur, theta=theta, window=window,
-            scale=scale, block_s=cfg.attn_block, self_entry=entry,
-            k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps)
+        if pages is not None:
+            o_lat = kops.latent_decode_paged(
+                q[:, 0], cache, pages[0], p["r_k"], cur, theta=theta,
+                window=window, scale=scale, self_entry=entry,
+                k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps)
+        else:
+            o_lat = kops.latent_decode(
+                q[:, 0], cache, p["r_k"], cur, theta=theta, window=window,
+                scale=scale, block_s=cfg.attn_block, self_entry=entry,
+                k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps)
         o_lat = o_lat.astype(x.dtype).reshape(B, 1, H, -1)
         y = jnp.einsum("bthr,hrd->btd", o_lat, p["wo_fused"])
         return y, updates
@@ -337,10 +426,12 @@ def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
 
 
 def decode_attn_mla(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
-                    cur: jax.Array):
+                    cur: jax.Array, pages: tuple | None = None):
     """Absorbed MLA decode: scores/outputs computed in the c_kv latent space
     (never reconstructing per-head K/V) — the built-in analogue of OCMF.
     Deferred-write form (see decode_attn_dense)."""
+    if pages is not None:
+        cache = paged_view(cache, *pages)
     a = cfg.mla
     B = x.shape[0]
     H = cfg.num_heads
@@ -432,10 +523,13 @@ def _verify_masks(cache_pos: jax.Array, cur: jax.Array, S: int,
 def verify_attn_dense(p: Params, x: jax.Array, cache: Params,
                       cfg: ModelConfig, cur: jax.Array,
                       feed_mask: jax.Array, window: int | None,
-                      theta: float | None = None):
+                      theta: float | None = None,
+                      pages: tuple | None = None):
     """Dense S-token verify.  Returns (y (B, S, d), deferred updates with
     (B, S, ...) entry leaves — committed by the caller per accept mask).
     Always the einsum path: the pallas kernels are single-query."""
+    if pages is not None:
+        cache = paged_view(cache, *pages)
     B, S = x.shape[:2]
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
     g = H // Hkv
@@ -470,10 +564,13 @@ def verify_attn_dense(p: Params, x: jax.Array, cache: Params,
 def verify_attn_latent(p: Params, x: jax.Array, cache: Params,
                        cfg: ModelConfig, cur: jax.Array,
                        feed_mask: jax.Array, window: int | None,
-                       theta: float | None = None):
+                       theta: float | None = None,
+                       pages: tuple | None = None):
     """ReCalKV S-token verify (see verify_attn_dense): cached keys are
     reconstructed and RoPE'd by stored position, fresh latents enter as a
     causal self block, values stay latent through the fused W~_o."""
+    if pages is not None:
+        cache = paged_view(cache, *pages)
     theta = theta or cfg.rope_theta
     B, S = x.shape[:2]
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
@@ -522,8 +619,11 @@ def verify_attn_latent(p: Params, x: jax.Array, cache: Params,
 
 
 def verify_attn_mla(p: Params, x: jax.Array, cache: Params,
-                    cfg: ModelConfig, cur: jax.Array, feed_mask: jax.Array):
+                    cfg: ModelConfig, cur: jax.Array, feed_mask: jax.Array,
+                    pages: tuple | None = None):
     """Absorbed-MLA S-token verify (see verify_attn_dense)."""
+    if pages is not None:
+        cache = paged_view(cache, *pages)
     a = cfg.mla
     B, S = x.shape[:2]
     H = cfg.num_heads
@@ -591,15 +691,19 @@ def _merge_leaf(cache_leaf, upd, cur: jax.Array, stacked: bool,
     return jnp.where(hit, new.astype(cache_leaf.dtype), cache_leaf)
 
 
-def _merge(caches, updates, cur, stacked: bool, active):
+def _merge(caches, updates, cur, stacked: bool, active, pages=None):
     if updates is None:
         return caches
     if isinstance(caches, dict):
-        return {k: _merge(v, updates.get(k), cur, stacked, active)
+        return {k: _merge(v, updates.get(k), cur, stacked, active, pages)
                 for k, v in caches.items()}
     if isinstance(caches, (tuple, list)):
         return type(caches)(
-            _merge(c, u, cur, stacked, active) for c, u in zip(caches, updates))
+            _merge(c, u, cur, stacked, active, pages)
+            for c, u in zip(caches, updates))
+    if pages is not None:
+        return _paged_merge_leaf(caches, updates, pages[0], pages[1], cur,
+                                 stacked, active)
     return _merge_leaf(caches, updates, cur, stacked, active)
 
 
@@ -619,7 +723,8 @@ def constrain_caches(caches: Params, shardings) -> Params:
 
 
 def apply_decode_writes(caches: Params, updates: Params, cur: jax.Array,
-                        active: jax.Array | None = None) -> Params:
+                        active: jax.Array | None = None,
+                        pages: tuple | None = None) -> Params:
     """Merge deferred per-layer decode updates into the caches (§Perf it. 3).
 
     One vectorized pass after the layer scan: update leaves are slot
@@ -627,11 +732,18 @@ def apply_decode_writes(caches: Params, updates: Params, cur: jax.Array,
     full replacements (recurrent states, equal ndim), or None (static
     cross caches, kept as-is).  ``active`` (B,) bool, when given, freezes
     the rows of inactive sequences entirely — a freed serving slot's ring
-    and recurrent state stay inert until re-admission."""
+    and recurrent state stay inert until re-admission.  With ``pages``
+    (ptab, page_size) the caches are page-major pools and each row's
+    write resolves through the table (``_paged_merge_leaf``); the paged
+    engine admits only full-length self-attention rings, so every leaf is
+    a slot entry there."""
     return {
-        "prefix": _merge(caches["prefix"], updates["prefix"], cur, False, active),
-        "blocks": _merge(caches["blocks"], updates["blocks"], cur, True, active),
-        "suffix": _merge(caches["suffix"], updates["suffix"], cur, False, active),
+        "prefix": _merge(caches["prefix"], updates["prefix"], cur, False,
+                         active, pages),
+        "blocks": _merge(caches["blocks"], updates["blocks"], cur, True,
+                         active, pages),
+        "suffix": _merge(caches["suffix"], updates["suffix"], cur, False,
+                         active, pages),
     }
 
 
@@ -645,7 +757,8 @@ def _slice_update_leaf(path, upd, j: int):
 
 
 def apply_verify_writes(caches: Params, updates: Params, cur: jax.Array,
-                        mask: jax.Array) -> Params:
+                        mask: jax.Array,
+                        pages: tuple | None = None) -> Params:
     """Commit an S-position verify step's deferred writes for the accepted
     prefix only.
 
@@ -661,7 +774,7 @@ def apply_verify_writes(caches: Params, updates: Params, cur: jax.Array,
             lambda path, u: _slice_update_leaf(path, u, j), updates,
             is_leaf=lambda u: u is None)
         caches = apply_decode_writes(caches, upd_j, cur + j,
-                                     active=mask[:, j])
+                                     active=mask[:, j], pages=pages)
     return caches
 
 

@@ -360,15 +360,17 @@ def block_decode(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
         return x + h, {"cross": None}, aux + a
 
     window = cfg.window_for(kind)
+    pages = ctx.get("pages")
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla is not None:
-        y, sc = KC.decode_attn_mla(p["attn"], h, cache["self"], cfg, cur)
+        y, sc = KC.decode_attn_mla(p["attn"], h, cache["self"], cfg, cur,
+                                   pages=pages)
     elif cfg.recalkv is not None:
         y, sc = KC.decode_attn_latent(p["attn"], h, cache["self"], cfg, cur, window,
-                                      theta=_theta(cfg, kind))
+                                      theta=_theta(cfg, kind), pages=pages)
     else:
         y, sc = KC.decode_attn_dense(p["attn"], h, cache["self"], cfg, cur, window,
-                                     theta=_theta(cfg, kind))
+                                     theta=_theta(cfg, kind), pages=pages)
     x = x + y
     updates = {"self": sc}
 
@@ -419,18 +421,19 @@ def block_verify(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
         return x + h, {"cross": None}, aux + a
 
     window = cfg.window_for(kind)
+    pages = ctx.get("pages")
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla is not None:
         y, sc = KC.verify_attn_mla(p["attn"], h, cache["self"], cfg, cur,
-                                   feed_mask)
+                                   feed_mask, pages=pages)
     elif cfg.recalkv is not None:
         y, sc = KC.verify_attn_latent(p["attn"], h, cache["self"], cfg, cur,
                                       feed_mask, window,
-                                      theta=_theta(cfg, kind))
+                                      theta=_theta(cfg, kind), pages=pages)
     else:
         y, sc = KC.verify_attn_dense(p["attn"], h, cache["self"], cfg, cur,
                                      feed_mask, window,
-                                     theta=_theta(cfg, kind))
+                                     theta=_theta(cfg, kind), pages=pages)
     x = x + y
     updates = {"self": sc}
 
@@ -605,20 +608,28 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: dict):
     return loss + aux, {"xent": loss, "aux": aux, "tokens": cnt}
 
 
-def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      pages: tuple[int, int] | None = None) -> Params:
+    """Decode cache pool.  With ``pages`` = (n_pages, page_size) every
+    block's ring is built page-major — leaves (n_pages, page_size, ...)
+    shared across slots through a page table — instead of per-slot
+    (batch, max_len, ...) rows.  Callers gate paged mode to full-length
+    self-attention stacks (no recurrent/cross/sliding-window blocks);
+    page 0 is the reserved null page (pos = -1, never written)."""
     prefix, pattern, suffix, n_per = _layer_layout(cfg)
+    b, ml = (batch, max_len) if pages is None else pages
     def stack_cache(kind):
-        one = KC.init_block_cache(cfg, kind, batch, max_len)
+        one = KC.init_block_cache(cfg, kind, b, ml)
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_per,) + a.shape), one)
     n_scanned = n_per * len(pattern)
     return {
         "prefix": tuple(
-            KC.init_block_cache(cfg, k, batch, max_len, layer_idx=i)
+            KC.init_block_cache(cfg, k, b, ml, layer_idx=i)
             for i, k in enumerate(prefix)),
         "blocks": tuple(stack_cache(k) for k in pattern) if n_per else None,
         "suffix": tuple(
-            KC.init_block_cache(cfg, k, batch, max_len,
+            KC.init_block_cache(cfg, k, b, ml,
                                 layer_idx=len(prefix) + n_scanned + i)
             for i, k in enumerate(suffix)),
     }
@@ -645,24 +656,27 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 def decode_step(cfg: ModelConfig, params: Params, caches: Params,
                 tokens: jax.Array, cur: jax.Array,
                 active: jax.Array | None = None, *,
-                cache_shardings=None):
+                cache_shardings=None, pages=None):
     """One decode step.  tokens: (B,) int32, cur: (B,) absolute positions.
     ``active`` (B,) bool masks cache writes for idle batch rows (serving
     slots between requests).  ``cache_shardings`` (optional NamedSharding
     tree matching ``caches``) pins the updated cache's layout so a fused
-    multi-step loop never reshards its carry mid-scan.  Returns
+    multi-step loop never reshards its carry mid-scan.  ``pages``
+    (ptab (B, n_slot_pages) int32, page_size) switches reads and the
+    deferred write to the page-major pool layout.  Returns
     (logits (B, V), new caches)."""
     x = embed_tokens(cfg, params, tokens[:, None])
-    ctx = {"cur": cur}
+    ctx = {"cur": cur, "pages": pages}
     x, updates, _ = run_stack(cfg, params, x, ctx, caches=caches, decode=True)
-    caches = KC.apply_decode_writes(caches, updates, cur, active)
+    caches = KC.apply_decode_writes(caches, updates, cur, active, pages=pages)
     caches = KC.constrain_caches(caches, cache_shardings)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return logits_for(cfg, params, x)[:, 0], caches
 
 
 def verify_step(cfg: ModelConfig, params: Params, caches: Params,
-                tokens: jax.Array, cur: jax.Array, feed_mask: jax.Array):
+                tokens: jax.Array, cur: jax.Array, feed_mask: jax.Array,
+                pages=None):
     """Speculative-decoding target verification: logits for S fed tokens
     in ONE pass (one weight/cache read amortized over S positions — the
     step-count lever low-rank caches leave on the table).
@@ -678,7 +692,7 @@ def verify_step(cfg: ModelConfig, params: Params, caches: Params,
     the ring then never sees a rejected token.  Returns
     (logits (B, S, V) float32, updates)."""
     x = embed_tokens(cfg, params, jnp.maximum(tokens, 0))
-    ctx = {"cur": cur, "feed_mask": feed_mask}
+    ctx = {"cur": cur, "feed_mask": feed_mask, "pages": pages}
     x, updates, _ = run_stack(cfg, params, x, ctx, caches=caches,
                               decode=True, verify=True)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
@@ -686,11 +700,12 @@ def verify_step(cfg: ModelConfig, params: Params, caches: Params,
 
 
 def commit_verify_writes(caches: Params, updates: Params, cur: jax.Array,
-                         mask: jax.Array, *, cache_shardings=None) -> Params:
+                         mask: jax.Array, *, cache_shardings=None,
+                         pages=None) -> Params:
     """Apply a verify step's deferred writes for the accepted prefix
     (``mask`` (B, S) bool) and re-pin the cache layout (see
     :func:`decode_step`)."""
-    caches = KC.apply_verify_writes(caches, updates, cur, mask)
+    caches = KC.apply_verify_writes(caches, updates, cur, mask, pages=pages)
     return KC.constrain_caches(caches, cache_shardings)
 
 

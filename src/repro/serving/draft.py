@@ -63,19 +63,41 @@ def ngram_propose(hist: jax.Array, cur: jax.Array, tok_in: jax.Array,
     p holds the token fed at p; entries at p >= cur are stale).  cur: (B,)
     next feed position; tok_in: (B,) the token about to be fed at cur.
 
-    Matches the bigram (hist[cur-1], tok_in) against history and proposes
-    the ``depth`` tokens that followed its most recent earlier occurrence.
-    Unknown positions are filled with -1 — never equal to a sampled token,
-    so they are simply rejected by verification."""
+    Longest-available-suffix matching: look for the current 3-gram suffix
+    (hist[cur-2], hist[cur-1], tok_in) in history; if it never occurred,
+    fall back to the 2-gram (hist[cur-1], tok_in), then the unigram
+    tok_in.  Each candidate match ends strictly before cur - 1, so the
+    chosen occurrence always has at least one following history token to
+    propose (a match flush against the tail would propose only stale
+    positions — the failure mode that pinned accept_rate at 0.0 on
+    perfectly periodic text, where the MOST RECENT bigram occurrence is
+    always the one at the tail).  Unknown positions are filled with -1 —
+    never equal to a sampled token, so verification just rejects them."""
     B, Lh = hist.shape
-    prev = jnp.take_along_axis(
-        hist, jnp.clip(cur - 1, 0, Lh - 1)[:, None], axis=1)[:, 0]
-    idx = jnp.arange(Lh - 1, dtype=cur.dtype)
-    m = ((hist[:, :-1] == prev[:, None]) & (hist[:, 1:] == tok_in[:, None])
-         & (idx[None, :] + 1 < cur[:, None]) & (cur[:, None] >= 2))
-    p = jnp.max(jnp.where(m, idx[None, :], -1), axis=1)       # (B,) or -1
-    offs = p[:, None] + 2 + jnp.arange(depth, dtype=cur.dtype)[None, :]
-    known = (p[:, None] >= 0) & (offs < cur[:, None])
+
+    def suffix(off):
+        return jnp.take_along_axis(
+            hist, jnp.clip(cur - off, 0, Lh - 1)[:, None], axis=1)[:, 0]
+
+    t1, t2 = suffix(1), suffix(2)
+    idx = jnp.arange(Lh, dtype=cur.dtype)
+    # match position i: hist[i] == tok_in, with i + 1 < cur so the first
+    # proposed token hist[i + 1] is real history, not a stale slot
+    base = (hist == tok_in[:, None]) & (idx[None, :] + 1 < cur[:, None])
+    z = jnp.zeros((B, 1), bool)
+    p2 = jnp.concatenate([z, hist[:, :-1] == t1[:, None]], axis=1)
+    p3 = jnp.concatenate([z, z, hist[:, :-2] == t2[:, None]], axis=1)
+
+    def best(m):
+        # most recent qualifying occurrence, -1 when none
+        return jnp.max(jnp.where(m, idx[None, :], -1), axis=1)
+
+    q3 = best(base & p2 & p3 & (cur[:, None] >= 2))
+    q2 = best(base & p2 & (cur[:, None] >= 1))
+    q1 = best(base)
+    q = jnp.where(q3 >= 0, q3, jnp.where(q2 >= 0, q2, q1))
+    offs = q[:, None] + 1 + jnp.arange(depth, dtype=cur.dtype)[None, :]
+    known = (q[:, None] >= 0) & (offs < cur[:, None])
     prop = jnp.take_along_axis(hist, jnp.clip(offs, 0, Lh - 1), axis=1)
     return jnp.where(known, prop, jnp.int32(-1))
 

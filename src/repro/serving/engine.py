@@ -69,6 +69,7 @@ from repro.models.config import ModelConfig
 from repro.serving import draft as D
 from repro.serving import sampler as S
 from repro.serving.draft import DraftSpec
+from repro.serving.pages import PagePool, PrefixRegistry, prefix_key
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 from repro.sharding import rules as R
@@ -89,6 +90,29 @@ def _merge_slot(pool_cache, new_cache, slots: jax.Array):
         if key0 == "blocks":
             return pool.at[:, slots].set(new[:, :n].astype(pool.dtype))
         return pool.at[slots].set(new[:n].astype(pool.dtype))
+    return jax.tree_util.tree_map_with_path(one, pool_cache, new_cache)
+
+
+def _merge_slot_paged(pool_cache, new_cache, rows: jax.Array,
+                      cols: jax.Array, phys: jax.Array, page_size: int):
+    """Scatter prefill rows into the PAGED pool: ``new_cache`` is
+    slot-major (W, Lr, ...); tile (rows[t], cols[t]) — slot row, logical
+    page index — lands in physical page ``phys[t]`` of the page-major
+    pool (n_pages, page_size, ...).  Shared prefix pages are simply
+    absent from (rows, cols, phys): their content is already resident,
+    so admission never rewrites them (copy-on-write by omission)."""
+    def one(path, pool, new):
+        key0 = getattr(path[0], "key", None)
+        ps = page_size
+        if key0 == "blocks":
+            n_per, W = new.shape[0], new.shape[1]
+            tiles = new.reshape((n_per, W, new.shape[2] // ps, ps)
+                                + new.shape[3:])[:, rows, cols]
+            return pool.at[:, phys].set(tiles.astype(pool.dtype))
+        W = new.shape[0]
+        tiles = new.reshape((W, new.shape[1] // ps, ps)
+                            + new.shape[2:])[rows, cols]
+        return pool.at[phys].set(tiles.astype(pool.dtype))
     return jax.tree_util.tree_map_with_path(one, pool_cache, new_cache)
 
 
@@ -124,11 +148,63 @@ class Engine:
                  sync_every: int = 8, prefill_chunk: int | None = None,
                  mesh: jax.sharding.Mesh | None = None,
                  spec_depth: int = 0,
-                 draft: str | DraftSpec | None = None):
+                 draft: str | DraftSpec | None = None,
+                 cache_layout: str = "ring",
+                 page_size: int | None = None,
+                 n_pages: int | None = None):
         if backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=backend)
         if sync_every < 1:
             raise ValueError("sync_every must be >= 1")
+        if cache_layout not in ("ring", "paged"):
+            raise ValueError(f"cache_layout={cache_layout!r}: expected "
+                             f"'ring' or 'paged'")
+        if cache_layout == "ring" and (page_size is not None
+                                       or n_pages is not None):
+            raise ValueError(
+                "page_size/n_pages only apply to cache_layout='paged'")
+        self.cache_layout = cache_layout
+        self.page_size = self.n_pages = None
+        self._pages: PagePool | None = None
+        if cache_layout == "paged":
+            kinds = set(cfg.expanded_layers())
+            bad = sorted(k for k in kinds
+                         if k in ("mamba", "rglru", "cross", "attn_cross"))
+            if bad:
+                raise ValueError(
+                    f"cache_layout='paged' needs position-addressed "
+                    f"self-attention rings; {cfg.name} has {bad} blocks")
+            short = sorted(k for k in kinds
+                           if cfg.cache_len(k, max_len) != max_len)
+            if short:
+                raise ValueError(
+                    f"cache_layout='paged' needs full-length rings; "
+                    f"{short} blocks keep ring length < max_len={max_len}")
+            if page_size is None:
+                page_size = next(p for p in (16, 8, 4, 2, 1)
+                                 if max_len % p == 0)
+            if page_size < 1 or max_len % page_size:
+                raise ValueError(f"page_size={page_size} must be >= 1 and "
+                                 f"divide max_len={max_len}")
+            n_sp = max_len // page_size
+            if n_pages is None:
+                # ring-equivalent capacity plus the reserved null page;
+                # smaller pools trade concurrency headroom for memory
+                n_pages = max_slots * n_sp + 1
+            if n_pages < n_sp + 1:
+                raise ValueError(
+                    f"n_pages={n_pages} cannot hold one full-length "
+                    f"request ({n_sp} pages + the reserved null page)")
+            self.page_size, self.n_pages = page_size, n_pages
+            self._pages = PagePool(n_pages)
+            self._prefixes = PrefixRegistry()
+            self._slot_pages: list[list[int]] = [[] for _ in
+                                                 range(max_slots)]
+            # The pallas decode path tiles the ring at attn_block; pin it
+            # to page_size so the paged kernel's page-per-tile walk is
+            # bitwise-identical to the ring kernel's tile sequence (the
+            # paged <-> ring parity contract).
+            cfg = dataclasses.replace(cfg, attn_block=page_size)
         if spec_depth < 0:
             raise ValueError("spec_depth must be >= 0")
         if spec_depth > 0:
@@ -168,7 +244,10 @@ class Engine:
             R.param_specs(params, self.mesh, grains=R.head_grains(cfg)),
             self.mesh)
         self.params = jax.device_put(params, param_shardings)
-        cache = T.init_decode_cache(cfg, max_slots, max_len)
+        cache = T.init_decode_cache(
+            cfg, max_slots, max_len,
+            pages=None if self._pages is None
+            else (self.n_pages, self.page_size))
         self._cache_shardings = R.to_named(
             R.cache_specs(cache, self.mesh), self.mesh)
         self.cache = jax.device_put(cache, self._cache_shardings)
@@ -216,6 +295,13 @@ class Engine:
             # the prompt at admission and extended on-device as tokens
             # are fed (a (B, max_len) carry leaf under carry_specs)
             self._st["hist"] = np.zeros((max_slots, max_len), np.int32)
+        if self._pages is not None:
+            # slot -> physical-page table: the device-side indirection the
+            # paged readers/writers resolve through.  Unmapped logical
+            # pages point at the reserved null page 0 (pos -1 there keeps
+            # the bias masking them out); rides carry_specs on slot dim 0.
+            self._st["ptab"] = np.zeros(
+                (max_slots, max_len // self.page_size), np.int32)
         # metrics (sums and `windows` advance atomically at each window
         # boundary in _harvest, so metrics() mid-stream is consistent)
         self.host_syncs = 0          # device->host harvest points
@@ -260,7 +346,7 @@ class Engine:
             window_fn = self._make_window(
                 cfg, max_len, sync_every,
                 cache_shardings=self._cache_shardings,
-                logits_spec=logits_spec)
+                logits_spec=logits_spec, page_size=self.page_size)
             donate = (1,)
         else:
             window_fn = self._make_spec_window(
@@ -268,7 +354,7 @@ class Engine:
                 draft_cfg=self._draft_cfg,
                 cache_shardings=self._cache_shardings,
                 draft_cache_shardings=self._draft_cache_shardings,
-                logits_spec=logits_spec)
+                logits_spec=logits_spec, page_size=self.page_size)
             donate = (2, 3) if self.draft_cache is not None else (1,)
         if jax.default_backend() == "cpu":
             donate = ()
@@ -279,7 +365,8 @@ class Engine:
 
     @staticmethod
     def _make_window(cfg: ModelConfig, max_len: int, steps: int, *,
-                     cache_shardings=None, logits_spec=None):
+                     cache_shardings=None, logits_spec=None,
+                     page_size: int | None = None):
         """Build the jitted window fn: ``steps`` fused decode iterations.
 
         Per iteration, per slot: pick the fed token (ingest buffer while
@@ -306,9 +393,11 @@ class Engine:
                 # the host stalls (no step) until the next refill
                 stalled = st["more"] & ~feeding
                 stepping = st["act"] & ~stalled
+                pages = ((st["ptab"], page_size)
+                         if page_size is not None else None)
                 logits, cache = T.decode_step(
                     cfg, params, cache, tok_in, st["cur"], stepping,
-                    cache_shardings=cache_shardings)
+                    cache_shardings=cache_shardings, pages=pages)
                 ks = jax.vmap(lambda k: jax.random.split(k, 2))(st["keys"])
                 sampled = S.sample_tokens(logits, st["temp"], st["top_k"],
                                           st["top_p"], ks[:, 1],
@@ -346,7 +435,7 @@ class Engine:
     def _make_spec_window(cfg: ModelConfig, max_len: int, steps: int,
                           depth: int, *, draft: DraftSpec, draft_cfg=None,
                           cache_shardings=None, draft_cache_shardings=None,
-                          logits_spec=None):
+                          logits_spec=None, page_size: int | None = None):
         """Build the jitted speculative window: ``steps`` iterations, each
         verifying up to ``depth`` draft tokens in ONE target pass.
 
@@ -406,8 +495,12 @@ class Engine:
             cand = jnp.concatenate(
                 [stepping[:, None], speculating[:, None] & cap_ok[:, 1:]],
                 axis=1)                                          # (B, S)
+            # the draft ring (layer draft) stays slot-major even in paged
+            # mode — only the target cache resolves through the page table
+            pages = ((st["ptab"], page_size)
+                     if page_size is not None else None)
             logits, updates = T.verify_step(cfg, params, cache, fed, cur,
-                                            cand)
+                                            cand, pages=pages)
             last_prompt = (feeding & ~st["more"]
                            & (st["bpos"] + 1 >= st["avail"]))
 
@@ -446,7 +539,8 @@ class Engine:
 
             # --- commit the accepted prefix (rejected tokens never wrote)
             cache = T.commit_verify_writes(cache, updates, cur, valid,
-                                           cache_shardings=cache_shardings)
+                                           cache_shardings=cache_shardings,
+                                           pages=pages)
             if has_draft_model:
                 # the draft wrote as it proposed; strike rejected columns
                 # from its position index so they can't shadow the slot
@@ -510,7 +604,10 @@ class Engine:
                       prefill_chunk: int | None = None,
                       mesh: jax.sharding.Mesh | None = None,
                       spec_depth: int = 0,
-                      draft: str | DraftSpec | None = None) -> "Engine":
+                      draft: str | DraftSpec | None = None,
+                      cache_layout: str = "ring",
+                      page_size: int | None = None,
+                      n_pages: int | None = None) -> "Engine":
         """Boot an engine straight from a saved compression artifact —
         the compress-offline / serve-forever workflow across processes."""
         from repro.api import load_artifact  # local: api imports models too
@@ -519,7 +616,9 @@ class Engine:
         return cls(art.cfg, art.params, max_slots=max_slots, max_len=max_len,
                    source=source, backend=backend, sampling=sampling,
                    sync_every=sync_every, prefill_chunk=prefill_chunk,
-                   mesh=mesh, spec_depth=spec_depth, draft=draft)
+                   mesh=mesh, spec_depth=spec_depth, draft=draft,
+                   cache_layout=cache_layout, page_size=page_size,
+                   n_pages=n_pages)
 
     # -- back-compat conveniences -------------------------------------------
 
@@ -557,9 +656,88 @@ class Engine:
         st["bpos"][slot] = 0
         st["more"][slot] = False
         st["left"][slot] = 0
+        if self._pages is not None:
+            for pg in self._slot_pages[slot]:
+                if self._pages.free(pg):
+                    # last holder gone: retire the page's prefix key so a
+                    # future prompt can't map to recycled content
+                    self._prefixes.drop_page(pg)
+            self._slot_pages[slot] = []
+            st["ptab"][slot] = 0
+
+    # -- paged admission helpers ---------------------------------------------
+
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case page count for ``req``: its write reach is known at
+        admission (prompt + generation budget, capped by the ring), so
+        admission can reserve up front and the device loop never faults.
+        Conservative — ignores prefix sharing, so a fitting wave always
+        has real pages even if every registry lookup misses."""
+        reach = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        return -(-reach // self.page_size)
+
+    def _assign_pages(self, slot: int, req: Request, first_len: int):
+        """Map ``req``'s logical pages to physical ones: longest
+        registry-hit prefix is *retained* (refcount++, no copy), the rest
+        freshly allocated.  Returns (mapping, scatter_cols): the full
+        physical mapping for the ptab row, and which logical pages the
+        wave prefill must scatter (the non-shared ones).
+
+        Copy-on-write resolves at admission: only prefix pages FULLY
+        covered by this wave's prefill are shareable, and the first
+        logical page past the shared run is by definition divergent —
+        its content comes from this request's own prefill scatter, so
+        the "copy" is free.  Generation never touches shared pages
+        (writes start at first_len >= shared run end)."""
+        ps = self.page_size
+        n_need = self._pages_needed(req)
+        shared: list[int] = []
+        lim = min(n_need, first_len // ps)
+        for j in range(lim):
+            pg = self._prefixes.lookup(prefix_key(req.prompt, j, ps))
+            if pg is None:
+                break
+            shared.append(pg)
+        for pg in shared:
+            self._pages.retain(pg)
+        if shared and n_need > len(shared):
+            # first divergent page: a fork in COW terms, but the new
+            # content arrives via this request's own prefill scatter —
+            # no device copy needed, just a fresh page
+            self._pages.cow_forks += 1
+        own = self._pages.alloc(n_need - len(shared))
+        mapping = shared + own
+        for j in range(len(shared), n_need):
+            # register pages whose content this wave's prefill fully
+            # determines (complete, never-rewritten prompt prefixes)
+            if (j + 1) * ps <= first_len:
+                self._prefixes.register(prefix_key(req.prompt, j, ps),
+                                        mapping[j])
+        self._slot_pages[slot] = list(mapping)
+        row = self._st["ptab"][slot]
+        row[:] = 0
+        row[: n_need] = mapping
+        return mapping, list(range(len(shared), n_need))
 
     def _admit(self):
-        wave = self.scheduler.take_wave()
+        if self._pages is None:
+            wave = self.scheduler.take_wave()
+        else:
+            # page-budget admission: reserve each request's worst-case
+            # reach up front (head-of-line FIFO — see take_wave).  The
+            # budget is conservative (ignores prefix sharing); actual
+            # allocation below may use fewer pages via retained prefixes.
+            budget = self._pages.free_count
+
+            def fits(req: Request) -> bool:
+                nonlocal budget
+                need = self._pages_needed(req)
+                if need > budget:
+                    return False
+                budget -= need
+                return True
+
+            wave = self.scheduler.take_wave(fits)
         if not wave:
             return
         first_lens = [self.scheduler.first_chunk_len(r) for _, r in wave]
@@ -577,7 +755,23 @@ class Engine:
         logits, new_cache = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray(lens))
         slots = jnp.asarray([s for s, _ in wave])
-        self.cache = _merge_slot(self.cache, new_cache, slots)
+        if self._pages is None:
+            self.cache = _merge_slot(self.cache, new_cache, slots)
+        else:
+            rows, cols, phys = [], [], []
+            for i, (slot, r) in enumerate(wave):
+                mapping, scat = self._assign_pages(slot, r, first_lens[i])
+                for j in scat:
+                    rows.append(i)
+                    cols.append(j)
+                    phys.append(mapping[j])
+            if phys:
+                # non-shared pages only: shared prefixes are already
+                # resident and must not be rewritten (their tail slots in
+                # new_cache hold pos=-1 filler, same as fresh pages get)
+                self.cache = _merge_slot_paged(
+                    self.cache, new_cache, jnp.asarray(rows),
+                    jnp.asarray(cols), jnp.asarray(phys), self.page_size)
         if self.draft_cache is not None:
             # the layer draft consumes the same wave so its ring tracks
             # the target's (its logits here are irrelevant)
@@ -751,10 +945,18 @@ class Engine:
         active flags (which are stale between harvests)."""
         tokens = self.tokens_emitted + self._admit_tokens
         w = max(self.windows, 1)
+        pool = self._pages
         return {
             "tokens": tokens,
             "windows": self.windows,
             "sync_every": self.sync_every,
+            "cache_layout": self.cache_layout,
+            "page_size": self.page_size or 0,
+            "pages_total": 0 if pool is None else self.n_pages,
+            "pages_free": 0 if pool is None else pool.free_count,
+            "pages_shared": 0 if pool is None else pool.share_events,
+            "pages_peak": 0 if pool is None else pool.peak_used,
+            "cow_forks": 0 if pool is None else pool.cow_forks,
             "mesh": self.mesh_str,
             "spec_depth": self.spec_depth,
             "draft": (None if self.draft is None else

@@ -1,0 +1,176 @@
+"""Page-pool allocator for the paged latent KV cache.
+
+The ring layout pins ``max_len`` positions per serving slot, so one
+long-context request reserves worst-case memory — stranding exactly the
+HBM that ReCalKV's compression saved.  The paged layout breaks every
+block's ring into fixed-size pages held in one shared pool; a per-slot
+page table (a ``(B, n_slot_pages)`` int32 carry leaf on device) maps
+slot-page index -> physical page.  This module is the HOST side of that
+subsystem: which physical pages exist, who holds references to them, and
+which ones hold a registered (shareable) prompt prefix.  Device-side
+reads/writes through the table live in ``models.kv_cache`` and
+``kernels``; the engine glues the two at admission/retire.
+
+Invariants the allocator maintains (property-tested in test_pages.py):
+
+  * physical page 0 is the NULL page — never allocated, never written;
+    unmapped page-table entries point at it and its ``pos`` stays -1, so
+    a gathered view of an unmapped slot-page reads as empty ring.
+  * every non-null page is either on the free list (refcount 0) or held
+    by >= 1 slots (refcount = number of holders); the two sets partition
+    the pool, so pages never leak and never double-free.
+  * a page with refcount >= 2 (a shared prompt prefix) is read-only by
+    construction: the engine only shares pages wholly covered by the
+    sharer's prefilled prompt region, and post-admission writes land at
+    positions >= that region.  Divergence is resolved at admission time
+    (the deterministic specialization of copy-on-write — a request's
+    write range is known when it is admitted, so the first divergent
+    page gets a private copy up front; see ``PagePool.fork``).
+
+The prefix registry keys shareable pages by (slot-page index, hash of
+the FULL token prefix through that page) — latent content at position t
+depends causally on all tokens <= t, so two requests may share page j
+only when their first (j+1)*page_size tokens are identical.  The
+registry holds no references of its own: entries die with their page.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import deque
+
+import numpy as np
+
+__all__ = ["PagePool", "PrefixRegistry", "prefix_key"]
+
+NULL_PAGE = 0
+
+
+class PagePool:
+    """Free-list + per-page refcount allocator over ``n_pages`` physical
+    pages.  Page 0 is reserved as the null page."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(
+                f"n_pages={n_pages}: the pool needs the reserved null page "
+                f"plus at least one allocatable page")
+        self.n_pages = n_pages
+        self._ref = [0] * n_pages
+        self._free: deque[int] = deque(range(1, n_pages))
+        self.share_events = 0        # cumulative retain() calls
+        self.cow_forks = 0           # cumulative divergent-page copies
+        self.peak_used = 0           # high-water mark of allocated pages
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        """Allocated (non-null) pages right now."""
+        return self.n_pages - 1 - len(self._free)
+
+    @property
+    def shared_now(self) -> int:
+        """Pages currently held by more than one slot."""
+        return sum(1 for r in self._ref if r >= 2)
+
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
+    def can_alloc(self, n: int) -> bool:
+        return 0 <= n <= len(self._free)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` fresh pages (refcount 1 each)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)} "
+                f"free of {self.n_pages - 1} allocatable")
+        pages = [self._free.popleft() for _ in range(n)]
+        for pg in pages:
+            self._ref[pg] = 1
+        self.peak_used = max(self.peak_used, self.used)
+        return pages
+
+    def retain(self, page: int) -> int:
+        """Share an allocated page: one more holder, no copy."""
+        self._check_live(page)
+        self._ref[page] += 1
+        self.share_events += 1
+        return page
+
+    def fork(self, page: int) -> int:
+        """Copy-on-write fork: allocate a private replacement for ``page``
+        and release this holder's reference to the original.  The caller
+        owns filling the new page's content (device copy, or a prefill
+        scatter when the content is being recomputed anyway)."""
+        self._check_live(page)
+        new = self.alloc(1)[0]
+        self.cow_forks += 1
+        self.free(page)
+        return new
+
+    def free(self, page: int) -> bool:
+        """Drop one reference; returns True when the page's refcount hit
+        zero and it returned to the free list (so the caller can drop
+        registry entries keyed on it)."""
+        self._check_live(page)
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+    def _check_live(self, page: int):
+        if not 0 < page < self.n_pages:
+            raise ValueError(
+                f"page {page} out of range 1..{self.n_pages - 1} "
+                f"(page {NULL_PAGE} is the reserved null page)")
+        if self._ref[page] <= 0:
+            raise ValueError(f"page {page} is not allocated (double free?)")
+
+
+def prefix_key(prompt: np.ndarray, page_idx: int, page_size: int):
+    """Registry key for slot-page ``page_idx`` of a prompt: the page index
+    plus a digest of the ENTIRE token prefix through that page (latent
+    content at position t depends on all tokens <= t)."""
+    end = (page_idx + 1) * page_size
+    tokens = np.ascontiguousarray(np.asarray(prompt[:end], np.int32))
+    return page_idx, hashlib.sha1(tokens.tobytes()).digest()
+
+
+class PrefixRegistry:
+    """prefix-hash -> resident physical page, for prompt sharing.
+
+    Holds no references: the engine drops a page's entry when its
+    refcount hits zero.  One key per page (a page's content is fixed for
+    its whole allocated life), first registration wins."""
+
+    def __init__(self):
+        self._page_for: dict = {}
+        self._key_for: dict[int, tuple] = {}
+
+    def lookup(self, key) -> int | None:
+        return self._page_for.get(key)
+
+    def register(self, key, page: int):
+        if key in self._page_for or page in self._key_for:
+            return
+        self._page_for[key] = page
+        self._key_for[page] = key
+
+    def drop_page(self, page: int):
+        key = self._key_for.pop(page, None)
+        if key is not None:
+            del self._page_for[key]
+
+    def __len__(self) -> int:
+        return len(self._page_for)

@@ -124,13 +124,21 @@ class Scheduler:
         by_size.sort(key=lambda g: (-len(g), g[0]))
         return [s for g in by_size for s in g]
 
-    def take_wave(self) -> list[tuple[int, Request]]:
+    def take_wave(self, fits=None) -> list[tuple[int, Request]]:
         """Admit queued requests into free slots, strictly FIFO by request
-        (slot choice is shard-aware, see ``_wave_slot_order``)."""
+        (slot choice is shard-aware, see ``_wave_slot_order``).
+
+        ``fits(req) -> bool``, when given, gates each admission on a
+        resource check beyond free slots (the paged engine's page budget).
+        Admission stays head-of-line FIFO: the first request that does not
+        fit ends the wave rather than being skipped — later smaller
+        requests never starve an earlier large one."""
         wave = []
         free = self._wave_slot_order(min(len(self.free_slots()),
                                          len(self.queue)))
         while free and self.queue:
+            if fits is not None and not fits(self.queue[0]):
+                break
             slot = free.pop(0)
             req = self.queue.popleft()
             self.slot_req[slot] = req

@@ -69,6 +69,13 @@ MOE_RULES = {
     "wo": (("model", 0), ("data", 1)),
 }
 
+# Name-based cache rules, layout-agnostic by construction: ring leaves
+# are (slots, max_len, ...) and paged pool leaves are (n_pages,
+# page_size, ...), so the same (dim0 over batch, dim1 over model) specs
+# shard the ring slot x sequence and the pool page-major x page-offset.
+# The paged page table itself is a carry leaf (see ``carry_specs``:
+# slot dim 0 over batch, page indices replicated — they address pages
+# whose shards every device can gather locally along its model slice).
 CACHE_RULES: dict[str, tuple] = {
     "k": (("batch", 0), ("model", 1)),
     "v": (("batch", 0), ("model", 1)),
@@ -223,10 +230,11 @@ def opt_specs(opt_state, params_spec, mesh: Mesh):
 
 def carry_specs(carry, mesh: Mesh):
     """Specs for the serving engine's device carry (last-token, cur,
-    active flags, per-slot PRNG keys, sampler knobs, ingest buffer):
-    dim 0 of every leaf is the SLOT axis, sharded over the batch axes
-    when divisible; all other dims replicated.  Together with CACHE_RULES
-    (slot over batch, sequence over model) this keeps admission, harvest,
+    active flags, per-slot PRNG keys, sampler knobs, ingest buffer, and
+    the paged layout's slot -> physical-page table): dim 0 of every leaf
+    is the SLOT axis, sharded over the batch axes when divisible; all
+    other dims replicated.  Together with CACHE_RULES (slot over batch,
+    sequence/page-offset over model) this keeps admission, harvest,
     sampling and chunked-prefill ingest transfer-free on a mesh — each
     addressable shard owns whole slots."""
     def one(path, leaf):

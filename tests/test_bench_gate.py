@@ -1,6 +1,7 @@
 """The serving perf-regression gate: row matching on (variant, backend,
-mesh, spec_depth, draft), threshold semantics, and the skip paths (no
-prior artifact / changed bench identity) that keep CI bootstrappable."""
+mesh, spec_depth, draft, cache_layout, page_size, workload), threshold
+semantics, and the skip paths (no prior artifact / changed bench
+identity) that keep CI bootstrappable."""
 
 import json
 import os
@@ -38,7 +39,7 @@ class TestCompareEntries:
         new = _entry([_row(tps=15.0)])          # -25%
         rep = compare_entries(prev, new, threshold=0.2)
         assert len(rep["regressions"]) == 1
-        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-"
+        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-/ring/0/-"
         assert rep["regressions"][0]["drop"] == pytest.approx(0.25)
 
     def test_spec_rows_match_on_depth_and_draft(self):
@@ -52,7 +53,7 @@ class TestCompareEntries:
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["compared"] == 2
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2"]
+        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2/ring/0/-"]
 
     def test_mesh_rows_distinct(self):
         prev = _entry([_row(mesh="1x1", tps=20.0),
@@ -61,7 +62,7 @@ class TestCompareEntries:
                       _row(mesh="2x4", tps=3.0)])       # -25% on the mesh
         rep = compare_entries(prev, new)
         assert [r["row"] for r in rep["regressions"]] == \
-            ["latent/einsum/2x4/-/-"]
+            ["latent/einsum/2x4/-/-/ring/0/-"]
 
     def test_changed_bench_identity_skips(self):
         prev = _entry([_row(tps=20.0)])
@@ -74,6 +75,21 @@ class TestCompareEntries:
         a = _row(tps=20.0, tokens=96, bench_seconds=5.0)
         b = _row(tps=1.0)
         assert row_key(a) == row_key(b)
+
+    def test_old_ring_rows_match_layoutless_baselines(self):
+        """Rows written before cache_layout/page_size existed must keep
+        matching today's ring rows, so old baselines stay comparable."""
+        old = _row(tps=20.0)
+        new = _row(tps=20.0, cache_layout="ring", page_size=0)
+        assert row_key(old) == row_key(new)
+
+    def test_paged_rows_distinct_from_ring(self):
+        prev = _entry([_row(tps=20.0)])
+        new = _entry([_row(tps=20.0),
+                      _row(tps=1.0, cache_layout="paged", page_size=8)])
+        rep = compare_entries(prev, new, threshold=0.2)
+        assert rep["regressions"] == []
+        assert rep["only_new"] == ["latent/einsum/1x1/-/-/paged/8/-"]
 
 
 class TestMainCLI:

@@ -1,0 +1,194 @@
+"""Paged-cache serving: token-for-token parity with the ring engine,
+prefix sharing, and page-budget admission.
+
+The paged engine must be a pure LAYOUT change: same tokens, greedy and
+sampled, on the einsum and pallas decode paths, single-device and
+mesh-sharded.  The einsum path gathers a slot-major view (identical
+arrays -> identical logits); the pallas path's page-per-tile walk is
+bitwise-identical to the ring kernel tiled at ``attn_block=page_size``
+(the paged Engine pins ``attn_block`` itself, and ring references here
+pin the same value so both engines run the same tiling).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.models import transformer as T
+from repro.serving.engine import Engine, Request
+from repro.serving.sampler import SamplingParams
+
+CASES = {
+    "dense": {},
+    "latent": {"recalkv_ratio": 0.5},
+    "int8_latent": {"recalkv_ratio": 0.5, "cache_quant_bits": 8},
+}
+SAMPLED = SamplingParams(temperature=0.9, top_k=32, top_p=0.9, seed=11)
+MAX_LEN = 40
+PS = 8                # the default page size a max_len=40 engine picks
+
+_MODELS: dict = {}
+
+
+def _model(case: str):
+    if case not in _MODELS:
+        kw = dict(CASES[case])
+        qbits = kw.pop("cache_quant_bits", None)
+        cfg = get_config("qwen3-4b", smoke=True, **kw)
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32,
+                                  cache_quant_bits=qbits)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        _MODELS[case] = (cfg, params)
+    return _MODELS[case]
+
+
+def _prompts(cfg, n=5, seed=3):
+    r = np.random.RandomState(seed)
+    return [r.randint(1, cfg.vocab_size, size=(5 + 2 * i,)).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve(cfg, params, prompts, max_new=8, max_len=MAX_LEN, **kw):
+    eng = Engine(cfg, params, max_slots=4, max_len=max_len, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new))
+    done = eng.run(300)
+    assert not eng.scheduler.has_work
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+# -- einsum parity ------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_paged_matches_ring_einsum_greedy(case):
+    cfg, params = _model(case)
+    prompts = _prompts(cfg)
+    ring, _ = _serve(cfg, params, prompts)
+    paged, eng = _serve(cfg, params, prompts, cache_layout="paged")
+    assert ring == paged
+    m = eng.metrics()
+    assert m["cache_layout"] == "paged" and m["page_size"] == PS
+    assert m["pages_free"] == m["pages_total"] - 1   # all retired, null apart
+
+
+def test_paged_matches_ring_einsum_sampled():
+    cfg, params = _model("latent")
+    prompts = _prompts(cfg)
+    ring, _ = _serve(cfg, params, prompts, sampling=SAMPLED)
+    paged, _ = _serve(cfg, params, prompts, sampling=SAMPLED,
+                      cache_layout="paged")
+    assert ring == paged
+
+
+def test_paged_matches_ring_chunked_prefill():
+    cfg, params = _model("latent")
+    prompts = _prompts(cfg)
+    ring, _ = _serve(cfg, params, prompts, prefill_chunk=3)
+    paged, _ = _serve(cfg, params, prompts, prefill_chunk=3,
+                      cache_layout="paged")
+    assert ring == paged
+
+
+# -- pallas parity ------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_paged_matches_ring_pallas(case):
+    cfg, params = _model(case)
+    prompts = _prompts(cfg)
+    # the paged engine pins attn_block = page_size; the ring reference
+    # must run the same tiling for bitwise-identical flash accumulation
+    ring, _ = _serve(dataclasses.replace(cfg, attn_block=PS), params,
+                     prompts, backend="pallas")
+    paged, _ = _serve(cfg, params, prompts, backend="pallas",
+                      cache_layout="paged")
+    assert ring == paged
+
+
+# -- speculative decoding over the paged cache --------------------------------
+
+def test_paged_matches_ring_speculative():
+    cfg, params = _model("latent")
+    prompts = _prompts(cfg)
+    ring, _ = _serve(cfg, params, prompts, spec_depth=2)
+    paged, _ = _serve(cfg, params, prompts, spec_depth=2,
+                      cache_layout="paged")
+    assert ring == paged
+
+
+def test_paged_matches_ring_layer_draft():
+    cfg, params = _model("latent")
+    prompts = _prompts(cfg)
+    ring, _ = _serve(cfg, params, prompts, spec_depth=2, draft="layers:1")
+    paged, _ = _serve(cfg, params, prompts, spec_depth=2, draft="layers:1",
+                      cache_layout="paged")
+    assert ring == paged
+
+
+# -- mesh parity --------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh24():
+    return make_test_mesh(2, 4, skip=True)
+
+
+def test_paged_matches_ring_on_mesh(mesh24):
+    cfg, params = _model("latent")
+    prompts = _prompts(cfg)
+    ring, _ = _serve(cfg, params, prompts, mesh=mesh24)
+    paged, _ = _serve(cfg, params, prompts, mesh=mesh24,
+                      cache_layout="paged")
+    assert ring == paged
+    single, _ = _serve(cfg, params, prompts, cache_layout="paged")
+    assert single == paged
+
+
+# -- prefix sharing -----------------------------------------------------------
+
+def test_shared_system_prompt_shares_pages():
+    cfg, params = _model("latent")
+    sysp = np.random.RandomState(7).randint(
+        1, cfg.vocab_size, size=(24,)).astype(np.int32)
+    tails = [np.random.RandomState(100 + i).randint(
+        1, cfg.vocab_size, size=(4,)).astype(np.int32) for i in range(4)]
+    prompts = [np.concatenate([sysp, t]) for t in tails]
+    ring, _ = _serve(cfg, params, prompts, max_new=4, max_len=48)
+    paged, eng = _serve(cfg, params, prompts, max_new=4, max_len=48,
+                        cache_layout="paged", page_size=8)
+    assert ring == paged                      # sharing never changes tokens
+    m = eng.metrics()
+    # 24-token system prompt = 3 whole pages of 8, shared by requests 2-4
+    assert m["pages_shared"] == 9             # 3 pages x 3 sharers
+    assert m["cow_forks"] == 3                # each sharer forks page 3
+    unshared = 4 * (-(-min(28 + 4, 48) // 8))
+    assert m["pages_peak"] < unshared
+
+
+def test_page_budget_gates_admission():
+    cfg, params = _model("latent")
+    prompts = _prompts(cfg, n=4)
+    # room for ~one request at a time: reach = ceil((plen + 8)/8) pages
+    ring, _ = _serve(cfg, params, prompts)
+    paged, eng = _serve(cfg, params, prompts, cache_layout="paged",
+                        n_pages=6)
+    assert ring == paged                      # smaller pool, same streams
+    assert eng.metrics()["pages_total"] == 6
+
+
+def test_paged_rejects_bad_config():
+    cfg, params = _model("latent")
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_slots=2, max_len=MAX_LEN,
+               cache_layout="slab")
+    with pytest.raises(ValueError):           # page_size without paged
+        Engine(cfg, params, max_slots=2, max_len=MAX_LEN, page_size=8)
+    with pytest.raises(ValueError):           # does not divide max_len
+        Engine(cfg, params, max_slots=2, max_len=MAX_LEN,
+               cache_layout="paged", page_size=7)
+    with pytest.raises(ValueError):           # pool below one request
+        Engine(cfg, params, max_slots=2, max_len=MAX_LEN,
+               cache_layout="paged", page_size=8, n_pages=3)

@@ -1,0 +1,193 @@
+"""Unit + property tests for the paged latent KV pool allocator.
+
+The property test drives random alloc / retain (share) / fork (COW) /
+free sequences against a shadow model and checks the allocator's
+invariants after every op: refcounts equal holder counts, used + free
+always partitions the pool (minus the reserved null page), page 0 is
+never handed out, and double-frees raise.  Runs under hypothesis when
+installed, else a seeded numpy fallback driver exercises the same ops.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.pages import (NULL_PAGE, PagePool, PrefixRegistry,
+                                 prefix_key)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# -- basic allocator behavior -------------------------------------------------
+
+def test_null_page_reserved():
+    pool = PagePool(4)
+    assert NULL_PAGE == 0
+    got = pool.alloc(3)
+    assert sorted(got) == [1, 2, 3]          # page 0 never allocated
+    assert pool.free_count == 0
+
+
+def test_alloc_exhaustion_raises_and_leaves_pool_intact():
+    pool = PagePool(4)
+    pool.alloc(2)
+    with pytest.raises(RuntimeError):
+        pool.alloc(2)                        # only 1 left
+    assert pool.free_count == 1              # failed alloc took nothing
+
+
+def test_retain_and_free_refcounting():
+    pool = PagePool(8)
+    (pg,) = pool.alloc(1)
+    pool.retain(pg)
+    pool.retain(pg)
+    assert pool.refcount(pg) == 3
+    assert pool.share_events == 2
+    assert not pool.free(pg)                 # still held
+    assert not pool.free(pg)
+    assert pool.free(pg)                     # last holder -> released
+    assert pool.free_count == 7
+
+
+def test_double_free_raises():
+    pool = PagePool(4)
+    (pg,) = pool.alloc(1)
+    assert pool.free(pg)
+    with pytest.raises(ValueError):
+        pool.free(pg)
+    with pytest.raises(ValueError):
+        pool.free(NULL_PAGE)                 # null page is never live
+    with pytest.raises(ValueError):
+        pool.free(99)                        # out of range
+
+
+def test_fork_counts_and_swaps_pages():
+    pool = PagePool(8)
+    (pg,) = pool.alloc(1)
+    pool.retain(pg)                          # two holders
+    new = pool.fork(pg)                      # one holder diverges
+    assert new != pg and pool.refcount(new) == 1
+    assert pool.refcount(pg) == 1            # forker dropped its hold
+    assert pool.cow_forks == 1
+
+
+def test_peak_used_high_watermark():
+    pool = PagePool(8)
+    a = pool.alloc(5)
+    for pg in a:
+        pool.free(pg)
+    assert pool.peak_used == 5
+    assert pool.used == 0
+
+
+# -- prefix registry ----------------------------------------------------------
+
+def test_prefix_key_depends_on_full_prefix():
+    p1 = np.array([1, 2, 3, 4, 5, 6], np.int32)
+    p2 = np.array([9, 2, 3, 4, 5, 6], np.int32)
+    # page 1's latent content depends on ALL tokens before it (attention),
+    # so differing page-0 tokens must give page 1 different keys
+    assert prefix_key(p1, 1, 2) != prefix_key(p2, 1, 2)
+    assert prefix_key(p1, 0, 2) == prefix_key(p1[:4], 0, 2)
+
+
+def test_registry_register_lookup_drop():
+    reg = PrefixRegistry()
+    p = np.array([1, 2, 3, 4], np.int32)
+    k = prefix_key(p, 0, 2)
+    assert reg.lookup(k) is None
+    reg.register(k, 5)
+    assert reg.lookup(k) == 5
+    reg.register(k, 7)                       # idempotent: first wins
+    assert reg.lookup(k) == 5
+    reg.drop_page(5)
+    assert reg.lookup(k) is None
+    assert len(reg) == 0
+
+
+# -- property test: random op sequences against a shadow model ---------------
+
+def _check_invariants(pool: PagePool, holders: dict[int, int],
+                      n_pages: int):
+    live = {pg: n for pg, n in holders.items() if n > 0}
+    for pg, n in live.items():
+        assert pool.refcount(pg) == n, (pg, n)
+    assert pool.used == len(live)
+    assert pool.used + pool.free_count == n_pages - 1   # null page apart
+    assert NULL_PAGE not in live
+
+
+def _run_ops(n_pages: int, ops: list[tuple[int, int]]):
+    """Interpret (op, arg) pairs against a PagePool + shadow holder map."""
+    pool = PagePool(n_pages)
+    holders: dict[int, int] = {}
+
+    def live_pages():
+        return sorted(pg for pg, n in holders.items() if n > 0)
+
+    for op, arg in ops:
+        live = live_pages()
+        if op == 0:                                    # alloc k pages
+            k = 1 + arg % 3
+            if pool.can_alloc(k):
+                for pg in pool.alloc(k):
+                    assert pg != NULL_PAGE
+                    assert holders.get(pg, 0) == 0     # was truly free
+                    holders[pg] = 1
+            else:
+                with pytest.raises(RuntimeError):
+                    pool.alloc(k)
+        elif op == 1 and live:                         # retain (share)
+            pg = live[arg % len(live)]
+            pool.retain(pg)
+            holders[pg] += 1
+        elif op == 2 and live:                         # fork (COW)
+            pg = live[arg % len(live)]
+            if pool.can_alloc(1):
+                new = pool.fork(pg)
+                holders[pg] -= 1
+                assert holders.get(new, 0) == 0
+                holders[new] = 1
+        elif op == 3 and live:                         # free one hold
+            pg = live[arg % len(live)]
+            released = pool.free(pg)
+            holders[pg] -= 1
+            assert released == (holders[pg] == 0)
+        elif op == 4:                                  # double-free guard
+            dead = [pg for pg, n in holders.items() if n == 0]
+            if dead:
+                with pytest.raises(ValueError):
+                    pool.free(dead[arg % len(dead)])
+        _check_invariants(pool, holders, n_pages)
+    # drain: every release balances, nothing leaks
+    for pg in live_pages():
+        while holders[pg] > 0:
+            released = pool.free(pg)
+            holders[pg] -= 1
+            assert released == (holders[pg] == 0)
+    assert pool.used == 0
+    assert pool.free_count == n_pages - 1
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(n_pages=hyp_st.integers(min_value=2, max_value=17),
+           ops=hyp_st.lists(hyp_st.tuples(
+               hyp_st.integers(min_value=0, max_value=4),
+               hyp_st.integers(min_value=0, max_value=10 ** 6)),
+               max_size=60))
+    def test_pool_invariants_property(n_pages, ops):
+        _run_ops(n_pages, ops)
+else:
+    @pytest.mark.parametrize("seed", range(30))
+    def test_pool_invariants_property(seed):
+        # hypothesis not installed: a seeded driver over the same op space
+        r = np.random.RandomState(seed)
+        n_pages = int(r.randint(2, 18))
+        ops = [(int(r.randint(0, 5)), int(r.randint(0, 10 ** 6)))
+               for _ in range(int(r.randint(5, 61)))]
+        _run_ops(n_pages, ops)

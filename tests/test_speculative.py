@@ -269,6 +269,24 @@ class TestDepthInvariance:
         assert got == ref
         assert eng.metrics()["draft_proposed"] > 0
 
+    def test_repetitive_text_accept_rate_positive(self, models):
+        """Regression: the bigram-only matcher always picked the MOST
+        RECENT occurrence, which on periodic text is the one flush
+        against the tail — its continuation is entirely stale positions,
+        so every proposal was -1 and accept_rate pinned at 0.0.  The
+        longest-available-suffix matcher (3->2->1-gram fallback) requires
+        a match to have at least one real following token, so repetitive
+        continuations must now accept free tokens."""
+        cfg, params = models["latent"]
+        prompt = np.full(16, 5, np.int32)
+        eng = Engine(cfg, params, max_slots=4, max_len=64, spec_depth=3,
+                     draft="ngram")
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=16))
+        eng.run()
+        m = eng.metrics()
+        assert m["draft_proposed"] > 0
+        assert m["accept_rate"] > 0.0
+
 
 class TestDraftModule:
     def test_parse(self):
