@@ -3,8 +3,9 @@
 CI downloads the previous successful run's ``BENCH_serving`` artifact and
 compares this run's freshly-appended entry against the artifact's latest
 entry: any matching (variant, backend, mesh, spec_depth, draft,
-cache_layout, page_size, workload) row whose ``tokens_per_s`` dropped by
-more than ``--threshold`` (default 20%) fails the job.  Rows only one side has — a new variant, a renamed mesh — are
+cache_layout, page_size, workload, overlap) row whose ``tokens_per_s``
+dropped by more than ``--threshold`` (default 20%) fails the job.
+Rows only one side has — a new variant, a renamed mesh — are
 reported but never fail, and when no prior artifact exists (first run,
 expired retention, forked repo) the gate SKIPS cleanly: the gate guards
 the trajectory, it must not block bootstrapping it.
@@ -25,11 +26,13 @@ DEFAULT_THRESHOLD = 0.20
 
 # identity of a row within an entry; everything else is measurement.
 # cache_layout/page_size/workload default for rows predating the paged
-# cache, so old ring baselines keep matching new ring rows, and brand-new
-# identities (paged, shared-prefix workloads) skip cleanly as only_new.
+# cache, and overlap for rows predating the overlapped pipeline, so old
+# baselines keep matching new rows of the same identity while brand-new
+# identities (paged, shared-prefix workloads, overlap) skip cleanly as
+# only_new.
 ROW_KEY = ("variant", "backend", "mesh", "spec_depth", "draft",
-           "cache_layout", "page_size", "workload")
-_KEY_DEFAULTS = {"cache_layout": "ring", "page_size": 0}
+           "cache_layout", "page_size", "workload", "overlap")
+_KEY_DEFAULTS = {"cache_layout": "ring", "page_size": 0, "overlap": False}
 
 
 def row_key(row: dict) -> tuple:

@@ -107,10 +107,12 @@ def serve(artifact: CompressionArtifact | str, *, max_slots: int,
     runs on a degenerate single-device mesh.  Remaining ``engine_kw``
     (``sampling``, ``sync_every``, ``prefill_chunk``, ``backend``,
     ``source``, the speculative-decoding pair ``spec_depth`` /
-    ``draft``, and the paged-cache trio ``cache_layout`` /
-    ``page_size`` / ``n_pages`` — ``cache_layout="paged"`` pools cache
-    pages across slots with copy-on-write prompt-prefix sharing; token
-    streams are invariant to all of these) pass through to the
+    ``draft``, the paged-cache trio ``cache_layout`` / ``page_size`` /
+    ``n_pages`` — ``cache_layout="paged"`` pools cache pages across
+    slots with copy-on-write prompt-prefix sharing — and the pipeline
+    pair ``overlap`` / ``aot`` (double-buffered decode windows with a
+    backlog token thread; AOT-compiled window + prefill executables);
+    token streams are invariant to all of these) pass through to the
     Engine."""
     from repro.serving.engine import Engine  # local: engine imports api too
 

@@ -76,6 +76,16 @@ def main(argv=None):
     ap.add_argument("--n-pages", type=int, default=None,
                     help="physical pool pages incl. the null page (paged "
                          "only; default: ring-equivalent capacity)")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="double-buffered pipeline: two decode windows in "
+                         "flight, token handling on a backlog thread "
+                         "(--no-overlap for the blocking step loop; "
+                         "streams are identical either way)")
+    ap.add_argument("--aot", action="store_true",
+                    help="AOT-compile the window + prefill buckets at "
+                         "boot, so the first request pays load time "
+                         "rather than trace time")
     args = ap.parse_args(argv)
 
     kw = {"smoke": args.smoke}
@@ -101,16 +111,18 @@ def main(argv=None):
                  mesh=mesh_from_spec(args.mesh),
                  spec_depth=args.spec_depth, draft=args.draft,
                  cache_layout=args.cache_layout, page_size=args.page_size,
-                 n_pages=args.n_pages)
+                 n_pages=args.n_pages, overlap=args.overlap, aot=args.aot)
     spec = (f", spec_depth={args.spec_depth} ({eng.metrics()['draft']})"
             if args.spec_depth else "")
     layout = ("" if args.cache_layout == "ring" else
               f", paged (page_size={eng.page_size}, "
               f"{eng.n_pages} pages)")
+    mode = ("overlapped" if args.overlap else "sync") + \
+        (", aot" if args.aot else "")
     print(f"[serve] {cfg.name}: cache {cache_bytes(eng.cache)/2**20:.1f} MiB "
           f"({args.slots} slots x {args.max_len} positions), "
           f"sync_every={args.sync_every}, mesh={eng.mesh_str} "
-          f"({len(jax.devices())} devices){spec}{layout}")
+          f"({len(jax.devices())} devices), {mode}{spec}{layout}")
 
     g = np.random.default_rng(1)
     for i in range(args.requests):
@@ -119,20 +131,27 @@ def main(argv=None):
             uid=i, prompt=g.integers(0, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=args.new_tokens))
     finished = eng.run()
+    eng.close()
     m = eng.metrics()
     print(f"[serve] {len(finished)} requests, {m['tokens']} tokens in "
-          f"{m['run_seconds']:.1f}s ({m['tokens_per_s']:.1f} tok/s)")
+          f"{m['run_seconds']:.1f}s ({m['tokens_per_s']:.1f} tok/s), "
+          f"ttft {m['ttft_s']*1e3:.1f}ms")
     print(f"[serve] host syncs/token {m['host_syncs_per_token']:.3f} "
           f"(decode windows: {m['decode_syncs_per_token']:.3f}), "
           f"occupancy {m['occupancy_mean']:.2f}/{args.slots}, "
           f"queue depth {m['queue_depth_mean']:.2f}")
+    if args.overlap:
+        print(f"[serve] overlap: {m['window_overlap']:.2f} of windows "
+              f"dispatched before the prior completed, "
+              f"{m['windows_idle']} idle windows")
     if args.spec_depth:
         print(f"[serve] speculation: accept rate {m['accept_rate']:.2f} "
               f"({m['draft_accepted']}/{m['draft_proposed']} draft tokens "
               f"accepted)")
     if args.cache_layout == "paged":
         print(f"[serve] pages: peak {m['pages_peak']}/{m['pages_total']}, "
-              f"{m['pages_shared']} shares, {m['cow_forks']} COW forks")
+              f"{m['pages_shared']} shares, {m['cow_forks']} COW forks, "
+              f"{m['prefix_resurrections']} prefix resurrections")
     if eng.unfinished["queued"] or eng.unfinished["in_flight"]:
         print(f"[serve] WARNING unfinished: {eng.unfinished}")
     return finished

@@ -5,6 +5,8 @@ The serving subsystem is split three ways:
 
   scheduler.py  admission policy, slot lifecycle, chunked prefill (host)
   sampler.py    on-device temperature / top-k / top-p / greedy sampling
+  pipeline.py   overlapped-serving plumbing: in-flight window records +
+                the backlog worker thread that drains token handling
   engine.py     this file — the executor.  One ``jax.lax.scan`` window
                 runs ``sync_every`` decode steps entirely on device
                 (feed -> decode_step -> sample -> append -> termination),
@@ -12,7 +14,11 @@ The serving subsystem is split three ways:
                 buffers and done-flags as device state.  The host is
                 touched once per window: harvest emitted tokens, retire
                 finished slots, refill prompt-ingest buffers, and run
-                admission (batched, shape-bucketed wave prefill).
+                admission (batched, shape-bucketed wave prefill).  With
+                ``overlap=True`` that boundary work pipelines against the
+                NEXT window already running on device (double buffering),
+                and with ``aot=True`` every executable is compiled at
+                construction.
 
 The engine is MESH-NATIVE: ``Engine(mesh=...)`` device-puts params via
 ``sharding.rules.param_specs`` and jits the window with explicit
@@ -54,8 +60,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 import warnings
+from collections import deque
 from typing import Any
 
 import jax
@@ -70,11 +78,21 @@ from repro.serving import draft as D
 from repro.serving import sampler as S
 from repro.serving.draft import DraftSpec
 from repro.serving.pages import PagePool, PrefixRegistry, prefix_key
+from repro.serving.pipeline import InflightWindow, TokenBacklog
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 from repro.sharding import rules as R
 
 __all__ = ["Engine", "Request", "SamplingParams", "DraftSpec"]
+
+
+def _array_ready(x) -> bool:
+    """True when a device array's computation has already completed (the
+    dispatch-side probe behind the ``window_overlap`` metric)."""
+    try:
+        return bool(x.is_ready())
+    except AttributeError:          # older jax: no probe, call it ready
+        return True
 
 
 def _merge_slot(pool_cache, new_cache, slots: jax.Array):
@@ -139,6 +157,14 @@ class Engine:
     tokens verified per window iteration (0 disables).  ``draft`` picks
     the proposer — "ngram" (default) or "layers:K" (self-draft from the
     target's first K layers); token streams are invariant to both knobs.
+    ``overlap`` switches the step loop to the double-buffered pipeline:
+    two windows in flight, the host blocking only on the *trailing*
+    window's packed status, token handling on a backlog worker thread,
+    and admission prefill dispatched concurrently with in-flight decode.
+    Token streams are invariant to ``overlap`` (the async↔sync parity
+    contract).  ``aot`` lowers + compiles the fused window and every
+    reachable power-of-two (wave, prompt-len) prefill bucket at
+    construction, so the first request pays load time, not trace time.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
@@ -151,7 +177,9 @@ class Engine:
                  draft: str | DraftSpec | None = None,
                  cache_layout: str = "ring",
                  page_size: int | None = None,
-                 n_pages: int | None = None):
+                 n_pages: int | None = None,
+                 overlap: bool = False,
+                 aot: bool = False):
         if backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=backend)
         if sync_every < 1:
@@ -303,10 +331,12 @@ class Engine:
             self._st["ptab"] = np.zeros(
                 (max_slots, max_len // self.page_size), np.int32)
         # metrics (sums and `windows` advance atomically at each window
-        # boundary in _harvest, so metrics() mid-stream is consistent)
+        # boundary in _harvest, so metrics() mid-stream is consistent;
+        # under overlap the backlog worker holds _mlock for its share)
         self.host_syncs = 0          # device->host harvest points
         self.admission_syncs = 0     # host_syncs spent on wave prefills
-        self.windows = 0
+        self.windows = 0             # completed (harvested) windows
+        self.windows_idle = 0        # harvested windows that emitted 0
         self.tokens_emitted = 0      # emitted by decode windows
         self._admit_tokens = 0       # first tokens emitted at admission
         self._occupancy_sum = 0
@@ -314,18 +344,53 @@ class Engine:
         self._run_seconds = 0.0
         self.draft_proposed = 0      # draft tokens fed to verification
         self.draft_accepted = 0      # ... accepted (free extra tokens)
+        self._mlock = threading.Lock()
+        self._ttft_sum = 0.0         # summed submit -> first-token latency
+        self._ttft_n = 0
 
-        self._prefill = jax.jit(
-            lambda p, t, l: T.prefill(cfg, p, t, l, max_len=max_len,
-                                      source=None if source is None
-                                      else source[: t.shape[0]]),
-            static_argnames=())
+        # -- overlapped-pipeline state (inert when overlap=False) --------
+        self.overlap = bool(overlap)
+        self.aot = bool(aot)
+        self._inflight: deque[InflightWindow] = deque()
+        self._st_dev: dict | None = None     # device-resident carry
+        self._dispatch_index = 0             # windows dispatched so far
+        self._overlapped_windows = 0         # dispatched before prior done
+        # per-slot dispatch-index watermarks: a harvested window's status
+        # is STALE for any slot (re)admitted or refilled at a later
+        # boundary — without these, a fresh request would be "finished" by
+        # its predecessor's death, and a refilled buffer re-refilled.
+        self._slot_epoch = np.zeros(max_slots, np.int64)
+        self._buf_epoch = np.zeros(max_slots, np.int64)
+        self._backlog = TokenBacklog() if self.overlap else None
+        self._repl = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec())
+
+        # trace-count hooks: the counters bump inside the traced python
+        # functions, so they advance exactly once per (re)trace — the AOT
+        # smoke check asserts they stay flat while serving.
+        self.trace_counts = {"window": 0, "prefill": 0, "draft_prefill": 0}
+
+        def _prefill_fn(p, t, l):
+            self.trace_counts["prefill"] += 1
+            return T.prefill(cfg, p, t, l, max_len=max_len,
+                             source=None if source is None
+                             else source[: t.shape[0]])
+
+        self._prefill_jit = jax.jit(_prefill_fn)
+        self._prefill = self._prefill_jit
+        self._prefill_exec: dict[tuple, Any] = {}
         if self.draft_cache is not None:
             dcfg = self._draft_cfg
-            self._draft_prefill = jax.jit(
-                lambda p, t, l: T.prefill(dcfg, p, t, l, max_len=max_len,
-                                          source=None if source is None
-                                          else source[: t.shape[0]]))
+
+            def _draft_prefill_fn(p, t, l):
+                self.trace_counts["draft_prefill"] += 1
+                return T.prefill(dcfg, p, t, l, max_len=max_len,
+                                 source=None if source is None
+                                 else source[: t.shape[0]])
+
+            self._draft_prefill_jit = jax.jit(_draft_prefill_fn)
+            self._draft_prefill = self._draft_prefill_jit
+            self._draft_prefill_exec: dict[tuple, Any] = {}
         # Donate the cache buffer(s) into the window: self.cache is
         # rebound to the output, so XLA can update the ring in place
         # instead of holding two full caches live — the cache IS the HBM
@@ -358,8 +423,76 @@ class Engine:
             donate = (2, 3) if self.draft_cache is not None else (1,)
         if jax.default_backend() == "cpu":
             donate = ()
-        self._window = jax.jit(window_fn, donate_argnums=donate,
+        if self.draft_cache is not None:
+            def counted_fn(params, dparams, cache, dcache, st):
+                self.trace_counts["window"] += 1
+                return window_fn(params, dparams, cache, dcache, st)
+        else:
+            def counted_fn(params, cache, st):
+                self.trace_counts["window"] += 1
+                return window_fn(params, cache, st)
+        self._window = jax.jit(counted_fn, donate_argnums=donate,
                                in_shardings=in_sh, out_shardings=out_sh)
+        # the carry subtree of in_shardings, for committed state placement
+        # (the overlapped pipeline and AOT executables both need inputs
+        # that already sit where the compiled window expects them)
+        self._carry_sh = in_sh[-1]
+        if self.aot:
+            self._aot_compile()
+
+    # -- AOT warmup ----------------------------------------------------------
+
+    def _aot_compile(self):
+        """Lower + compile the window and every reachable prefill bucket
+        now, so serving never traces: the (wave, prompt-len) shapes
+        ``_bucket`` can produce form a small closed set, and the window's
+        shapes are fixed at construction."""
+        st = {k: jax.device_put(v, self._carry_sh[k])
+              for k, v in self._st.items()}
+        if self.draft_cache is not None:
+            args = (self.params, self.draft_params, self.cache,
+                    self.draft_cache, st)
+        else:
+            args = (self.params, self.cache, st)
+        self._window = self._window.lower(*args).compile()
+        cap = self.max_len - 1                  # submit() prompt cap
+        if self.scheduler.prefill_chunk is not None:
+            cap = min(cap, self.scheduler.prefill_chunk)
+        waves = sorted({_bucket(n, self.B) for n in range(1, self.B + 1)})
+        plens = sorted({_bucket(n, self.max_len) for n in range(1, cap + 1)})
+        for w in waves:
+            for p in plens:
+                t = jax.ShapeDtypeStruct((w, p), jnp.int32,
+                                         sharding=self._repl)
+                ln = jax.ShapeDtypeStruct((w,), jnp.int32,
+                                          sharding=self._repl)
+                self._prefill_exec[(w, p)] = self._prefill_jit.lower(
+                    self.params, t, ln).compile()
+                if self.draft_cache is not None:
+                    self._draft_prefill_exec[(w, p)] = \
+                        self._draft_prefill_jit.lower(
+                            self.draft_params, t, ln).compile()
+        self._prefill = self._make_prefill_dispatch(
+            self._prefill_jit, self._prefill_exec)
+        if self.draft_cache is not None:
+            self._draft_prefill = self._make_prefill_dispatch(
+                self._draft_prefill_jit, self._draft_prefill_exec)
+
+    @staticmethod
+    def _make_prefill_dispatch(jit_fn, executables):
+        def dispatch(p, t, l):
+            exe = executables.get(tuple(t.shape))
+            return (jit_fn if exe is None else exe)(p, t, l)
+        return dispatch
+
+    def _prefill_args(self, toks: np.ndarray, lens: np.ndarray):
+        """Device placement for wave-prefill inputs.  AOT executables
+        require committed arrays matching the lowered shardings; the
+        plain jit path keeps the cheaper uncommitted upload."""
+        if self.aot:
+            return (jax.device_put(toks, self._repl),
+                    jax.device_put(lens, self._repl))
+        return jnp.asarray(toks), jnp.asarray(lens)
 
     # -- fused decode window -------------------------------------------------
 
@@ -607,9 +740,13 @@ class Engine:
                       draft: str | DraftSpec | None = None,
                       cache_layout: str = "ring",
                       page_size: int | None = None,
-                      n_pages: int | None = None) -> "Engine":
+                      n_pages: int | None = None,
+                      overlap: bool = False,
+                      aot: bool = False) -> "Engine":
         """Boot an engine straight from a saved compression artifact —
-        the compress-offline / serve-forever workflow across processes."""
+        the compress-offline / serve-forever workflow across processes.
+        ``overlap``/``aot`` select the double-buffered pipeline and
+        AOT-compiled executables exactly as on the constructor."""
         from repro.api import load_artifact  # local: api imports models too
 
         art = load_artifact(path)
@@ -618,7 +755,7 @@ class Engine:
                    sync_every=sync_every, prefill_chunk=prefill_chunk,
                    mesh=mesh, spec_depth=spec_depth, draft=draft,
                    cache_layout=cache_layout, page_size=page_size,
-                   n_pages=n_pages)
+                   n_pages=n_pages, overlap=overlap, aot=aot)
 
     # -- back-compat conveniences -------------------------------------------
 
@@ -647,6 +784,22 @@ class Engine:
     def submit(self, req: Request) -> Request:
         return self.scheduler.submit(req)
 
+    def _record_token(self, req: Request, tok: int):
+        """Credit one emitted token to a request: append, stamp ttft on
+        the first, fire the stream callback.  Runs on the main thread
+        (sync engine) or the backlog worker (overlapped engine) — never
+        both for the same engine, so out_tokens needs no lock; the ttft
+        sums are shared with metrics() and do."""
+        req.out_tokens.append(tok)
+        if req.first_token_at is None:
+            req.first_token_at = time.perf_counter()
+            if req.submitted_at is not None:
+                with self._mlock:
+                    self._ttft_sum += req.first_token_at - req.submitted_at
+                    self._ttft_n += 1
+        if req.on_token is not None:
+            req.on_token(req, tok)
+
     def _finish(self, slot: int):
         self.finished.append(self.scheduler.slot_req[slot])
         self.scheduler.release(slot)
@@ -658,10 +811,10 @@ class Engine:
         st["left"][slot] = 0
         if self._pages is not None:
             for pg in self._slot_pages[slot]:
-                if self._pages.free(pg):
-                    # last holder gone: retire the page's prefix key so a
-                    # future prompt can't map to recycled content
-                    self._prefixes.drop_page(pg)
+                # refcount-0 pages keep their prefix key: the content is
+                # resident until the LRU free list recycles the page, so
+                # a recurring prompt can resurrect it (see _assign_pages)
+                self._pages.free(pg)
             self._slot_pages[slot] = []
             st["ptab"][slot] = 0
 
@@ -699,13 +852,23 @@ class Engine:
                 break
             shared.append(pg)
         for pg in shared:
-            self._pages.retain(pg)
+            if self._pages.refcount(pg) == 0:
+                # every holder retired but the page was never recycled:
+                # its latent content is still resident, so the recurring
+                # prefix skips the prefill (registry keys outlive holders)
+                self._pages.resurrect(pg)
+            else:
+                self._pages.retain(pg)
         if shared and n_need > len(shared):
             # first divergent page: a fork in COW terms, but the new
             # content arrives via this request's own prefill scatter —
             # no device copy needed, just a fresh page
             self._pages.cow_forks += 1
         own = self._pages.alloc(n_need - len(shared))
+        for pg in own:
+            # a recycled page's old prefix key (if any) is dead now —
+            # the registry must never map a prefix to rewritten content
+            self._prefixes.drop_page(pg)
         mapping = shared + own
         for j in range(len(shared), n_need):
             # register pages whose content this wave's prefill fully
@@ -719,7 +882,11 @@ class Engine:
         row[: n_need] = mapping
         return mapping, list(range(len(shared), n_need))
 
-    def _admit(self):
+    def _admission_wave(self):
+        """Host half of admission: take a wave off the queue and build
+        its shape-bucketed prefill inputs.  Shared by the sync and the
+        overlapped paths — the scheduler bookkeeping must be identical
+        for the parity contract to hold."""
         if self._pages is None:
             wave = self.scheduler.take_wave()
         else:
@@ -739,7 +906,7 @@ class Engine:
 
             wave = self.scheduler.take_wave(fits)
         if not wave:
-            return
+            return None
         first_lens = [self.scheduler.first_chunk_len(r) for _, r in wave]
         # Bucket the wave to power-of-two (rows, prompt-len) shapes so a
         # stream of ragged admissions reuses O(log) jit traces.  The row
@@ -752,8 +919,14 @@ class Engine:
         for i, (_, r) in enumerate(wave):
             toks[i, : first_lens[i]] = r.prompt[: first_lens[i]]
             lens[i] = first_lens[i]
-        logits, new_cache = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        return wave, first_lens, toks, lens
+
+    def _admit_prefill(self, wave, first_lens, toks, lens):
+        """Dispatch the wave prefill and chain the slot merges onto the
+        current cache futures.  Never blocks: the returned logits are a
+        (W, V) device future."""
+        tj, lj = self._prefill_args(toks, lens)
+        logits, new_cache = self._prefill(self.params, tj, lj)
         slots = jnp.asarray([s for s, _ in wave])
         if self._pages is None:
             self.cache = _merge_slot(self.cache, new_cache, slots)
@@ -775,65 +948,99 @@ class Engine:
         if self.draft_cache is not None:
             # the layer draft consumes the same wave so its ring tracks
             # the target's (its logits here are irrelevant)
-            _, dnew = self._draft_prefill(
-                self.draft_params, jnp.asarray(toks), jnp.asarray(lens))
+            _, dnew = self._draft_prefill(self.draft_params, tj, lj)
             self.draft_cache = _merge_slot(self.draft_cache, dnew, slots)
-        # Sample each wave row's first token with the SAME policy + key
-        # split the decode window would use — a request's stream is then
-        # identical whether its first token comes from the wave prefill
-        # (whole prompt consumed) or from the loop's last ingest step
-        # (chunked).  At temperature=0 this is exact argmax, matching the
-        # seed engine.
+        return logits
+
+    def _admit_sample_first(self, wave, first_lens, logits):
+        """Sample every wave row's first token with the SAME policy + key
+        split the decode window would use — a request's stream is then
+        identical whether its first token comes from the wave prefill
+        (whole prompt consumed) or from the loop's last ingest step
+        (chunked).  At temperature=0 this is exact argmax, matching the
+        seed engine.  Knobs are padded to the full (W,) bucket and the
+        sampler is the shared jitted entry point, so the value is bitwise
+        identical under sync and overlapped admission (sample_tokens is
+        batch-invariant per row).  Returns device futures."""
+        W = logits.shape[0]
         specs = [r.sampling or self.sampling for _, r in wave]
-        keys0 = np.stack([sp.slot_key(r.uid)
-                          for sp, (_, r) in zip(specs, wave)])
+        keys0 = np.zeros((W, 2), np.uint32)
+        temp = np.zeros(W, np.float32)
+        top_k = np.zeros(W, np.int32)
+        top_p = np.ones(W, np.float32)
+        eos = np.full(W, -1, np.int32)
+        full = np.zeros(W, bool)
+        for i, (sp, (_, r)) in enumerate(zip(specs, wave)):
+            keys0[i] = sp.slot_key(r.uid)
+            temp[i] = sp.temperature
+            top_k[i] = sp.top_k
+            top_p[i] = sp.top_p
+            eos[i] = -1 if r.eos_id is None else r.eos_id
+            full[i] = first_lens[i] == len(r.prompt)
         ks = jax.vmap(lambda k: jax.random.split(k, 2))(jnp.asarray(keys0))
-        n = len(wave)
-        first = np.asarray(S.sample_tokens(
-            logits[:n],
-            jnp.asarray([sp.temperature for sp in specs], jnp.float32),
-            jnp.asarray([sp.top_k for sp in specs], jnp.int32),
-            jnp.asarray([sp.top_p for sp in specs], jnp.float32),
-            ks[:, 1]))
+        first = S.sample_tokens_jit(logits, jnp.asarray(temp),
+                                    jnp.asarray(top_k), jnp.asarray(top_p),
+                                    ks[:, 1])
+        return specs, keys0, eos, full, ks, first
+
+    def _admit_bookkeep(self, slot, r, sp, first_len, eos_id):
+        """Mirror writes common to both admission paths (everything the
+        host knows without touching the device)."""
+        st = self._st
+        st["cur"][slot] = first_len
+        st["keys"][slot] = 0              # real keys land per-path
+        st["temp"][slot] = sp.temperature
+        st["top_k"][slot] = sp.top_k
+        st["top_p"][slot] = sp.top_p
+        st["eos"][slot] = eos_id
+        st["bpos"][slot] = 0
+        st["act"][slot] = True
+        if "hist" in st:
+            # the WHOLE prompt is known at admission (even the not-
+            # yet-ingested tail): seed the n-gram corpus up front
+            st["hist"][slot] = 0
+            st["hist"][slot, : len(r.prompt)] = r.prompt
+        rest = r.prompt[first_len:]
+        if rest.size == 0:
+            st["tok"][slot] = 0           # real first token lands per-path
+            st["left"][slot] = r.max_new_tokens - 1
+            st["avail"][slot] = 0
+            st["more"][slot] = False
+        else:
+            # chunked prefill: stream the remainder through the
+            # decode loop's ingest buffer
+            self.scheduler.set_pending(slot, rest)
+            self._load_chunk(slot)
+            st["tok"][slot] = 0
+            st["left"][slot] = r.max_new_tokens
+
+    def _admit(self):
+        """Synchronous admission: wave prefill, first-token sample, one
+        host sync, mirror writes."""
+        taken = self._admission_wave()
+        if taken is None:
+            return
+        wave, first_lens, toks, lens = taken
+        logits = self._admit_prefill(wave, first_lens, toks, lens)
+        specs, keys0, eos, full, ks, first_dev = self._admit_sample_first(
+            wave, first_lens, logits)
+        first = np.asarray(first_dev)
         ks = np.asarray(ks)
         self.host_syncs += 1
         self.admission_syncs += 1
         st = self._st
         for i, (slot, r) in enumerate(wave):
-            sp = specs[i]
-            st["cur"][slot] = first_lens[i]
+            self._admit_bookkeep(slot, r, specs[i], first_lens[i], eos[i])
             st["keys"][slot] = keys0[i]
-            st["temp"][slot] = sp.temperature
-            st["top_k"][slot] = sp.top_k
-            st["top_p"][slot] = sp.top_p
-            st["eos"][slot] = -1 if r.eos_id is None else r.eos_id
-            st["bpos"][slot] = 0
-            st["act"][slot] = True
-            if "hist" in st:
-                # the WHOLE prompt is known at admission (even the not-
-                # yet-ingested tail): seed the n-gram corpus up front
-                st["hist"][slot] = 0
-                st["hist"][slot, : len(r.prompt)] = r.prompt
-            rest = r.prompt[first_lens[i]:]
-            if rest.size == 0:
+            if full[i]:
                 # whole prompt prefilled: emit the first generated token
                 # right away (as the seed engine did) and advance the key
                 st["keys"][slot] = ks[i, 0]
-                r.out_tokens.append(int(first[i]))
-                self._admit_tokens += 1
                 st["tok"][slot] = first[i]
-                st["left"][slot] = r.max_new_tokens - 1
-                st["avail"][slot] = 0
-                st["more"][slot] = False
+                self._admit_tokens += 1
+                self._record_token(r, int(first[i]))
                 if r.done:
                     self._finish(slot)
-            else:
-                # chunked prefill: stream the remainder through the
-                # decode loop's ingest buffer
-                self.scheduler.set_pending(slot, rest)
-                self._load_chunk(slot)
-                st["tok"][slot] = 0
-                st["left"][slot] = r.max_new_tokens
 
     def _load_chunk(self, slot: int):
         chunk = self.scheduler.next_chunk(slot)
@@ -852,17 +1059,264 @@ class Engine:
                     and self.scheduler.pending_len(slot) > 0):
                 self._load_chunk(slot)
 
+    # -- overlapped pipeline --------------------------------------------------
+    #
+    # The double-buffered loop keeps the carry ON DEVICE (self._st_dev)
+    # and up to two windows in flight.  At each boundary the host:
+    #   1. blocks on the TRAILING window's packed (act, bpos) status —
+    #      the pipeline's single device sync — retires finished slots,
+    #      and hands its token futures to the backlog worker;
+    #   2. applies its admission/refill decisions to the LEADING window's
+    #      *output* futures via eager scatters (functional updates chain
+    #      by dataflow, so no device round-trip is needed);
+    #   3. dispatches the next window on the merged carry.
+    # The numpy mirror self._st stays authoritative for host-owned leaves
+    # and is refreshed for act/bpos at harvests, gated by per-slot epochs
+    # (a harvested status is stale for slots touched at later boundaries).
+
+    def _ensure_dev_state(self):
+        if self._st_dev is None:
+            self._st_dev = {k: jax.device_put(v, self._carry_sh[k])
+                            for k, v in self._st.items()}
+
+    def _scatter_rows(self, slots_pad: np.ndarray, host_rows: dict,
+                      dev_rows: dict):
+        """Scatter per-slot rows into the device carry.  ``slots_pad`` is
+        bucket-padded with out-of-range index B; mode="drop" discards the
+        pad rows, so bucketing never writes a real slot."""
+        sl = jnp.asarray(slots_pad)
+        st = dict(self._st_dev)
+        for k, rows in {**host_rows, **dev_rows}.items():
+            st[k] = st[k].at[sl].set(
+                jnp.asarray(rows).astype(st[k].dtype), mode="drop")
+        self._st_dev = st
+
+    def _admit_async(self):
+        """Overlapped admission: identical scheduler/mirror bookkeeping
+        to _admit, but the prefill + first-token sample stay device
+        futures — merged into the leading carry by scatter, with the
+        first-token emission deferred to the backlog worker."""
+        taken = self._admission_wave()
+        if taken is None:
+            return
+        wave, first_lens, toks, lens = taken
+        logits = self._admit_prefill(wave, first_lens, toks, lens)
+        specs, keys0, eos, full, ks, first = self._admit_sample_first(
+            wave, first_lens, logits)
+        self.host_syncs += 1
+        self.admission_syncs += 1
+        st = self._st
+        n, W = len(wave), toks.shape[0]
+        for i, (slot, r) in enumerate(wave):
+            self._admit_bookkeep(slot, r, specs[i], first_lens[i], eos[i])
+            st["keys"][slot] = keys0[i]   # placeholder: device holds truth
+            if full[i]:
+                self._admit_tokens += 1
+            self._slot_epoch[slot] = self._dispatch_index
+            self._buf_epoch[slot] = self._dispatch_index
+        # host-known carry rows straight from the mirror the bookkeeping
+        # just wrote; tok/keys/act depend on the sampled first token and
+        # stay on device
+        slots_pad = np.full(W, self.B, np.int32)
+        slots_pad[:n] = [s for s, _ in wave]
+        host_rows = {}
+        for k, arr in st.items():
+            if k in ("tok", "keys", "act"):
+                continue
+            rows = np.zeros((W,) + arr.shape[1:], arr.dtype)
+            for i, (slot, _) in enumerate(wave):
+                rows[i] = arr[slot]
+            host_rows[k] = rows
+        full_d = jnp.asarray(full)
+        eos_d = jnp.asarray(eos)
+        left_d = jnp.asarray(
+            np.array([r.max_new_tokens - 1 for _, r in wave]
+                     + [0] * (W - n), np.int32))
+        dev_rows = {
+            "tok": jnp.where(full_d, first, 0),
+            # a full-prompt row can die at its very first token (eos, or
+            # an exhausted budget) — the same checks the window applies
+            "act": jnp.where(full_d, (first != eos_d) & (left_d > 0),
+                             True),
+            "keys": jnp.where(full_d[:, None], ks[:, 0],
+                              jnp.asarray(keys0)),
+        }
+        self._scatter_rows(slots_pad, host_rows, dev_rows)
+        entries = [(r, i) for i, (_, r) in enumerate(wave) if full[i]]
+        if entries:
+            self._backlog.put(self._admit_item(first, entries))
+
+    def _admit_item(self, first, entries):
+        def item():
+            arr = np.asarray(first)
+            for r, i in entries:
+                self._record_token(r, int(arr[i]))
+        return item
+
+    def _refill_async(self):
+        """Refill drained ingest buffers and scatter them into the
+        leading carry.  The mirror's (bpos, avail) pair is epoch-gated at
+        harvest, so a chunk loaded at boundary d cannot be double-loaded
+        off a pre-d status."""
+        st = self._st
+        slots = [slot for slot, r in enumerate(self.scheduler.slot_req)
+                 if (r is not None and st["act"][slot]
+                     and st["bpos"][slot] >= st["avail"][slot]
+                     and self.scheduler.pending_len(slot) > 0)]
+        if not slots:
+            return
+        for slot in slots:
+            self._load_chunk(slot)
+            self._buf_epoch[slot] = self._dispatch_index
+        n = len(slots)
+        R_ = _bucket(n, self.B)
+        slots_pad = np.full(R_, self.B, np.int32)
+        slots_pad[:n] = slots
+        host_rows = {}
+        for k in ("buf", "avail", "bpos", "more"):
+            arr = st[k]
+            rows = np.zeros((R_,) + arr.shape[1:], arr.dtype)
+            for i, slot in enumerate(slots):
+                rows[i] = arr[slot]
+            host_rows[k] = rows
+        self._scatter_rows(slots_pad, host_rows, {})
+
+    def _dispatch_window(self) -> bool:
+        """One pipeline boundary's front half: merge host decisions into
+        the leading carry, then launch the next window on it.  Returns
+        False when nothing is active to decode (no dispatch)."""
+        self._ensure_dev_state()
+        self._admit_async()
+        self._refill_async()
+        if not self._st["act"].any():
+            return False
+        occ, qd = self.scheduler.occupancy, self.scheduler.queue_depth
+        prior = self._inflight[-1] if self._inflight else None
+        overlapped = prior is not None and not _array_ready(prior.status)
+        acc = prop = None
+        if self.draft_cache is not None:
+            (self.cache, self.draft_cache, st2, toks, emits, acc,
+             prop) = self._window(self.params, self.draft_params,
+                                  self.cache, self.draft_cache,
+                                  self._st_dev)
+        elif self.spec_depth > 0:
+            self.cache, st2, toks, emits, acc, prop = self._window(
+                self.params, self.cache, self._st_dev)
+        else:
+            self.cache, st2, toks, emits = self._window(
+                self.params, self.cache, self._st_dev)
+        self._st_dev = st2
+        # pack the harvest-critical leaves into ONE array at dispatch so
+        # the trailing-boundary block is a single small transfer
+        status = jnp.stack([st2["act"].astype(jnp.int32),
+                            st2["bpos"].astype(jnp.int32)])
+        self._inflight.append(InflightWindow(
+            index=self._dispatch_index, status=status, toks=toks,
+            emits=emits, slot_reqs=list(self.scheduler.slot_req),
+            occ=occ, qd=qd, overlapped=overlapped, acc=acc, prop=prop))
+        self._dispatch_index += 1
+        if overlapped:
+            self._overlapped_windows += 1
+        return True
+
+    def _harvest_trailing(self):
+        """Block on the trailing window's status (the pipeline's one
+        device sync), refresh the epoch-eligible mirror slots, retire
+        finished requests, and hand token work to the backlog."""
+        w = self._inflight.popleft()
+        status = np.asarray(w.status)
+        self.host_syncs += 1
+        self.windows += 1
+        self._occupancy_sum += w.occ
+        self._queue_depth_sum += w.qd
+        act = status[0].astype(bool)
+        bpos = status[1]
+        ok = self._slot_epoch <= w.index
+        self._st["act"][ok] = act[ok]
+        bok = ok & (self._buf_epoch <= w.index)
+        self._st["bpos"][bok] = bpos[bok]
+        self._backlog.put(self._window_item(w))
+        for slot, r in enumerate(w.slot_reqs):
+            if (r is not None and ok[slot] and not act[slot]
+                    and self.scheduler.slot_req[slot] is r):
+                self._finish(slot)
+
+    def _window_item(self, w: InflightWindow):
+        def item():
+            toks = np.asarray(w.toks)           # (K, B) or (K, B, S)
+            emits = np.asarray(w.emits)
+            if toks.ndim == 2:
+                toks, emits = toks[:, :, None], emits[:, :, None]
+            nemit = int(emits.sum())
+            acc = 0 if w.acc is None else int(np.asarray(w.acc).sum())
+            prop = 0 if w.prop is None else int(np.asarray(w.prop).sum())
+            with self._mlock:
+                self.tokens_emitted += nemit
+                if nemit == 0:
+                    # pipeline bubble: every host-believed-active slot
+                    # died in the window in flight when this one launched
+                    self.windows_idle += 1
+                self.draft_accepted += acc
+                self.draft_proposed += prop
+            for k in range(toks.shape[0]):
+                for j in range(toks.shape[2]):
+                    for i in np.nonzero(emits[k, :, j])[0]:
+                        self._record_token(w.slot_reqs[i],
+                                           int(toks[k, i, j]))
+        return item
+
+    def _step_async(self):
+        """One overlapped boundary: harvest the trailing window once two
+        are in flight, then merge + dispatch the next."""
+        t0 = time.perf_counter()
+        if len(self._inflight) >= 2:
+            self._harvest_trailing()
+        if not self._dispatch_window() and self._inflight:
+            # nothing to decode by the host's (possibly stale) view:
+            # drain a window — its harvest may retire slots and unblock
+            # the queue for the next boundary
+            self._harvest_trailing()
+        self._run_seconds += time.perf_counter() - t0
+
+    def flush(self):
+        """Drain the pipeline: harvest every in-flight window and block
+        until the backlog worker has processed all queued token work.
+        No-op on a sync engine."""
+        t0 = time.perf_counter()
+        while self._inflight:
+            self._harvest_trailing()
+        if self._backlog is not None and self._backlog.started:
+            self._backlog.flush()
+        self._run_seconds += time.perf_counter() - t0
+
+    def close(self):
+        """Flush and join the backlog worker.  Idempotent; the engine
+        remains usable for sync inspection (metrics, finished) after."""
+        self.flush()
+        if self._backlog is not None:
+            self._backlog.close()
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
     # -- one engine step (= one decode window) -------------------------------
 
     def step(self):
         """Admit + refill, then run one ``sync_every``-token fused decode
-        window and harvest it (the single host sync of the step).
+        window.  Sync mode harvests it immediately (the single host sync
+        of the step); overlap mode harvests the *trailing* window and
+        leaves this one in flight.
 
         Wall-clock accrues HERE (not in run()), so callers driving
         ``step()`` directly — benches, external event loops — still get a
         meaningful ``tokens_per_s`` out of :meth:`metrics`.  Idle no-op
         calls (nothing active, nothing admitted) accrue nothing: an
         event loop polling an empty engine must not dilute the rate."""
+        if self.overlap:
+            return self._step_async()
         t0 = time.perf_counter()
         self._admit()
         self._refill()
@@ -872,7 +1326,13 @@ class Engine:
         # window-boundary snapshot: the load THIS window runs with —
         # folded into the means in _harvest, atomically with `windows`
         occ, qd = self.scheduler.occupancy, self.scheduler.queue_depth
-        state = {k: jnp.asarray(v) for k, v in st.items()}
+        if self.aot:
+            # AOT executables skip jit's implicit placement: the carry
+            # must arrive committed to the lowered shardings
+            state = {k: jax.device_put(v, self._carry_sh[k])
+                     for k, v in st.items()}
+        else:
+            state = {k: jnp.asarray(v) for k, v in st.items()}
         acc = prop = None
         if self.draft_cache is not None:
             (self.cache, self.draft_cache, state, toks, emits, acc,
@@ -909,26 +1369,40 @@ class Engine:
         for k in range(toks.shape[0]):
             for j in range(toks.shape[2]):
                 for i in np.nonzero(emits[k, :, j])[0]:
-                    slot_req[i].out_tokens.append(int(toks[k, i, j]))
+                    self._record_token(slot_req[i], int(toks[k, i, j]))
         for slot, r in enumerate(slot_req):
             if r is not None and not self._st["act"][slot]:
                 self._finish(slot)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
-        """Drive until drained or ``max_steps`` windows.  On timeout the
-        engine warns and leaves the backlog inspectable via
+        """Drive until drained or ``max_steps`` COMPLETED windows, then
+        flush the pipeline + backlog (so ``finished`` streams are whole
+        and ``metrics()`` is settled even on timeout).  The bound counts
+        harvested windows — under overlap, dispatched-but-unharvested
+        windows don't tick it, so the timeout means what it says.  On
+        timeout the engine warns and leaves the backlog inspectable via
         ``engine.unfinished`` (callers distinguish drain from timeout).
-        Wall-clock accrues per :meth:`step`, so run() stays additive."""
-        steps = 0
-        while self.scheduler.has_work and steps < max_steps:
+        A stuck load (a request that can never admit) exits via the idle
+        guard instead of spinning to max_steps."""
+        idle = 0
+        while self.scheduler.has_work or self._inflight:
+            if self.windows >= max_steps:
+                break
+            before = (self.windows, self.host_syncs, self._dispatch_index)
             self.step()
-            steps += 1
+            made_progress = (self.windows, self.host_syncs,
+                             self._dispatch_index) != before
+            idle = 0 if made_progress else idle + 1
+            if idle > self.B + 2:
+                break
+        self.flush()
         if self.scheduler.has_work:
             u = self.unfinished
             warnings.warn(
-                f"Engine.run stopped at max_steps={max_steps} with "
-                f"{u['queued']} queued and {u['in_flight']} in-flight "
-                f"requests unfinished (not a drain)", RuntimeWarning,
+                f"Engine.run stopped after {self.windows} completed "
+                f"windows (max_steps={max_steps}) with {u['queued']} "
+                f"queued and {u['in_flight']} in-flight requests "
+                f"unfinished (not a drain)", RuntimeWarning,
                 stacklevel=2)
         return self.finished
 
@@ -942,8 +1416,22 @@ class Engine:
         advance atomically at each harvest, and the instantaneous
         ``occupancy``/``queue_depth`` read the scheduler — the host-side
         truth at every window boundary — never the device mirror's
-        active flags (which are stale between harvests)."""
-        tokens = self.tokens_emitted + self._admit_tokens
+        active flags (which are stale between harvests).  Under overlap,
+        ``tokens_per_s`` is true pipeline wall-clock: ``_run_seconds``
+        accrues across boundary work AND the final flush, while the
+        token counts settle on the backlog worker (flush/close first for
+        exact totals).  ``ttft_s`` averages submit -> first-token wall
+        latency; ``window_overlap`` is the fraction of windows that were
+        dispatched before the prior one had finished on device — the
+        direct measure of how often the double buffer actually hid the
+        host; ``windows_idle`` counts harvested windows that emitted
+        nothing (pipeline bubbles after a drain)."""
+        with self._mlock:
+            tokens = self.tokens_emitted + self._admit_tokens
+            windows_idle = self.windows_idle
+            ttft = self._ttft_sum / self._ttft_n if self._ttft_n else 0.0
+            draft_proposed = self.draft_proposed
+            draft_accepted = self.draft_accepted
         w = max(self.windows, 1)
         pool = self._pages
         return {
@@ -962,18 +1450,28 @@ class Engine:
             "draft": (None if self.draft is None else
                       (self.draft.kind if self.draft.kind == "ngram"
                        else f"layers:{self.draft.layers}")),
-            "draft_proposed": self.draft_proposed,
-            "draft_accepted": self.draft_accepted,
-            "accept_rate": (self.draft_accepted / self.draft_proposed
-                            if self.draft_proposed else 0.0),
+            "draft_proposed": draft_proposed,
+            "draft_accepted": draft_accepted,
+            "accept_rate": (draft_accepted / draft_proposed
+                            if draft_proposed else 0.0),
             "host_syncs": self.host_syncs,
             "admission_syncs": self.admission_syncs,
             "host_syncs_per_token": self.host_syncs / max(tokens, 1),
-            "decode_syncs_per_token": self.windows / max(self.tokens_emitted, 1),
+            "decode_syncs_per_token":
+                self.windows / max(tokens - self._admit_tokens, 1),
             "occupancy": self.scheduler.occupancy,
             "queue_depth": self.scheduler.queue_depth,
             "occupancy_mean": self._occupancy_sum / w,
             "queue_depth_mean": self._queue_depth_sum / w,
+            "overlap": self.overlap,
+            "aot": self.aot,
+            "window_overlap": (self._overlapped_windows
+                               / max(self._dispatch_index, 1)
+                               if self.overlap else 0.0),
+            "windows_idle": windows_idle,
+            "ttft_s": ttft,
+            "prefix_resurrections": (0 if pool is None
+                                     else pool.prefix_resurrections),
             "run_seconds": self._run_seconds,
             "tokens_per_s": tokens / self._run_seconds
                             if self._run_seconds else 0.0,

@@ -31,13 +31,18 @@ The prefix registry keys shareable pages by (slot-page index, hash of
 the FULL token prefix through that page) — latent content at position t
 depends causally on all tokens <= t, so two requests may share page j
 only when their first (j+1)*page_size tokens are identical.  The
-registry holds no references of its own: entries die with their page.
+registry holds no references of its own, but its entries outlive their
+holders: a page whose refcount hits zero keeps its key until the page
+is actually *recycled* by ``alloc`` (the engine drops keys for freshly
+allocated pages).  Free pages are reused in LRU order — least recently
+freed first — so a recurring system prompt's pages survive in the free
+list as long as pool pressure allows, and a registry hit on a
+refcount-0 page can ``resurrect`` it instead of re-prefilling.
 """
 
 from __future__ import annotations
 
 import hashlib
-from collections import deque
 
 import numpy as np
 
@@ -47,8 +52,13 @@ NULL_PAGE = 0
 
 
 class PagePool:
-    """Free-list + per-page refcount allocator over ``n_pages`` physical
-    pages.  Page 0 is reserved as the null page."""
+    """LRU free-list + per-page refcount allocator over ``n_pages``
+    physical pages.  Page 0 is reserved as the null page.
+
+    The free list is ordered by release time (least recently freed
+    first); ``alloc`` recycles from the cold end while ``resurrect``
+    can pull a still-registered page back out of the middle, which is
+    what lets refcount-0 prefix pages keep serving cache hits."""
 
     def __init__(self, n_pages: int):
         if n_pages < 2:
@@ -57,10 +67,13 @@ class PagePool:
                 f"plus at least one allocatable page")
         self.n_pages = n_pages
         self._ref = [0] * n_pages
-        self._free: deque[int] = deque(range(1, n_pages))
-        self.share_events = 0        # cumulative retain() calls
-        self.cow_forks = 0           # cumulative divergent-page copies
-        self.peak_used = 0           # high-water mark of allocated pages
+        # dict-as-ordered-set: insertion order == LRU order, O(1) removal
+        # from the middle when a free page is resurrected.
+        self._free: dict[int, None] = dict.fromkeys(range(1, n_pages))
+        self.share_events = 0          # cumulative retain() calls
+        self.cow_forks = 0             # cumulative divergent-page copies
+        self.peak_used = 0             # high-water mark of allocated pages
+        self.prefix_resurrections = 0  # refcount-0 pages revived by a hit
 
     # -- introspection -------------------------------------------------------
 
@@ -87,18 +100,41 @@ class PagePool:
     # -- lifecycle -----------------------------------------------------------
 
     def alloc(self, n: int) -> list[int]:
-        """Take ``n`` fresh pages (refcount 1 each)."""
+        """Take ``n`` fresh pages (refcount 1 each), recycling the least
+        recently freed first.  A recycled page's old content/identity is
+        dead — the caller must drop any registry key for it."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             raise RuntimeError(
                 f"page pool exhausted: want {n}, have {len(self._free)} "
                 f"free of {self.n_pages - 1} allocatable")
-        pages = [self._free.popleft() for _ in range(n)]
-        for pg in pages:
+        pages = []
+        for _ in range(n):
+            pg = next(iter(self._free))
+            del self._free[pg]
             self._ref[pg] = 1
+            pages.append(pg)
         self.peak_used = max(self.peak_used, self.used)
         return pages
+
+    def resurrect(self, page: int) -> int:
+        """Revive a refcount-0 page straight off the free list (a prefix
+        registry hit on a retired prompt): its content is still resident
+        because nothing recycled it yet, so the new holder skips the
+        prefill entirely."""
+        if not 0 < page < self.n_pages:
+            raise ValueError(
+                f"page {page} out of range 1..{self.n_pages - 1}")
+        if page not in self._free:
+            raise ValueError(
+                f"page {page} is not free (refcount {self._ref[page]}); "
+                f"use retain() to share a live page")
+        del self._free[page]
+        self._ref[page] = 1
+        self.prefix_resurrections += 1
+        self.peak_used = max(self.peak_used, self.used)
+        return page
 
     def retain(self, page: int) -> int:
         """Share an allocated page: one more holder, no copy."""
@@ -120,12 +156,13 @@ class PagePool:
 
     def free(self, page: int) -> bool:
         """Drop one reference; returns True when the page's refcount hit
-        zero and it returned to the free list (so the caller can drop
-        registry entries keyed on it)."""
+        zero and it joined the warm end of the free list.  Registry keys
+        stay valid past this point — the page's content is resident until
+        ``alloc`` recycles it."""
         self._check_live(page)
         self._ref[page] -= 1
         if self._ref[page] == 0:
-            self._free.append(page)
+            self._free[page] = None
             return True
         return False
 
@@ -150,9 +187,11 @@ def prefix_key(prompt: np.ndarray, page_idx: int, page_size: int):
 class PrefixRegistry:
     """prefix-hash -> resident physical page, for prompt sharing.
 
-    Holds no references: the engine drops a page's entry when its
-    refcount hits zero.  One key per page (a page's content is fixed for
-    its whole allocated life), first registration wins."""
+    Holds no references: the engine drops a page's entry when the page
+    is recycled by ``alloc`` (NOT when its refcount hits zero — a free
+    page's content stays resident, and a later lookup can resurrect it).
+    One key per page (a page's content is fixed from registration until
+    recycle), first registration wins."""
 
     def __init__(self):
         self._page_for: dict = {}

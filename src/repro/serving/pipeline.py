@@ -1,0 +1,137 @@
+"""Host-side plumbing for the overlapped serving pipeline.
+
+The overlapped engine keeps (up to) two decode windows in flight and
+blocks the host only on the *trailing* window's packed status array —
+everything else the host used to do synchronously at a window boundary
+is either expressed as device dataflow (slot merges chained onto the
+leading window's output futures) or deferred onto the token backlog:
+
+  * ``InflightWindow`` is the per-dispatch record: the output futures a
+    later boundary will harvest, plus the host-side snapshot (slot ->
+    request map, occupancy/queue depth, dispatch index) that makes the
+    harvest interpretable after the scheduler has moved on.
+  * ``TokenBacklog`` is a single worker thread draining a FIFO of
+    closures (MaxText's ``detokenize_backlog`` shape): per-window token
+    transfer + detokenize + stream callbacks run there, so the main loop
+    never blocks on Python-side token handling.  Exceptions are captured
+    and re-raised on the submitting thread at the next ``put``/``flush``
+    /``close`` so a crashed worker fails the run instead of hanging it.
+
+Ordering contract: items are processed strictly in put() order by one
+worker, so per-request token order is exactly dispatch order — this is
+what keeps overlapped streams token-for-token identical to the sync
+engine's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Callable
+
+__all__ = ["InflightWindow", "TokenBacklog"]
+
+_STOP = object()
+
+
+@dataclasses.dataclass
+class InflightWindow:
+    """One dispatched-but-unharvested decode window.
+
+    ``status`` is the only array the boundary blocks on: a packed (2, B)
+    int32 of (active, buffer position) stacked on device at dispatch, so
+    harvesting costs one transfer instead of one per leaf.  ``toks`` /
+    ``emits`` (and the spec counters) are handed to the backlog worker,
+    which transfers them off the critical path.  ``slot_reqs`` snapshots
+    the slot -> request map at dispatch: the scheduler may re-assign a
+    slot at a later boundary before this window is harvested, and tokens
+    must be credited to the request that actually occupied the slot.
+    """
+
+    index: int                      # dispatch sequence number
+    status: Any                     # (2, B) int32 device future
+    toks: Any                       # (B, steps[, S]) token futures
+    emits: Any                      # (B, steps[, S]) emit-mask futures
+    slot_reqs: list                 # slot -> Request at dispatch time
+    occ: int                        # scheduler occupancy at dispatch
+    qd: int                         # scheduler queue depth at dispatch
+    overlapped: bool                # dispatched before prior completed?
+    acc: Any = None                 # spec: accepted-count future
+    prop: Any = None                # spec: proposed-count future
+
+
+class TokenBacklog:
+    """A FIFO of host-side work items drained by one daemon thread.
+
+    Items are zero-argument callables (closures over device futures).
+    The thread is started lazily on the first ``put`` so a sync engine
+    never spawns it.  ``flush`` blocks until every queued item has run;
+    ``close`` flushes, stops the thread, and joins it — both re-raise
+    the first exception a work item threw.
+    """
+
+    def __init__(self, name: str = "token-backlog"):
+        self._name = name
+        self._q: queue.Queue = queue.Queue()
+        self._thread: threading.Thread | None = None
+        self._err: BaseException | None = None
+        self._closed = False
+
+    @property
+    def started(self) -> bool:
+        return self._thread is not None
+
+    @property
+    def alive(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def _ensure_thread(self):
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._drain, name=self._name, daemon=True)
+            self._thread.start()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is _STOP:
+                    return
+                if self._err is None:
+                    item()
+            except BaseException as e:  # noqa: BLE001 — repo rt on main thread
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _reraise(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError(
+                f"{self._name} worker failed while draining") from err
+
+    def put(self, item: Callable[[], None]):
+        if self._closed:
+            raise RuntimeError(f"{self._name} is closed")
+        self._reraise()
+        self._ensure_thread()
+        self._q.put(item)
+
+    def flush(self):
+        """Block until every item queued so far has been processed."""
+        if self._thread is not None:
+            self._q.join()
+        self._reraise()
+
+    def close(self):
+        """Flush, stop, and join the worker.  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._thread is not None:
+            self._q.join()
+            self._q.put(_STOP)
+            self._thread.join()
+            self._thread = None
+        self._reraise()

@@ -129,3 +129,13 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
         return jnp.where(is_greedy, greedy, s)
 
     return jax.lax.cond(jnp.all(is_greedy), lambda _: greedy, sampled, None)
+
+
+# Jitted admission-time sampler.  Admission used to call sample_tokens
+# eagerly (op-by-op dispatch on the wave's first logits); both the sync
+# and the overlapped engine now share this one jitted entry point so the
+# first token of a request is bitwise identical whichever path admitted
+# it — sample_tokens is batch-invariant per row, so bucket padding rows
+# cannot perturb real rows.  ``spec`` stays static (it is a hashable
+# NamedSharding or None, not an array).
+sample_tokens_jit = jax.jit(sample_tokens, static_argnames=("spec",))

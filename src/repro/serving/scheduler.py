@@ -16,7 +16,9 @@ batch behind a single huge prefill wave.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
+from typing import Callable
 
 import numpy as np
 
@@ -33,6 +35,13 @@ class Request:
     truncate: bool = False                # allow prompt truncation at submit
     truncated: bool = False               # set when truncation happened
     out_tokens: list[int] = dataclasses.field(default_factory=list)
+    # streaming callback: called once per emitted token as (req, token).
+    # Under the overlapped engine this runs on the backlog worker thread.
+    on_token: Callable | None = None
+    # wall-clock stamps (perf_counter domain) for ttft accounting; the
+    # scheduler stamps submission, the engine stamps the first emit.
+    submitted_at: float | None = None
+    first_token_at: float | None = None
 
     @property
     def done(self) -> bool:
@@ -96,6 +105,8 @@ class Scheduler:
         if prompt.shape[0] == 0:
             raise ValueError(f"request uid={req.uid}: empty prompt")
         req.prompt = prompt
+        if req.submitted_at is None:
+            req.submitted_at = time.perf_counter()
         self.queue.append(req)
         return req
 

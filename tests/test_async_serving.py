@@ -1,0 +1,361 @@
+"""Overlapped-pipeline parity and lifecycle.
+
+The overlapped engine (``overlap=True``) keeps two decode windows in
+flight, admits concurrently with in-flight decode, and hands token
+harvesting to a backlog worker thread — none of which may change a
+single emitted token.  Every test here pins the async engine's streams
+TOKEN-FOR-TOKEN to the blocking engine's across cache variants,
+backends, layouts, speculation, and (in the `mesh` CI job) a forced
+(2, 4) host mesh, and checks the structural contracts the pipeline adds:
+one device sync per *trailing* window, flat trace counts under AOT, and
+a backlog thread that drains and joins on ``close``.
+"""
+
+import dataclasses
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.models import transformer as T
+from repro.serving import Engine, Request, SamplingParams
+
+KEY = jax.random.PRNGKey(0)
+
+CASES = {
+    "dense": {},
+    "latent": {"recalkv_ratio": 0.5},
+    "int8_latent": {"recalkv_ratio": 0.5, "cache_quant_bits": 8},
+}
+
+SAMPLED = SamplingParams(temperature=0.9, top_k=32, top_p=0.9, seed=11)
+
+_MODELS = {}
+
+
+def _model(case):
+    """Config + params, cached per case — every test reuses one model."""
+    if case not in _MODELS:
+        extra = CASES[case]
+        kw = {k: extra[k] for k in ("recalkv_ratio",) if k in extra}
+        cfg = get_config("qwen3-4b", smoke=True, **kw)
+        cfg = dataclasses.replace(
+            cfg, dtype=jnp.float32,
+            **{k: v for k, v in extra.items() if k == "cache_quant_bits"})
+        _MODELS[case] = (cfg, T.init_params(cfg, KEY))
+    return _MODELS[case]
+
+
+def _prompts(cfg, n=6, seed=3):
+    g = np.random.default_rng(seed)
+    return [g.integers(0, cfg.vocab_size, 5 + 2 * i).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve(cfg, params, prompts, *, sampling=None, max_new=6, **kw):
+    eng = Engine(cfg, params, max_slots=4, max_len=40, sampling=sampling,
+                 **kw)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=max_new))
+    done = eng.run()
+    eng.close()
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+class TestAsyncStreamParity:
+    """overlap=True must be stream-invariant: same tokens, same order,
+    per request, as the blocking engine — greedy and sampled."""
+
+    @pytest.mark.parametrize("case,backend", [
+        ("dense", "einsum"), ("latent", "einsum"),
+        ("int8_latent", "einsum"), ("latent", "pallas"),
+    ])
+    def test_greedy_streams_match_sync(self, case, backend):
+        cfg, params = _model(case)
+        cfg = dataclasses.replace(cfg, attn_backend=backend)
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts)
+        got, eng = _serve(cfg, params, prompts, overlap=True)
+        assert eng.overlap
+        assert got == ref, (case, backend)
+
+    def test_sampled_mixed_load_matches_sync(self):
+        """Mixed greedy/sampled requests through chunked prefill: the
+        shared jitted admission sampler + per-slot key chains make the
+        async first tokens (and everything after) bitwise equal."""
+        cfg, params = _model("latent")
+        g = np.random.default_rng(21)
+        reqs = [(g.integers(0, cfg.vocab_size,
+                            int(g.integers(3, 30))).astype(np.int32),
+                 SAMPLED if i % 2 else None) for i in range(6)]
+
+        def serve(overlap):
+            eng = Engine(cfg, params, max_slots=4, max_len=40,
+                         prefill_chunk=6, sync_every=4, overlap=overlap)
+            for i, (pr, sp) in enumerate(reqs):
+                eng.submit(Request(uid=i, prompt=pr.copy(),
+                                   max_new_tokens=6, sampling=sp))
+            done = eng.run()
+            eng.close()
+            return {r.uid: r.out_tokens for r in done}
+
+        assert serve(True) == serve(False)
+
+    @pytest.mark.parametrize("spec_depth", [0, 2])
+    def test_paged_streams_match_sync_ring(self, spec_depth):
+        """Paged + overlap (+ speculation) still equals the sync ring
+        engine — layout, pipeline, and speculation are all invisible in
+        the streams."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts)
+        got, eng = _serve(cfg, params, prompts, overlap=True,
+                          cache_layout="paged", spec_depth=spec_depth,
+                          draft="ngram" if spec_depth else None)
+        assert got == ref, spec_depth
+        if spec_depth:
+            assert eng.metrics()["draft_proposed"] > 0
+
+    def test_layer_draft_spec_matches_sync(self):
+        """The self-draft (layers:K) speculative window under overlap:
+        accept/residual bookkeeping rides the same packed-status harvest
+        and must stay deterministic."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        for sp in (None, SAMPLED):
+            ref, _ = _serve(cfg, params, prompts, sampling=sp)
+            got, eng = _serve(cfg, params, prompts, sampling=sp,
+                              overlap=True, spec_depth=2, draft="layers:2")
+            assert got == ref
+            assert eng.metrics()["draft_proposed"] > 0
+
+    def test_one_sync_per_trailing_window(self):
+        """The pipeline's structural contract: exactly one host sync per
+        harvested (trailing) window plus one per admission wave — and the
+        busy windows keep the 1-per-sync_every-token bound."""
+        cfg, params = _model("latent")
+        _, eng = _serve(cfg, params, _prompts(cfg), overlap=True,
+                        max_new=16, sync_every=4)
+        m = eng.metrics()
+        assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m
+        assert m["host_syncs"] < m["tokens"], m
+        decode_tokens = round(m["windows"] / m["decode_syncs_per_token"])
+        busy = (m["windows"] - m["windows_idle"]) / max(decode_tokens, 1)
+        assert busy <= 1.0 / 4 + 1e-9, m
+
+    def test_overlap_metrics_shape(self):
+        cfg, params = _model("latent")
+        _, eng = _serve(cfg, params, _prompts(cfg), overlap=True)
+        m = eng.metrics()
+        assert m["overlap"] is True
+        assert 0.0 <= m["window_overlap"] <= 1.0
+        assert m["ttft_s"] > 0.0
+        assert m["windows_idle"] >= 0
+        assert m["tokens_per_s"] > 0.0
+
+
+class TestAOT:
+    def test_aot_no_retrace_and_stream_parity(self):
+        """AOT compiles the window exactly once and every prefill bucket
+        at construction; serving must not trace anything new (the
+        trace-count hook is the first-token-latency regression guard),
+        and the streams still equal the sync engine's."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts)
+        eng = Engine(cfg, params, max_slots=4, max_len=40, overlap=True,
+                     aot=True)
+        compiled = dict(eng.trace_counts)
+        assert compiled["window"] == 1
+        assert compiled["prefill"] > 0
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=6))
+        done = eng.run()
+        eng.close()
+        assert {r.uid: r.out_tokens for r in done} == ref
+        assert eng.trace_counts == compiled, "serving retraced an executable"
+
+    def test_aot_sync_engine_matches(self):
+        """aot is orthogonal to overlap: the blocking engine driven off
+        AOT executables emits identical streams too."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg, n=4)
+        ref, _ = _serve(cfg, params, prompts)
+        got, _ = _serve(cfg, params, prompts, aot=True)
+        assert got == ref
+
+
+class TestLifecycle:
+    def test_backlog_thread_drains_and_joins_on_close(self):
+        cfg, params = _model("latent")
+        eng = Engine(cfg, params, max_slots=4, max_len=40, overlap=True)
+        for i, pr in enumerate(_prompts(cfg, n=4)):
+            eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=6))
+        done = eng.run()
+        assert eng._backlog.started          # pipeline actually used it
+        eng.close()
+        assert not eng._backlog.alive
+        assert not [t for t in threading.enumerate()
+                    if t.name == "token-backlog"]
+        assert all(r.out_tokens for r in done)
+        eng.close()                          # idempotent
+
+    def test_context_manager_closes(self):
+        cfg, params = _model("latent")
+        with Engine(cfg, params, max_slots=4, max_len=40,
+                    overlap=True) as eng:
+            eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                               max_new_tokens=4))
+            eng.run()
+        assert not eng._backlog.alive
+
+    def test_run_timeout_counts_completed_windows_and_flushes(self):
+        """run(max_steps) under overlap: the bound ticks on HARVESTED
+        windows (not dispatches), the warning reports completed windows,
+        and the backlog is flushed so the partial streams are whole."""
+        cfg, params = _model("latent")
+        eng = Engine(cfg, params, max_slots=2, max_len=40, overlap=True,
+                     sync_every=2)
+        for i in range(4):
+            eng.submit(Request(uid=i, prompt=np.arange(5, dtype=np.int32),
+                               max_new_tokens=30))
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            eng.run(max_steps=1)
+        msgs = [str(x.message) for x in w
+                if issubclass(x.category, RuntimeWarning)]
+        assert any("completed windows" in m and "max_steps=1" in m
+                   for m in msgs), msgs
+        assert not eng._inflight              # flushed on timeout
+        assert eng.windows >= 1
+        u = eng.unfinished
+        assert u["queued"] + u["in_flight"] > 0
+        # the streams that did come out are settled (backlog drained)
+        emitted = sum(len(r.out_tokens) for r in eng.scheduler.slot_req
+                      if r is not None)
+        assert emitted == eng.metrics()["tokens"]
+        eng.close()
+
+    def test_on_token_streaming_order(self):
+        """Request.on_token fires once per token, in stream order, on the
+        backlog worker — the callback view equals out_tokens."""
+        cfg, params = _model("latent")
+        seen = {}
+
+        def serve(overlap):
+            seen.clear()
+            eng = Engine(cfg, params, max_slots=4, max_len=40,
+                         overlap=overlap)
+            for i, pr in enumerate(_prompts(cfg, n=4)):
+                eng.submit(Request(
+                    uid=i, prompt=pr.copy(), max_new_tokens=6,
+                    on_token=lambda r, t: seen.setdefault(r.uid,
+                                                          []).append(t)))
+            done = eng.run()
+            eng.close()
+            assert seen == {r.uid: r.out_tokens for r in done}
+            return dict(seen)
+
+        assert serve(True) == serve(False)
+
+    def test_prefix_resurrection_across_generations(self):
+        """Paged engine: after every holder of a shared prompt prefix
+        retires, its pages sit refcount-0 on the LRU free list with their
+        registry keys intact — a later request with the same prefix
+        revives them instead of re-prefilling fresh pages."""
+        cfg, params = _model("latent")
+        g = np.random.default_rng(7)
+        sysp = g.integers(0, cfg.vocab_size, 16).astype(np.int32)
+
+        def load(uids):
+            return [Request(uid=u, prompt=np.concatenate(
+                [sysp, g.integers(0, cfg.vocab_size, 3).astype(np.int32)]),
+                max_new_tokens=4) for u in uids]
+
+        eng = Engine(cfg, params, max_slots=4, max_len=40,
+                     cache_layout="paged", page_size=8, overlap=True)
+        for r in load(range(2)):
+            eng.submit(r)
+        eng.run()                    # first generation retires fully
+        for r in load(range(2, 4)):
+            eng.submit(r)
+        eng.run()
+        eng.close()
+        m = eng.metrics()
+        assert m["prefix_resurrections"] > 0, m
+        assert m["pages_shared"] > 0, m
+
+
+class TestTokenBacklog:
+    """The backlog primitive itself (repro.serving.pipeline)."""
+
+    def test_fifo_order_and_lazy_start(self):
+        from repro.serving.pipeline import TokenBacklog
+        bl = TokenBacklog()
+        assert not bl.started                # sync engines never spawn it
+        out = []
+        for i in range(100):
+            bl.put(lambda i=i: out.append(i))
+        bl.flush()
+        assert out == list(range(100))       # strict put() order
+        bl.close()
+        assert not bl.alive
+
+    def test_worker_error_reraises_on_main_thread(self):
+        from repro.serving.pipeline import TokenBacklog
+        bl = TokenBacklog(name="bl-err")
+        bl.put(lambda: 1 / 0)
+        with pytest.raises(RuntimeError, match="bl-err"):
+            bl.flush()
+        bl.close()
+
+    def test_close_is_idempotent_and_put_after_close_raises(self):
+        from repro.serving.pipeline import TokenBacklog
+        bl = TokenBacklog()
+        bl.put(lambda: None)
+        bl.close()
+        bl.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            bl.put(lambda: None)
+
+
+class TestAsyncMesh:
+    """The overlapped pipeline over a (2, 4) mesh (runs in the `mesh` CI
+    job under forced host devices; skips otherwise)."""
+
+    @pytest.fixture(scope="class")
+    def mesh24(self):
+        return make_test_mesh(2, 4, skip=True)
+
+    def test_greedy_streams_match_single_device_sync(self, mesh24):
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts)
+        got, eng = _serve(cfg, params, prompts, overlap=True, mesh=mesh24)
+        assert eng.mesh_str == "2x4"
+        assert got == ref
+        m = eng.metrics()
+        assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m
+
+    def test_sampled_spec_streams_match_single_device_sync(self, mesh24):
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts, sampling=SAMPLED)
+        got, _ = _serve(cfg, params, prompts, sampling=SAMPLED,
+                        overlap=True, mesh=mesh24, spec_depth=2,
+                        draft="ngram")
+        assert got == ref
+
+    def test_aot_overlap_on_mesh(self, mesh24):
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg, n=4)
+        ref, _ = _serve(cfg, params, prompts)
+        got, eng = _serve(cfg, params, prompts, overlap=True, aot=True,
+                          mesh=mesh24)
+        assert got == ref
+        assert eng.trace_counts["window"] == 1

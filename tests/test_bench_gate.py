@@ -1,5 +1,6 @@
 """The serving perf-regression gate: row matching on (variant, backend,
-mesh, spec_depth, draft, cache_layout, page_size, workload), threshold
+mesh, spec_depth, draft, cache_layout, page_size, workload,
+overlap), threshold
 semantics, and the skip paths (no prior artifact / changed bench
 identity) that keep CI bootstrappable."""
 
@@ -39,7 +40,7 @@ class TestCompareEntries:
         new = _entry([_row(tps=15.0)])          # -25%
         rep = compare_entries(prev, new, threshold=0.2)
         assert len(rep["regressions"]) == 1
-        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-/ring/0/-"
+        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-/ring/0/-/False"
         assert rep["regressions"][0]["drop"] == pytest.approx(0.25)
 
     def test_spec_rows_match_on_depth_and_draft(self):
@@ -53,7 +54,7 @@ class TestCompareEntries:
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["compared"] == 2
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2/ring/0/-"]
+        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2/ring/0/-/False"]
 
     def test_mesh_rows_distinct(self):
         prev = _entry([_row(mesh="1x1", tps=20.0),
@@ -62,7 +63,7 @@ class TestCompareEntries:
                       _row(mesh="2x4", tps=3.0)])       # -25% on the mesh
         rep = compare_entries(prev, new)
         assert [r["row"] for r in rep["regressions"]] == \
-            ["latent/einsum/2x4/-/-/ring/0/-"]
+            ["latent/einsum/2x4/-/-/ring/0/-/False"]
 
     def test_changed_bench_identity_skips(self):
         prev = _entry([_row(tps=20.0)])
@@ -83,13 +84,25 @@ class TestCompareEntries:
         new = _row(tps=20.0, cache_layout="ring", page_size=0)
         assert row_key(old) == row_key(new)
 
+    def test_overlap_rows_distinct_from_sync(self):
+        """An overlapped-pipeline row is a new identity — its (much
+        higher) throughput never compares against the sync baseline, and
+        pre-overlap rows keep matching today's sync rows."""
+        prev = _entry([_row(tps=20.0)])
+        new = _entry([_row(tps=20.0),
+                      _row(tps=120.0, overlap=True, aot=True)])
+        rep = compare_entries(prev, new, threshold=0.2)
+        assert rep["compared"] == 1
+        assert rep["regressions"] == []
+        assert rep["only_new"] == ["latent/einsum/1x1/-/-/ring/0/-/True"]
+
     def test_paged_rows_distinct_from_ring(self):
         prev = _entry([_row(tps=20.0)])
         new = _entry([_row(tps=20.0),
                       _row(tps=1.0, cache_layout="paged", page_size=8)])
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/-/-/paged/8/-"]
+        assert rep["only_new"] == ["latent/einsum/1x1/-/-/paged/8/-/False"]
 
 
 class TestMainCLI:

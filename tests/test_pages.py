@@ -84,6 +84,49 @@ def test_peak_used_high_watermark():
     assert pool.used == 0
 
 
+def test_alloc_recycles_least_recently_freed_first():
+    pool = PagePool(6)
+    a, b, c = pool.alloc(3)                  # free list now [4, 5]
+    pool.free(b)                             # [4, 5, b]
+    pool.free(a)                             # [4, 5, b, a]
+    # never-used pages are colder than anything freed after them
+    assert pool.alloc(2) == [4, 5]
+    # then the oldest free, NOT the most recently freed
+    assert pool.alloc(1) == [b]
+    assert pool.alloc(1) == [a]
+    pool.free(c)
+
+
+def test_resurrect_revives_free_page_and_counts():
+    pool = PagePool(6)
+    (pg,) = pool.alloc(1)
+    pool.free(pg)
+    assert pool.resurrect(pg) == pg
+    assert pool.refcount(pg) == 1
+    assert pool.prefix_resurrections == 1
+    # a live page cannot be resurrected, only retained
+    with pytest.raises(ValueError):
+        pool.resurrect(pg)
+    # a resurrected page behaves like any allocated page afterwards
+    pool.retain(pg)
+    assert not pool.free(pg)
+    assert pool.free(pg)
+
+
+def test_resurrect_pulls_from_middle_of_free_list():
+    pool = PagePool(8)
+    pages = pool.alloc(4)
+    for pg in pages:
+        pool.free(pg)                        # free order = pages order
+    victim = pages[1]
+    pool.resurrect(victim)
+    # LRU recycling skips the resurrected page and keeps relative order
+    rest = [pg for pg in [5, 6, 7] + pages if pg != victim]
+    assert pool.alloc(len(rest)) == rest
+    with pytest.raises(RuntimeError):
+        pool.alloc(1)                        # victim is held, pool is dry
+
+
 # -- prefix registry ----------------------------------------------------------
 
 def test_prefix_key_depends_on_full_prefix():
