@@ -1,0 +1,123 @@
+"""Perf-regression gate over the BENCH_kernels.json trajectory.
+
+CI downloads the previous successful run's ``BENCH_kernels`` artifact and
+compares this run's freshly-appended entry against the artifact's latest
+entry: any matching (variant, backend, layout, spec_depth, mesh) timed
+row whose ``us_per_call`` grew by more than ``--threshold`` (default 20%)
+fails the job.  Rows without identity keys (analytic roofline terms,
+interpret-validation checks, derived ratios) are never compared; rows
+only one side has are reported but never fail; and when no prior
+artifact exists (first run, expired retention, forked repo) the gate
+SKIPS cleanly — it guards the trajectory, it must not block
+bootstrapping it.
+
+CPU microbenchmark timings on shared runners are noisy; the 20% default
+is meant to catch structural regressions (a lost fusion, an interpret
+kernel suddenly retracing per call), not scheduler jitter.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_THRESHOLD = 0.20
+
+# identity of a timed row within an entry; everything else is
+# measurement.  Rows missing "variant" (analytic / validation / ratio
+# rows) carry no identity and are skipped entirely.
+ROW_KEY = ("variant", "backend", "layout", "spec_depth", "mesh")
+_KEY_DEFAULTS = {"layout": "ring", "spec_depth": 0, "mesh": "1x1"}
+
+
+def row_key(row: dict) -> tuple | None:
+    if "variant" not in row or not row.get("us_per_call"):
+        return None
+    return tuple(row.get(k, _KEY_DEFAULTS.get(k)) for k in ROW_KEY)
+
+
+def _fmt(key: tuple) -> str:
+    return "/".join(str(v) for v in key)
+
+
+def compare_entries(prev: dict, new: dict,
+                    threshold: float = DEFAULT_THRESHOLD) -> dict:
+    """Compare two trajectory entries.  Returns a report dict:
+    ``regressions`` (matching rows past the threshold), ``compared``,
+    ``only_prev`` / ``only_new`` (unmatched row keys, informational),
+    and ``skipped_reason`` when the entries are not comparable (a
+    platform change is a new baseline, not a regression)."""
+    report = {"regressions": [], "compared": 0,
+              "only_prev": [], "only_new": [], "skipped_reason": None}
+    if prev.get("platform") != new.get("platform"):
+        report["skipped_reason"] = (
+            f"platform changed ({prev.get('platform')!r} -> "
+            f"{new.get('platform')!r}): new baseline")
+        return report
+    prev_rows = {k: r for r in prev.get("rows", [])
+                 if (k := row_key(r)) is not None}
+    new_rows = {k: r for r in new.get("rows", [])
+                if (k := row_key(r)) is not None}
+    report["only_prev"] = sorted(_fmt(k) for k in prev_rows.keys()
+                                 - new_rows.keys())
+    report["only_new"] = sorted(_fmt(k) for k in new_rows.keys()
+                                - prev_rows.keys())
+    for key in sorted(prev_rows.keys() & new_rows.keys(), key=_fmt):
+        p, n = prev_rows[key]["us_per_call"], new_rows[key]["us_per_call"]
+        report["compared"] += 1
+        if p > 0 and n > (1.0 + threshold) * p:
+            report["regressions"].append({
+                "row": _fmt(key), "prev_us_per_call": round(p, 1),
+                "new_us_per_call": round(n, 1),
+                "slowdown": round(n / p - 1.0, 3)})
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", required=True,
+                    help="previous run's BENCH_kernels.json (may not exist)")
+    ap.add_argument("--new", required=True,
+                    help="this run's BENCH_kernels.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="fractional us_per_call growth that fails "
+                         "(default 0.2)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.prev):
+        print(f"[kernel-gate] no previous artifact at {args.prev}: skipping "
+              f"(first run or expired retention)")
+        return 0
+    with open(args.prev) as f:
+        prev_traj = json.load(f)
+    with open(args.new) as f:
+        new_traj = json.load(f)
+    if not prev_traj or not new_traj:
+        print("[kernel-gate] empty trajectory on one side: skipping")
+        return 0
+
+    report = compare_entries(prev_traj[-1], new_traj[-1],
+                             threshold=args.threshold)
+    if report["skipped_reason"]:
+        print(f"[kernel-gate] skipped: {report['skipped_reason']}")
+        return 0
+    for side in ("only_prev", "only_new"):
+        for k in report[side]:
+            print(f"[kernel-gate] {side.replace('_', ' ')}: {k} "
+                  f"(not compared)")
+    if report["regressions"]:
+        print(f"[kernel-gate] FAIL: {len(report['regressions'])} row(s) "
+              f"slowed > {args.threshold:.0%} us/call:")
+        for r in report["regressions"]:
+            print(f"  {r['row']}: {r['prev_us_per_call']} -> "
+                  f"{r['new_us_per_call']} us (+{r['slowdown']:.1%})")
+        return 1
+    print(f"[kernel-gate] OK: {report['compared']} matching rows within "
+          f"{args.threshold:.0%} of the previous run")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

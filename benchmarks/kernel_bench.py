@@ -10,7 +10,11 @@ Two views, because this container has no TPU:
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +22,25 @@ import numpy as np
 
 from benchmarks import common
 from repro.configs import get_config
+from repro.launch.mesh import mesh_from_spec
 from repro.models import transformer as T
+from repro.sharding import rules as R
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_kernels.json")
+
+VARIANTS = {"dense": ({}, {}),
+            "recalkv": ({"recalkv_ratio": 0.5}, {}),
+            "recalkv_int8": ({"recalkv_ratio": 0.5},
+                             {"cache_quant_bits": 8})}
+
+
+def _build(arch, tag, backend):
+    kw, extra = VARIANTS[tag]
+    cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
+                              dtype=jnp.float32,
+                              attn_backend=backend, **extra)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
 
 
 def decode_bench(arch="qwen3-4b", S=256, B=4):
@@ -29,16 +51,9 @@ def decode_bench(arch="qwen3-4b", S=256, B=4):
     the hot path's perf trajectory once a TPU runs the same rows)."""
     rows = []
     timings = {}
-    variants = {"dense": ({}, {}),
-                "recalkv": ({"recalkv_ratio": 0.5}, {}),
-                "recalkv_int8": ({"recalkv_ratio": 0.5},
-                                 {"cache_quant_bits": 8})}
-    for tag, (kw, extra) in variants.items():
+    for tag in VARIANTS:
         for backend in ("einsum", "pallas"):
-            cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
-                                      dtype=jnp.float32,
-                                      attn_backend=backend, **extra)
-            params = T.init_params(cfg, jax.random.PRNGKey(0))
+            cfg, params = _build(arch, tag, backend)
             cache = T.init_decode_cache(cfg, B, S)
             toks = jnp.zeros((B,), jnp.int32)
             cur = jnp.full((B,), S - 1, jnp.int32)
@@ -48,6 +63,8 @@ def decode_bench(arch="qwen3-4b", S=256, B=4):
                               for l in jax.tree.leaves(cache))
             timings[tag, backend] = us
             rows.append({"name": f"kernel/decode_step/{tag}/{backend}",
+                         "variant": tag, "backend": backend,
+                         "layout": "ring", "spec_depth": 0, "mesh": "1x1",
                          "us_per_call": us,
                          "derived": f"cache_bytes={cache_bytes}"})
         rows.append({
@@ -58,6 +75,92 @@ def decode_bench(arch="qwen3-4b", S=256, B=4):
         "name": "kernel/decode_step/latent_vs_dense_ratio",
         "us_per_call": 0,
         "derived": (f"{timings['recalkv', 'einsum'] / timings['dense', 'einsum']:.3f}")})
+    return rows
+
+
+def verify_bench(arch="qwen3-4b", S=256, B=4, depth=2):
+    """Multi-token verify_step timings at spec depth: variant x backend.
+
+    The pallas rows run the multi-query kernel — all depth+1 verify
+    queries score [ring | causal self block] in ONE pass; the einsum twin
+    is the joint-softmax reference, and ``speedup_vs_einsum`` is the
+    number the MQ kernel exists to move (< 1 in CPU interpret mode)."""
+    rows = []
+    timings = {}
+    nq = depth + 1
+    for tag in VARIANTS:
+        for backend in ("einsum", "pallas"):
+            cfg, params = _build(arch, tag, backend)
+            cache = T.init_decode_cache(cfg, B, S)
+            fed = jnp.zeros((B, nq), jnp.int32)
+            cur = jnp.full((B,), S // 2, jnp.int32)
+            fm = jnp.ones((B, nq), bool)
+            step = jax.jit(
+                lambda p, c, t, u, m: T.verify_step(cfg, p, c, t, u, m))
+            us = common.timed(lambda: step(params, cache, fed, cur, fm),
+                              repeats=5)
+            timings[tag, backend] = us
+            rows.append({"name": f"kernel/verify_step/{tag}/{backend}",
+                         "variant": tag, "backend": backend,
+                         "layout": "ring", "spec_depth": depth,
+                         "mesh": "1x1", "us_per_call": us,
+                         "derived": f"queries={nq}"})
+        rows.append({
+            "name": f"kernel/verify_step/{tag}/speedup_vs_einsum",
+            "us_per_call": 0,
+            "derived": f"{timings[tag, 'einsum'] / timings[tag, 'pallas']:.3f}"})
+    return rows
+
+
+def sharded_rows(arch="qwen3-4b", S=256, B=4, depth=2, shape="2x4"):
+    """decode/verify timings with the kernels under shard_map over the
+    mesh's "model" axis (ring slices sharded, LSE-merged partial
+    softmax).  Needs the devices to exist in-process (forced-host in CI);
+    returns no rows otherwise so single-device runs stay clean."""
+    import math
+    need = math.prod(int(v) for v in shape.split("x"))
+    if jax.local_device_count() < need:
+        print(f"# sharded rows skipped: {shape} needs {need} devices, "
+              f"have {jax.local_device_count()}")
+        return []
+    mesh = mesh_from_spec(shape)
+    rows = []
+    nq = depth + 1
+    for step_name, timing_depth in (("decode_step", 0),
+                                    ("verify_step", depth)):
+        timings = {}
+        for backend in ("einsum", "pallas"):
+            cfg, params = _build(arch, "recalkv", backend)
+            params = jax.device_put(params, R.to_named(
+                R.param_specs(params, mesh, grains=R.head_grains(cfg)),
+                mesh))
+            cache = T.init_decode_cache(cfg, B, S)
+            cache = jax.device_put(
+                cache, R.to_named(R.cache_specs(cache, mesh), mesh))
+            cur = jnp.full((B,), S // 2, jnp.int32)
+            if step_name == "decode_step":
+                toks = jnp.zeros((B,), jnp.int32)
+                step = jax.jit(lambda p, c, t, u: T.decode_step(
+                    cfg, p, c, t, u, mesh=mesh))
+                fn = lambda: step(params, cache, toks, cur)
+            else:
+                fed = jnp.zeros((B, nq), jnp.int32)
+                fm = jnp.ones((B, nq), bool)
+                step = jax.jit(lambda p, c, t, u, m: T.verify_step(
+                    cfg, p, c, t, u, m, mesh=mesh))
+                fn = lambda: step(params, cache, fed, cur, fm)
+            us = common.timed(fn, repeats=5)
+            timings[backend] = us
+            rows.append({
+                "name": f"kernel/{step_name}/recalkv/{backend}/mesh={shape}",
+                "variant": "recalkv", "backend": backend, "layout": "ring",
+                "spec_depth": timing_depth, "mesh": shape,
+                "us_per_call": us, "derived": f"shards={mesh.shape['model']}"})
+        rows.append({
+            "name": f"kernel/{step_name}/recalkv/mesh={shape}"
+                    f"/speedup_vs_einsum",
+            "us_per_call": 0,
+            "derived": f"{timings['einsum'] / timings['pallas']:.3f}"})
     return rows
 
 
@@ -93,7 +196,8 @@ def analytic_rows():
 def interpret_validation_rows():
     """Record that every kernel matches its oracle (quick re-check)."""
     from repro.kernels import ops, ref
-    from repro.kernels.latent_decode import latent_decode_attention
+    from repro.kernels.latent_decode import (latent_decode_attention,
+                                             latent_decode_attention_mq)
     rng = np.random.default_rng(0)
     B, S, G, rk, rv, s, qpk, dh = 2, 256, 2, 32, 32, 2, 2, 16
     q = jnp.asarray(rng.normal(size=(B, G, s * qpk, dh)), jnp.float32)
@@ -107,17 +211,80 @@ def interpret_validation_rows():
     o_ker = latent_decode_attention(q, zk, zv, r_k, cos, sin, bias,
                                     scale=0.25, block_s=128, interpret=True)
     err = float(jnp.max(jnp.abs(o_ref - o_ker)))
-    return [{"name": "kernel/latent_decode/interpret_allclose",
+    rows = [{"name": "kernel/latent_decode/interpret_allclose",
              "us_per_call": 0, "derived": f"max_err={err:.2e}"}]
+
+    # multi-query kernel vs the single-query kernel walked one verify
+    # query at a time over the same extended ring (ring + nq appended
+    # self columns, per-query bias from ops.verify_bias)
+    nq = 3
+    cur = jnp.asarray([200, 130], jnp.int32)
+    pos = jnp.where(jnp.arange(S)[None, :] < cur[:, None],
+                    jnp.arange(S)[None, :], -1)
+    pos_q = cur[:, None] + jnp.arange(nq, dtype=jnp.int32)[None, :]
+    pos_ext = jnp.concatenate([pos, pos_q], axis=1)
+    feed = jnp.asarray([[True, True, True], [True, True, False]])
+    bias_mq = ops.verify_bias(pos_ext, pos_q, feed, None, S)
+    cos_e, sin_e = ops.rope_tables_for(jnp.maximum(pos_ext, 0), dh, 1e4)
+    zk_s = jnp.asarray(rng.normal(size=(B, nq, G, rk)), jnp.float32)
+    zv_s = jnp.asarray(rng.normal(size=(B, nq, G, rv)), jnp.float32)
+    zk_e = jnp.concatenate([zk, zk_s], axis=1)
+    zv_e = jnp.concatenate([zv, zv_s], axis=1)
+    qs = jnp.asarray(rng.normal(size=(B, nq, G, s * qpk, dh)), jnp.float32)
+    q_mq = qs.transpose(0, 2, 1, 3, 4).reshape(B, G, nq * s * qpk, dh)
+    o_mq = latent_decode_attention_mq(
+        q_mq, zk_e, zv_e, r_k, cos_e, sin_e, bias_mq, scale=0.25,
+        block_s=128, interpret=True).reshape(B, G, nq, s * qpk, rv)
+    err_mq = 0.0
+    for j in range(nq):
+        o_j = latent_decode_attention(
+            qs[:, j], zk_e, zv_e, r_k, cos_e, sin_e, bias_mq[:, j],
+            scale=0.25, block_s=128, interpret=True)
+        err_mq = max(err_mq, float(jnp.max(jnp.abs(o_j - o_mq[:, :, j]))))
+    rows.append({"name": "kernel/latent_decode_mq/interpret_allclose",
+                 "us_per_call": 0,
+                 "derived": f"max_err={err_mq:.2e} queries={nq}"})
+    return rows
 
 
 def run(fast: bool = False):
     rows = []
     rows += decode_bench()
+    rows += verify_bench()
+    rows += sharded_rows()
     rows += analytic_rows()
     rows += interpret_validation_rows()
     return rows
 
 
+def append_trajectory(rows, out_path: str):
+    """Append the timed rows to the BENCH_kernels.json trajectory (the
+    regression gate's input; analytic/validation rows carry no identity
+    keys and are skipped by the gate)."""
+    traj = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            traj = json.load(f)
+    traj.append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "platform": jax.default_backend(),
+        "rows": rows,
+    })
+    tmp = out_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(traj, f, indent=1)
+    os.replace(tmp, out_path)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    rows = run()
+    common.emit(rows)
+    append_trajectory(rows, args.out)
+    print(f"# trajectory row appended to {os.path.abspath(args.out)}")
+
+
 if __name__ == "__main__":
-    common.emit(run())
+    main()

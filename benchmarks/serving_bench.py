@@ -18,13 +18,19 @@ overlapped pipeline with AOT warmup (``overlap=True, aot=True``), ring
 and paged — ``speedup_vs_sync`` records the throughput ratio against the
 matching blocking row in the same entry.
 
-Mesh rows: the latent/einsum load is re-run over engine mesh shapes
-(``1x1`` and ``2x4``) so the sharded window's CPU overhead (collectives +
-forced host devices) is a recorded trajectory, not an anecdote.  A shape
-needing more devices than this process has is measured in a forced-host
+Mesh rows: the latent load is re-run over engine mesh shapes (``1x1``
+and ``2x4``) for BOTH backends — the pallas rows exercise the shard_map
+kernel path (per-shard partial softmax + LSE merge over the "model"
+axis) — so the sharded window's CPU overhead (collectives + forced host
+devices) is a recorded trajectory, not an anecdote.  A shape needing
+more devices than this process has is measured in a forced-host
 subprocess (``--one-mesh-row``), since the device count must be fixed
 before jax initializes.  The structural 1-sync-per-window assertion runs
 on every row, mesh rows included.
+
+Every pallas row records ``speedup_vs_einsum`` (its tokens/s over the
+matching einsum row's): < 1 on CPU where the kernel runs in interpret
+mode, the number to watch on TPU.
 """
 
 from __future__ import annotations
@@ -179,9 +185,9 @@ def bench_device_loop(arch: str, variant: str, *, slots: int, max_len: int,
     }
 
 
-def _subprocess_mesh_row(arch: str, shape: str, *, slots: int, max_len: int,
-                         requests: int, new_tokens: int,
-                         sync_every: int) -> dict:
+def _subprocess_mesh_row(arch: str, shape: str, *, backend: str = "einsum",
+                         slots: int, max_len: int, requests: int,
+                         new_tokens: int, sync_every: int) -> dict:
     """Measure a mesh shape needing more devices than this process has:
     re-exec this script with forced host devices (XLA device count is
     fixed at jax init, so it cannot change in-process)."""
@@ -196,7 +202,7 @@ def _subprocess_mesh_row(arch: str, shape: str, *, slots: int, max_len: int,
            "JAX_PLATFORMS": "cpu",
            "PYTHONPATH": src + os.pathsep + os.environ.get("PYTHONPATH", "")}
     cmd = [sys.executable, os.path.abspath(__file__),
-           "--one-mesh-row", shape, "--arch", arch,
+           "--one-mesh-row", shape, "--arch", arch, "--backend", backend,
            "--slots", str(slots), "--max-len", str(max_len),
            "--requests", str(requests), "--new-tokens", str(new_tokens),
            "--sync-every", str(sync_every)]
@@ -212,31 +218,49 @@ def _subprocess_mesh_row(arch: str, shape: str, *, slots: int, max_len: int,
 def bench_mesh_rows(arch: str, *, slots: int, max_len: int, requests: int,
                     new_tokens: int, sync_every: int,
                     have_rows: list[dict] | None = None) -> list[dict]:
-    """Latent/einsum load over engine mesh shapes (in-process when the
-    devices exist, forced-host subprocess otherwise).  Shapes already
+    """Latent load over engine mesh shapes x backends (in-process when
+    the devices exist, forced-host subprocess otherwise).  The pallas
+    rows run the shard_map kernel path (ring slices sharded over the
+    "model" axis, LSE-merged partial softmax) and record
+    ``speedup_vs_einsum`` against their einsum twin.  Rows already
     covered by ``have_rows`` are skipped — the variant matrix's own
-    latent/einsum row IS the 1x1 measurement (the engine's default mesh
-    is (1, 1)), so it is not re-run."""
+    latent rows ARE the 1x1 measurement (the engine's default mesh is
+    (1, 1)), so they are not re-run."""
     rows = []
     kw = dict(slots=slots, max_len=max_len, requests=requests,
               new_tokens=new_tokens, sync_every=sync_every)
+
+    def have(shape, backend):
+        for r in (have_rows or []) + rows:
+            if (r.get("mesh") == shape and r["variant"] == "latent"
+                    and r["backend"] == backend and not r.get("spec_depth")
+                    and r.get("cache_layout", "ring") == "ring"
+                    and not r.get("overlap") and not r.get("workload")):
+                return r
+        return None
+
     for shape in MESH_SHAPES:
-        if any(r.get("mesh") == shape and r["variant"] == "latent"
-               and r["backend"] == "einsum" and not r.get("spec_depth")
-               for r in have_rows or []):
-            continue
-        need = math.prod(int(v) for v in shape.split("x"))
-        t0 = time.time()
-        if need <= jax.local_device_count():
-            row = bench_engine(arch, "latent", "einsum", mesh_spec=shape,
-                               **kw)
-        else:
-            row = _subprocess_mesh_row(arch, shape, **kw)
-        row["bench_seconds"] = round(time.time() - t0, 1)
-        rows.append(row)
-        print(f"serving/latent/einsum/mesh={shape}: "
-              f"{row['tokens_per_s']:.1f} tok/s, "
-              f"{row['host_syncs_per_token']:.3f} syncs/tok")
+        for backend in ("einsum", "pallas"):
+            if have(shape, backend) is not None:
+                continue
+            need = math.prod(int(v) for v in shape.split("x"))
+            t0 = time.time()
+            if need <= jax.local_device_count():
+                row = bench_engine(arch, "latent", backend, mesh_spec=shape,
+                                   **kw)
+            else:
+                row = _subprocess_mesh_row(arch, shape, backend=backend,
+                                           **kw)
+            row["bench_seconds"] = round(time.time() - t0, 1)
+            if backend == "pallas":
+                base = have(shape, "einsum")
+                if base is not None and base["tokens_per_s"] > 0:
+                    row["speedup_vs_einsum"] = round(
+                        row["tokens_per_s"] / base["tokens_per_s"], 2)
+            rows.append(row)
+            print(f"serving/latent/{backend}/mesh={shape}: "
+                  f"{row['tokens_per_s']:.1f} tok/s, "
+                  f"{row['host_syncs_per_token']:.3f} syncs/tok")
     return rows
 
 
@@ -249,11 +273,17 @@ def bench_paged_rows(arch: str, *, slots: int, max_len: int, requests: int,
     rows = []
     common = dict(slots=slots, max_len=max_len, requests=requests,
                   new_tokens=new_tokens, sync_every=sync_every)
+    base = None
     for backend in ("einsum", "pallas"):
         t0 = time.time()
         row = bench_engine(arch, "latent", backend, cache_layout="paged",
                            **common)
         row["bench_seconds"] = round(time.time() - t0, 1)
+        if backend == "einsum":
+            base = row
+        elif base["tokens_per_s"] > 0:
+            row["speedup_vs_einsum"] = round(
+                row["tokens_per_s"] / base["tokens_per_s"], 2)
         rows.append(row)
         print(f"serving/latent/{backend}/paged: "
               f"{row['tokens_per_s']:.1f} tok/s, "
@@ -398,12 +428,18 @@ def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
         sync_every: int = 8, mesh_rows: bool = True) -> dict:
     rows = []
     for variant in VARIANTS:
+        base = None
         for backend in ("einsum", "pallas"):
             t0 = time.time()
             row = bench_engine(arch, variant, backend, slots=slots,
                                max_len=max_len, requests=requests,
                                new_tokens=new_tokens, sync_every=sync_every)
             row["bench_seconds"] = round(time.time() - t0, 1)
+            if backend == "einsum":
+                base = row
+            elif base["tokens_per_s"] > 0:
+                row["speedup_vs_einsum"] = round(
+                    row["tokens_per_s"] / base["tokens_per_s"], 2)
             rows.append(row)
             print(f"serving/{variant}/{backend}: "
                   f"{row['tokens_per_s']:.1f} tok/s, "
@@ -411,19 +447,29 @@ def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
                   f"cache {row['cache_bytes']/2**20:.2f} MiB")
     # speculative rows: the latent cache's halved footprint buys slots;
     # speculation spends them on step count — accept rate is the recorded
-    # trajectory (tokens/s on CPU interpret-ish models is a correctness
-    # trace; the ratio becomes a speed claim on real accelerators)
+    # trajectory.  Both backends run: the pallas rows drive the
+    # multi-query verify kernel (streams are token-identical to einsum,
+    # asserted in tests/test_verify_kernel.py); tokens/s on CPU interpret
+    # mode is a correctness trace whose ratio becomes a speed claim on
+    # real accelerators.
     for spec_depth, draft in SPEC_CONFIGS:
-        t0 = time.time()
-        row = bench_engine(arch, "latent", "einsum", slots=slots,
-                           max_len=max_len, requests=requests,
-                           new_tokens=new_tokens, sync_every=sync_every,
-                           spec_depth=spec_depth, draft=draft)
-        row["bench_seconds"] = round(time.time() - t0, 1)
-        rows.append(row)
-        print(f"serving/latent/einsum/spec={spec_depth}/{draft}: "
-              f"{row['tokens_per_s']:.1f} tok/s, "
-              f"accept rate {row['accept_rate']:.2f}")
+        base = None
+        for backend in ("einsum", "pallas"):
+            t0 = time.time()
+            row = bench_engine(arch, "latent", backend, slots=slots,
+                               max_len=max_len, requests=requests,
+                               new_tokens=new_tokens, sync_every=sync_every,
+                               spec_depth=spec_depth, draft=draft)
+            row["bench_seconds"] = round(time.time() - t0, 1)
+            if backend == "einsum":
+                base = row
+            elif base["tokens_per_s"] > 0:
+                row["speedup_vs_einsum"] = round(
+                    row["tokens_per_s"] / base["tokens_per_s"], 2)
+            rows.append(row)
+            print(f"serving/latent/{backend}/spec={spec_depth}/{draft}: "
+                  f"{row['tokens_per_s']:.1f} tok/s, "
+                  f"accept rate {row['accept_rate']:.2f}")
     rows += bench_paged_rows(arch, slots=slots, max_len=max_len,
                              requests=requests, new_tokens=new_tokens,
                              sync_every=sync_every)
@@ -474,6 +520,9 @@ def append_trajectory(entry: dict, out_path: str):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--backend", default="einsum",
+                    choices=("einsum", "pallas"),
+                    help="attention backend for --one-mesh-row")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=48)
     ap.add_argument("--requests", type=int, default=6)
@@ -488,8 +537,9 @@ def main(argv=None):
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args(argv)
     if args.one_mesh_row:
-        row = bench_engine(args.arch, "latent", "einsum", slots=args.slots,
-                           max_len=args.max_len, requests=args.requests,
+        row = bench_engine(args.arch, "latent", args.backend,
+                           slots=args.slots, max_len=args.max_len,
+                           requests=args.requests,
                            new_tokens=args.new_tokens,
                            sync_every=args.sync_every,
                            mesh_spec=args.one_mesh_row)

@@ -77,10 +77,33 @@ def attend_block(q, k, zv, cos, sin, bias, *, scale, s, qpk, dh,
     m_ref[:, 0] = m_new
 
 
+def split_out_refs(rest, return_lse):
+    """(mo_ref, lo_ref, m_ref, l_ref, acc_ref) from a kernel's trailing
+    refs: with ``return_lse`` the pallas_call has two extra outputs (the
+    running max and denominator) ahead of the VMEM scratch."""
+    if return_lse:
+        return rest
+    m_ref, l_ref, acc_ref = rest
+    return None, None, m_ref, l_ref, acc_ref
+
+
+def finish_tile(o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref):
+    """Write the finished output (and, for a partial-softmax caller, the
+    raw m/l state the cross-shard LSE merge needs).  A fully-masked row
+    finishes as exactly 0 (l == 0, acc == 0): under the merge it then
+    contributes weight l * exp(m - m_g) == 0."""
+    l = jnp.maximum(l_ref[:, :1], 1e-30)
+    o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+    if mo_ref is not None:
+        mo_ref[0, 0] = m_ref[...]
+        lo_ref[0, 0] = l_ref[...]
+
+
 def _kernel(q_ref, zk_ref, zv_ref, rk_ref, kn_ref, cos_ref, sin_ref, bias_ref,
-            o_ref, m_ref, l_ref, acc_ref, *, scale, s, qpk, dh, n_s,
-            apply_knorm, norm_eps):
+            o_ref, *rest, scale, s, qpk, dh, n_s,
+            apply_knorm, norm_eps, return_lse=False):
     i_s = pl.program_id(2)
+    mo_ref, lo_ref, m_ref, l_ref, acc_ref = split_out_refs(rest, return_lse)
 
     @pl.when(i_s == 0)
     def _init():
@@ -108,8 +131,7 @@ def _kernel(q_ref, zk_ref, zv_ref, rk_ref, kn_ref, cos_ref, sin_ref, bias_ref,
 
     @pl.when(i_s == n_s - 1)
     def _finish():
-        l = jnp.maximum(l_ref[:, :1], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        finish_tile(o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref)
 
 
 def pad_ring(bias: jax.Array, block_s: int, *arrays: jax.Array):
@@ -128,22 +150,47 @@ def pad_ring(bias: jax.Array, block_s: int, *arrays: jax.Array):
     return Sp, bias, *arrays
 
 
+def lse_outputs(B, G, rows, rv, dtype, return_lse, prefetch=False):
+    """(out_shape, out_specs) for a decode kernel: the finished (B, G,
+    rows, r_v) output plus — when ``return_lse`` — the raw (m, l) softmax
+    state as two (B, G, rows, 1) f32 outputs for a cross-shard merge."""
+    if prefetch:
+        def omap(b, g, i, pt):
+            return (b, g, 0, 0)
+    else:
+        def omap(b, g, i):
+            return (b, g, 0, 0)
+    shapes = [jax.ShapeDtypeStruct((B, G, rows, rv), dtype)]
+    specs = [pl.BlockSpec((1, 1, rows, rv), omap)]
+    if not return_lse:
+        return shapes[0], specs[0]
+    shapes += [jax.ShapeDtypeStruct((B, G, rows, 1), jnp.float32)] * 2
+    specs += [pl.BlockSpec((1, 1, rows, 1), omap)] * 2
+    return shapes, specs
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "block_s", "interpret", "norm_eps"),
+    static_argnames=("scale", "block_s", "interpret", "norm_eps",
+                     "return_lse"),
 )
 def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
                             scale: float, block_s: int = 256,
                             interpret: bool = False,
                             k_norm: jax.Array | None = None,
-                            norm_eps: float = 1e-6):
+                            norm_eps: float = 1e-6,
+                            return_lse: bool = False):
     """q: (B, G, Hg, dh); zk: (B, S, G, r_k); zv: (B, S, G, r_v);
     r_k: (G, r_k, s*dh); cos/sin: (B, S, dh/2); bias: (B, S).
     Returns (B, G, Hg, r_v) latent outputs (feed to the fused W~_o).
 
     ``k_norm`` (dh,), when given, applies per-head RMSNorm to the
     reconstructed keys before RoPE (qk-norm models).  S need not divide
-    ``block_s``: the tail tile is padded and masked internally."""
+    ``block_s``: the tail tile is padded and masked internally.
+    ``return_lse`` additionally returns the raw (m, l) online-softmax
+    state — (B, G, Hg, 1) f32 each — so a shard_map caller holding only a
+    sequence shard of the ring can LSE-merge partial outputs across
+    shards (the manual-axes analogue of the einsum path's psum pair)."""
     B, G, Hg, dh = q.shape
     rk = zk.shape[3]
     rv = zv.shape[3]
@@ -159,7 +206,8 @@ def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
     grid = (B, G, n_s)
     kernel = functools.partial(
         _kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s,
-        apply_knorm=apply_knorm, norm_eps=norm_eps)
+        apply_knorm=apply_knorm, norm_eps=norm_eps, return_lse=return_lse)
+    out_shape, out_specs = lse_outputs(B, G, Hg, rv, q.dtype, return_lse)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -173,12 +221,171 @@ def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
             pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
             pl.BlockSpec((1, bs), lambda b, g, i: (b, i)),
         ],
-        out_specs=pl.BlockSpec((1, 1, Hg, rv), lambda b, g, i: (b, g, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, G, Hg, rv), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((Hg, 1), jnp.float32),
             pltpu.VMEM((Hg, 1), jnp.float32),
             pltpu.VMEM((Hg, rv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, zk, zv, r_k, kn, cos, sin, bias)
+
+
+# ---------------------------------------------------------------------------
+# Multi-query variant: S = spec_depth + 1 verify queries in one pass
+# ---------------------------------------------------------------------------
+#
+# The verify step scores S consecutive queries (positions cur..cur+S-1)
+# against the ring plus an S-column causal self block.  Rather than a
+# second grid axis, the queries ride as extra ROWS: the q operand is
+# (B, G, S*Hg, dh) with rows ordered (query, group-slot, head), the
+# (m, l, acc) scratch grows to S*Hg rows, and the bias becomes per-query
+# (B, S, cols) — each query carries its own causal/window column mask, so
+# the joint softmax over [ring | self] matches kv_cache._joint_softmax at
+# the logit level (masks enter as additive -inf bias exactly like the
+# einsum reader's where(mask, logits, NEG_INF)).  The self block is
+# appended by the wrapper as S extra ring columns (the multi-query
+# generalization of the deferred-write self column).
+
+
+def attend_block_mq(q, k, zv, cos, sin, bias, *, scale, nq, s, qpk, dh,
+                    m_ref, l_ref, acc_ref):
+    """Multi-query online-softmax update over one reconstructed key tile.
+
+    q: (nq*s*qpk, dh) rows ordered (query, group-slot, head);
+    bias: (nq, Sb) — per-QUERY column mask.  Reduces to ``attend_block``
+    bit-for-bit at nq = 1 (same per-group-slot MXU matmuls, same running
+    (m, l, acc) update over nq*Hg rows)."""
+    half = dh // 2
+    c, si_ = cos[:, None, :], sin[:, None, :]          # (Sb, 1, dh/2)
+    k1, k2 = k[..., :half], k[..., half:]
+    kr = jnp.concatenate([k1 * c - k2 * si_, k2 * c + k1 * si_], axis=-1)
+
+    sb = k.shape[0]
+    qg = q.reshape(nq, s, qpk, dh)
+    scores = jnp.stack(
+        [(qg[:, i].reshape(nq * qpk, dh) @ kr[:, i, :].T).reshape(nq, qpk, sb)
+         for i in range(s)], axis=1
+    ) * scale                                          # (nq, s, qpk, Sb)
+    scores = scores + bias[:, None, None, :]
+    scores = scores.reshape(nq * s * qpk, sb)          # rows (query, slot, head)
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])               # (nq*Hg, Sb)
+    l_ref[:, 0] = l_prev * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ zv
+    m_ref[:, 0] = m_new
+
+
+def _mq_kernel(q_ref, zk_ref, zv_ref, rk_ref, kn_ref, cos_ref, sin_ref,
+               bias_ref, o_ref, *rest, scale, nq, s, qpk, dh, n_s,
+               apply_knorm, norm_eps, return_lse=False):
+    i_s = pl.program_id(2)
+    mo_ref, lo_ref, m_ref, l_ref, acc_ref = split_out_refs(rest, return_lse)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bias = bias_ref[0].astype(jnp.float32)             # (nq, Sb)
+
+    @pl.when(jnp.max(bias) > NEG_INF * 0.5)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (nq*Hg, dh)
+        zk = zk_ref[0, :, 0].astype(jnp.float32)
+        rk = rk_ref[0].astype(jnp.float32)
+        k = zk @ rk
+        sb = k.shape[0]
+        k = maybe_knorm(k.reshape(sb, s, dh), kn_ref, apply_knorm, norm_eps)
+        attend_block_mq(q, k, zv_ref[0, :, 0].astype(jnp.float32),
+                        cos_ref[0].astype(jnp.float32),
+                        sin_ref[0].astype(jnp.float32), bias,
+                        scale=scale, nq=nq, s=s, qpk=qpk, dh=dh,
+                        m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
+
+    @pl.when(i_s == n_s - 1)
+    def _finish():
+        finish_tile(o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref)
+
+
+def pad_ring_mq(bias: jax.Array, block_s: int, *arrays: jax.Array):
+    """Multi-query ``pad_ring``: bias is (B, nq, S) — padding applies to
+    the column axis 2 (and axis 1 of the data arrays)."""
+    S = bias.shape[2]
+    bs = min(block_s, S)
+    Sp = -(-S // bs) * bs
+    if Sp == S:
+        return S, bias, *arrays
+    bias = jnp.pad(bias, ((0, 0), (0, 0), (0, Sp - S)),
+                   constant_values=NEG_INF)
+    arrays = tuple(
+        jnp.pad(a, ((0, 0), (0, Sp - S)) + ((0, 0),) * (a.ndim - 2))
+        for a in arrays)
+    return Sp, bias, *arrays
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_s", "interpret", "norm_eps",
+                     "return_lse"),
+)
+def latent_decode_attention_mq(q, zk, zv, r_k, cos, sin, bias, *,
+                               scale: float, block_s: int = 256,
+                               interpret: bool = False,
+                               k_norm: jax.Array | None = None,
+                               norm_eps: float = 1e-6,
+                               return_lse: bool = False):
+    """Multi-query latent flash decode.
+
+    q: (B, G, nq*Hg, dh) with rows ordered (query, head) — nq verify
+    queries pre-rotated at their target positions; zk/zv: (B, S, G, r)
+    where S covers [ring | nq appended self columns]; bias: (B, nq, S)
+    per-query additive mask.  Returns (B, G, nq*Hg, r_v), plus the (m, l)
+    state when ``return_lse`` (see ``latent_decode_attention``)."""
+    B, G, QHg, dh = q.shape
+    nq = bias.shape[1]
+    Hg = QHg // nq
+    rk = zk.shape[3]
+    rv = zv.shape[3]
+    sdh = r_k.shape[-1]
+    s = sdh // dh
+    qpk = Hg // s
+    bs = min(block_s, bias.shape[2])
+    S, bias, zk, zv, cos, sin = pad_ring_mq(bias, block_s, zk, zv, cos, sin)
+    n_s = S // bs
+    half = dh // 2
+    apply_knorm, kn = knorm_operand(k_norm, dh)
+
+    grid = (B, G, n_s)
+    kernel = functools.partial(
+        _mq_kernel, scale=scale, nq=nq, s=s, qpk=qpk, dh=dh, n_s=n_s,
+        apply_knorm=apply_knorm, norm_eps=norm_eps, return_lse=return_lse)
+    out_shape, out_specs = lse_outputs(B, G, QHg, rv, q.dtype, return_lse)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, QHg, dh), lambda b, g, i: (b, g, 0, 0)),
+            pl.BlockSpec((1, bs, 1, rk), lambda b, g, i: (b, i, g, 0)),
+            pl.BlockSpec((1, bs, 1, rv), lambda b, g, i: (b, i, g, 0)),
+            pl.BlockSpec((1, rk, sdh), lambda b, g, i: (g, 0, 0)),
+            pl.BlockSpec((1, dh), lambda b, g, i: (0, 0)),
+            pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
+            pl.BlockSpec((1, bs, half), lambda b, g, i: (b, i, 0)),
+            pl.BlockSpec((1, nq, bs), lambda b, g, i: (b, 0, i)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((QHg, 1), jnp.float32),
+            pltpu.VMEM((QHg, 1), jnp.float32),
+            pltpu.VMEM((QHg, rv), jnp.float32),
         ],
         interpret=interpret,
     )(q, zk, zv, r_k, kn, cos, sin, bias)
@@ -204,9 +411,10 @@ def latent_decode_attention(q, zk, zv, r_k, cos, sin, bias, *,
 
 def _paged_kernel(ptab_ref, q_ref, zk_ref, zv_ref, zks_ref, zvs_ref, rk_ref,
                   kn_ref, cos_ref, sin_ref, bias_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, scale, s, qpk, dh, n_s,
-                  apply_knorm, norm_eps):
+                  *rest, scale, s, qpk, dh, n_s,
+                  apply_knorm, norm_eps, return_lse=False):
     i_s = pl.program_id(2)
+    mo_ref, lo_ref, m_ref, l_ref, acc_ref = split_out_refs(rest, return_lse)
 
     @pl.when(i_s == 0)
     def _init():
@@ -238,19 +446,19 @@ def _paged_kernel(ptab_ref, q_ref, zk_ref, zv_ref, zks_ref, zvs_ref, rk_ref,
 
     @pl.when(i_s == n_s - 1)
     def _finish():
-        l = jnp.maximum(l_ref[:, :1], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        finish_tile(o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "interpret", "norm_eps"),
+    static_argnames=("scale", "interpret", "norm_eps", "return_lse"),
 )
 def latent_decode_attention_paged(ptab, q, zk, zv, r_k, zk_self, zv_self,
                                   cos, sin, bias, *, scale: float,
                                   interpret: bool = False,
                                   k_norm: jax.Array | None = None,
-                                  norm_eps: float = 1e-6):
+                                  norm_eps: float = 1e-6,
+                                  return_lse: bool = False):
     """Paged-pool flash decode.
 
     ptab: (B, n_slot_pages) int32 page table (scalar-prefetched);
@@ -283,7 +491,9 @@ def latent_decode_attention_paged(ptab, q, zk, zv, r_k, zk_self, zv_self,
     grid = (B, G, n_s)
     kernel = functools.partial(
         _paged_kernel, scale=scale, s=s, qpk=qpk, dh=dh, n_s=n_s,
-        apply_knorm=apply_knorm, norm_eps=norm_eps)
+        apply_knorm=apply_knorm, norm_eps=norm_eps, return_lse=return_lse)
+    out_shape, out_specs = lse_outputs(B, G, Hg, rv, q.dtype, return_lse,
+                                       prefetch=True)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -299,8 +509,7 @@ def latent_decode_attention_paged(ptab, q, zk, zv, r_k, zk_self, zv_self,
             pl.BlockSpec((1, ps, half), lambda b, g, i, pt: (b, i, 0)),
             pl.BlockSpec((1, ps), lambda b, g, i, pt: (b, i)),
         ],
-        out_specs=pl.BlockSpec((1, 1, Hg, rv),
-                               lambda b, g, i, pt: (b, g, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((Hg, 1), jnp.float32),
             pltpu.VMEM((Hg, 1), jnp.float32),
@@ -309,6 +518,121 @@ def latent_decode_attention_paged(ptab, q, zk, zv, r_k, zk_self, zv_self,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, G, Hg, rv), q.dtype),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ptab, q, zk, zv, zk_self, zv_self, r_k, kn, cos, sin, bias)
+
+
+def _mq_paged_kernel(ptab_ref, q_ref, zk_ref, zv_ref, zks_ref, zvs_ref,
+                     rk_ref, kn_ref, cos_ref, sin_ref, bias_ref, o_ref,
+                     *rest, scale, nq, s, qpk, dh, n_sp, n_s,
+                     apply_knorm, norm_eps, return_lse=False):
+    i_s = pl.program_id(2)
+    mo_ref, lo_ref, m_ref, l_ref, acc_ref = split_out_refs(rest, return_lse)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bias = bias_ref[0].astype(jnp.float32)             # (nq, ps)
+    is_self = i_s >= n_sp
+
+    @pl.when(jnp.max(bias) > NEG_INF * 0.5)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (nq*Hg, dh)
+        zk = jnp.where(is_self, zks_ref[0, :, 0],
+                       zk_ref[0, :, 0]).astype(jnp.float32)
+        zv = jnp.where(is_self, zvs_ref[0, :, 0],
+                       zv_ref[0, :, 0]).astype(jnp.float32)
+        rk = rk_ref[0].astype(jnp.float32)
+        k = zk @ rk
+        sb = k.shape[0]
+        k = maybe_knorm(k.reshape(sb, s, dh), kn_ref, apply_knorm, norm_eps)
+        attend_block_mq(q, k, zv, cos_ref[0].astype(jnp.float32),
+                        sin_ref[0].astype(jnp.float32), bias,
+                        scale=scale, nq=nq, s=s, qpk=qpk, dh=dh,
+                        m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
+
+    @pl.when(i_s == n_s - 1)
+    def _finish():
+        finish_tile(o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "interpret", "norm_eps", "return_lse"),
+)
+def latent_decode_attention_mq_paged(ptab, q, zk, zv, r_k, zk_self, zv_self,
+                                     cos, sin, bias, *, scale: float,
+                                     interpret: bool = False,
+                                     k_norm: jax.Array | None = None,
+                                     norm_eps: float = 1e-6,
+                                     return_lse: bool = False):
+    """Multi-query paged flash decode.
+
+    Same pool/page-table contract as ``latent_decode_attention_paged``;
+    the differences are multi-query: q is (B, G, nq*Hg, dh) rows ordered
+    (query, head); zk_self/zv_self are (B, n_self_tiles*page_size, G, r)
+    with the first nq rows holding the deferred verify-window latents
+    (n_self_tiles = ceil(nq / page_size) — usually 1); bias is
+    (B, nq, (n_slot_pages + n_self_tiles)*page_size) per-query columns.
+    The grid walks slot pages then self tiles; on self steps the pool DMA
+    is clamped/ignored and the resident self tile attends instead."""
+    B, n_sp = ptab.shape
+    ps = zk.shape[1]
+    _, G, QHg, dh = q.shape
+    nq = bias.shape[1]
+    Hg = QHg // nq
+    rk = zk.shape[3]
+    rv = zv.shape[3]
+    sdh = r_k.shape[-1]
+    s = sdh // dh
+    qpk = Hg // s
+    half = dh // 2
+    apply_knorm, kn = knorm_operand(k_norm, dh)
+    n_st = zk_self.shape[1] // ps        # self tiles (>= ceil(nq/ps))
+    n_s = n_sp + n_st
+
+    def pool_map(b, g, i, pt):
+        return (pt[b, jnp.minimum(i, n_sp - 1)], 0, g, 0)
+
+    def self_map(b, g, i, pt):
+        # Before the self region this indexes tile 0 (DMA'd but unused).
+        return (b, jnp.maximum(i - n_sp, 0), g, 0)
+
+    grid = (B, G, n_s)
+    kernel = functools.partial(
+        _mq_paged_kernel, scale=scale, nq=nq, s=s, qpk=qpk, dh=dh,
+        n_sp=n_sp, n_s=n_s, apply_knorm=apply_knorm, norm_eps=norm_eps,
+        return_lse=return_lse)
+    out_shape, out_specs = lse_outputs(B, G, QHg, rv, q.dtype, return_lse,
+                                       prefetch=True)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, QHg, dh), lambda b, g, i, pt: (b, g, 0, 0)),
+            pl.BlockSpec((1, ps, 1, rk), pool_map),
+            pl.BlockSpec((1, ps, 1, rv), pool_map),
+            pl.BlockSpec((1, ps, 1, rk), self_map),
+            pl.BlockSpec((1, ps, 1, rv), self_map),
+            pl.BlockSpec((1, rk, sdh), lambda b, g, i, pt: (g, 0, 0)),
+            pl.BlockSpec((1, dh), lambda b, g, i, pt: (0, 0)),
+            pl.BlockSpec((1, ps, half), lambda b, g, i, pt: (b, i, 0)),
+            pl.BlockSpec((1, ps, half), lambda b, g, i, pt: (b, i, 0)),
+            pl.BlockSpec((1, nq, ps), lambda b, g, i, pt: (b, 0, i)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((QHg, 1), jnp.float32),
+            pltpu.VMEM((QHg, 1), jnp.float32),
+            pltpu.VMEM((QHg, rv), jnp.float32),
+        ])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         interpret=interpret,
     )(ptab, q, zk, zv, zk_self, zv_self, r_k, kn, cos, sin, bias)

@@ -286,10 +286,25 @@ def _two_part_softmax(logits_c: jax.Array, logits_s: jax.Array):
     return e_c / denom, e_s / denom
 
 
+def pallas_fallback_kinds(cfg: ModelConfig) -> list[str]:
+    """Layer kinds that take the einsum path even under
+    ``attn_backend="pallas"``: absorbed-MLA readers score in the c_kv
+    latent space (no kernel), and cross-attention reads a static encoder
+    cache (einsum only; "attn_cross" layers fall back for their cross
+    half).  Mixer kinds (mamba/rglru) have no attention and don't count.
+    The engine warns once when this list is non-empty so a requested
+    kernel backend never degrades silently."""
+    kinds = sorted(set(cfg.expanded_layers()))
+    attn = [k for k in kinds if k not in ("mamba", "rglru")]
+    if cfg.mla is not None:
+        return attn
+    return [k for k in attn if k in ("cross", "attn_cross")]
+
+
 def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
                       cur: jax.Array, window: int | None,
                       theta: float | None = None,
-                      pages: tuple | None = None):
+                      pages: tuple | None = None, mesh=None):
     """Dense decode with DEFERRED cache writes (§Perf iteration 3).
 
     The new token's K/V enter the softmax as an explicit self column; the
@@ -321,11 +336,12 @@ def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
         if pages is not None:
             o = kops.dense_decode_paged(
                 q[:, 0], cache, pages[0], cur, window=window, scale=scale,
-                self_entry={"k": k_new, "v": v_new})
+                self_entry={"k": k_new, "v": v_new}, mesh=mesh)
         else:
             o = kops.dense_decode(q[:, 0], cache, cur, window=window,
                                   scale=scale, block_s=cfg.attn_block,
-                                  self_entry={"k": k_new, "v": v_new})
+                                  self_entry={"k": k_new, "v": v_new},
+                                  mesh=mesh)
         y = o.astype(x.dtype).reshape(B, 1, H * dh) @ p["wo"]
         return y, updates
 
@@ -347,7 +363,7 @@ def decode_attn_dense(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
 def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
                        cur: jax.Array, window: int | None,
                        theta: float | None = None,
-                       pages: tuple | None = None):
+                       pages: tuple | None = None, mesh=None):
     """ReCalKV decode: reconstruct keys from the latent ring, RoPE by stored
     positions, keep values latent, project through the fused W~_o.
     Deferred-write form (see decode_attn_dense)."""
@@ -385,12 +401,12 @@ def decode_attn_latent(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig,
             o_lat = kops.latent_decode_paged(
                 q[:, 0], cache, pages[0], p["r_k"], cur, theta=theta,
                 window=window, scale=scale, self_entry=entry,
-                k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps)
+                k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps, mesh=mesh)
         else:
             o_lat = kops.latent_decode(
                 q[:, 0], cache, p["r_k"], cur, theta=theta, window=window,
                 scale=scale, block_s=cfg.attn_block, self_entry=entry,
-                k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps)
+                k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps, mesh=mesh)
         o_lat = o_lat.astype(x.dtype).reshape(B, 1, H, -1)
         y = jnp.einsum("bthr,hrd->btd", o_lat, p["wo_fused"])
         return y, updates
@@ -524,11 +540,10 @@ def verify_attn_dense(p: Params, x: jax.Array, cache: Params,
                       cfg: ModelConfig, cur: jax.Array,
                       feed_mask: jax.Array, window: int | None,
                       theta: float | None = None,
-                      pages: tuple | None = None):
+                      pages: tuple | None = None, mesh=None):
     """Dense S-token verify.  Returns (y (B, S, d), deferred updates with
-    (B, S, ...) entry leaves — committed by the caller per accept mask).
-    Always the einsum path: the pallas kernels are single-query."""
-    if pages is not None:
+    (B, S, ...) entry leaves — committed by the caller per accept mask)."""
+    if pages is not None and cfg.attn_backend != "pallas":
         cache = paged_view(cache, *pages)
     B, S = x.shape[:2]
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
@@ -538,14 +553,32 @@ def verify_attn_dense(p: Params, x: jax.Array, cache: Params,
     v_new = (x @ p["wv"]).reshape(B, S, Hkv, dh)
     q = L.maybe_head_norm(q, p.get("q_norm"), cfg.norm_eps)
     k_new = L.maybe_head_norm(k_new, p.get("k_norm"), cfg.norm_eps)
-    pos_q, ring_m, self_m = _verify_masks(cache["pos"], cur, S, feed_mask,
-                                          window)
+    pos_q = cur[:, None] + jnp.arange(S, dtype=cur.dtype)[None, :]
     cos, sin = L.rope_tables(pos_q, dh, theta or cfg.rope_theta)
     q = L.apply_rope(q, cos, sin)
     k_new = L.apply_rope(k_new, cos, sin)
 
     scale = dh ** -0.5
+    updates = {"k": k_new, "v": v_new, "pos": pos_q.astype(jnp.int32)}
+    if cfg.attn_backend == "pallas":
+        # Multi-query kernel: all S verify queries score [ring | causal
+        # self block] in one pass; q and k_new arrive post-RoPE at pos_q,
+        # matching the identity-rotation dense kernel contract.
+        entries = {"k": k_new, "v": v_new}
+        if pages is not None:
+            o = kops.dense_decode_mq_paged(
+                q, cache, pages[0], cur, feed_mask, entries, window=window,
+                scale=scale, mesh=mesh)
+        else:
+            o = kops.dense_decode_mq(
+                q, cache, cur, feed_mask, entries, window=window,
+                scale=scale, block_s=cfg.attn_block, mesh=mesh)
+        y = o.astype(x.dtype).reshape(B, S, H * dh) @ p["wo"]
+        return y, updates
+
     qr = q.reshape(B, S, Hkv, g, dh)
+    _, ring_m, self_m = _verify_masks(cache["pos"], cur, S, feed_mask,
+                                      window)
     k_c = cache["k"].astype(x.dtype)
     logits_c = (jnp.einsum("bjkgd,bskd->bkgjs", qr, k_c)
                 .astype(jnp.float32) * scale)
@@ -558,19 +591,24 @@ def verify_attn_dense(p: Params, x: jax.Array, cache: Params,
     o = (jnp.einsum("bkgjs,bskd->bjkgd", w_c, cache["v"].astype(x.dtype))
          + jnp.einsum("bkgjn,bnkd->bjkgd", w_s, v_new))
     y = o.reshape(B, S, H * dh) @ p["wo"]
-    return y, {"k": k_new, "v": v_new, "pos": pos_q.astype(jnp.int32)}
+    return y, updates
 
 
 def verify_attn_latent(p: Params, x: jax.Array, cache: Params,
                        cfg: ModelConfig, cur: jax.Array,
                        feed_mask: jax.Array, window: int | None,
                        theta: float | None = None,
-                       pages: tuple | None = None):
+                       pages: tuple | None = None, mesh=None):
     """ReCalKV S-token verify (see verify_attn_dense): cached keys are
     reconstructed and RoPE'd by stored position, fresh latents enter as a
     causal self block, values stay latent through the fused W~_o."""
-    if pages is not None:
+    if pages is not None and not (cfg.attn_backend == "pallas"
+                                  and cfg.cache_quant_bits is None):
+        # Same gating as decode_attn_latent: einsum and int8-kernel paths
+        # read the gathered slot-major view; only the float-latent kernel
+        # gathers pages in-kernel.
         cache = paged_view(cache, *pages)
+        pages = None
     theta = theta or cfg.rope_theta
     B, S = x.shape[:2]
     H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
@@ -580,15 +618,35 @@ def verify_attn_latent(p: Params, x: jax.Array, cache: Params,
     g = H // Hkv
     q = (x @ p["wq"]).reshape(B, S, H, dh)
     q = L.maybe_head_norm(q, p.get("q_norm"), cfg.norm_eps)
-    pos_q, ring_m, self_m = _verify_masks(cache["pos"], cur, S, feed_mask,
-                                          window)
+    pos_q = cur[:, None] + jnp.arange(S, dtype=cur.dtype)[None, :]
     cos_q, sin_q = L.rope_tables(pos_q, dh, theta)
     q = L.apply_rope(q, cos_q, sin_q)
-    qr = q.reshape(B, S, Hkv, g, dh)
 
     zk_new = jnp.einsum("bjd,gdr->bjgr", x, p["l_k"]).astype(x.dtype)
     zv_new = jnp.einsum("bjd,gdr->bjgr", x, p["l_v"]).astype(x.dtype)
     entry = latent_cache_entry(cfg, zk_new, zv_new)
+    scale = dh ** -0.5
+    if cfg.attn_backend == "pallas":
+        # Multi-query kernel: fresh latents ride as S appended self
+        # columns (reconstructed + RoPE'd at pos_q in-kernel, including
+        # the int8 quantize-then-dequantize round-trip).
+        if pages is not None:
+            o_lat = kops.latent_decode_mq_paged(
+                q, cache, pages[0], p["r_k"], cur, feed_mask, entry,
+                theta=theta, window=window, scale=scale,
+                k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps, mesh=mesh)
+        else:
+            o_lat = kops.latent_decode_mq(
+                q, cache, p["r_k"], cur, feed_mask, entry, theta=theta,
+                window=window, scale=scale, block_s=cfg.attn_block,
+                k_norm=p.get("k_norm"), norm_eps=cfg.norm_eps, mesh=mesh)
+        o_lat = o_lat.astype(x.dtype).reshape(B, S, H, -1)
+        y = jnp.einsum("bjhr,hrd->bjd", o_lat, p["wo_fused"])
+        return y, {**entry, "pos": pos_q.astype(jnp.int32)}
+
+    qr = q.reshape(B, S, Hkv, g, dh)
+    _, ring_m, self_m = _verify_masks(cache["pos"], cur, S, feed_mask,
+                                      window)
     zk_c, zv_c = latent_cache_arrays(cache, x.dtype)
     zk_self, zv_self = latent_cache_arrays(entry, x.dtype)
 
@@ -600,7 +658,6 @@ def verify_attn_latent(p: Params, x: jax.Array, cache: Params,
     k_self = L.maybe_head_norm(k_self, p.get("k_norm"), cfg.norm_eps)
     k_self = L.apply_rope(k_self, cos_q, sin_q)             # (B, S, Hkv, dh)
 
-    scale = dh ** -0.5
     logits_c = (jnp.einsum("bjkgd,bskd->bkgjs", qr, k)
                 .astype(jnp.float32) * scale)
     logits_c = jnp.where(ring_m[:, None, None], logits_c, NEG_INF)

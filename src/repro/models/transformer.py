@@ -361,16 +361,19 @@ def block_decode(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
 
     window = cfg.window_for(kind)
     pages = ctx.get("pages")
+    mesh = ctx.get("mesh")
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla is not None:
         y, sc = KC.decode_attn_mla(p["attn"], h, cache["self"], cfg, cur,
                                    pages=pages)
     elif cfg.recalkv is not None:
         y, sc = KC.decode_attn_latent(p["attn"], h, cache["self"], cfg, cur, window,
-                                      theta=_theta(cfg, kind), pages=pages)
+                                      theta=_theta(cfg, kind), pages=pages,
+                                      mesh=mesh)
     else:
         y, sc = KC.decode_attn_dense(p["attn"], h, cache["self"], cfg, cur, window,
-                                     theta=_theta(cfg, kind), pages=pages)
+                                     theta=_theta(cfg, kind), pages=pages,
+                                     mesh=mesh)
     x = x + y
     updates = {"self": sc}
 
@@ -422,6 +425,7 @@ def block_verify(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
 
     window = cfg.window_for(kind)
     pages = ctx.get("pages")
+    mesh = ctx.get("mesh")
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla is not None:
         y, sc = KC.verify_attn_mla(p["attn"], h, cache["self"], cfg, cur,
@@ -429,11 +433,13 @@ def block_verify(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
     elif cfg.recalkv is not None:
         y, sc = KC.verify_attn_latent(p["attn"], h, cache["self"], cfg, cur,
                                       feed_mask, window,
-                                      theta=_theta(cfg, kind), pages=pages)
+                                      theta=_theta(cfg, kind), pages=pages,
+                                      mesh=mesh)
     else:
         y, sc = KC.verify_attn_dense(p["attn"], h, cache["self"], cfg, cur,
                                      feed_mask, window,
-                                     theta=_theta(cfg, kind), pages=pages)
+                                     theta=_theta(cfg, kind), pages=pages,
+                                     mesh=mesh)
     x = x + y
     updates = {"self": sc}
 
@@ -656,17 +662,19 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
 def decode_step(cfg: ModelConfig, params: Params, caches: Params,
                 tokens: jax.Array, cur: jax.Array,
                 active: jax.Array | None = None, *,
-                cache_shardings=None, pages=None):
+                cache_shardings=None, pages=None, mesh=None):
     """One decode step.  tokens: (B,) int32, cur: (B,) absolute positions.
     ``active`` (B,) bool masks cache writes for idle batch rows (serving
     slots between requests).  ``cache_shardings`` (optional NamedSharding
     tree matching ``caches``) pins the updated cache's layout so a fused
     multi-step loop never reshards its carry mid-scan.  ``pages``
     (ptab (B, n_slot_pages) int32, page_size) switches reads and the
-    deferred write to the page-major pool layout.  Returns
+    deferred write to the page-major pool layout.  ``mesh`` (closure
+    capture, never a traced argument) lets the pallas decode readers run
+    under shard_map over the mesh's "model" axis.  Returns
     (logits (B, V), new caches)."""
     x = embed_tokens(cfg, params, tokens[:, None])
-    ctx = {"cur": cur, "pages": pages}
+    ctx = {"cur": cur, "pages": pages, "mesh": mesh}
     x, updates, _ = run_stack(cfg, params, x, ctx, caches=caches, decode=True)
     caches = KC.apply_decode_writes(caches, updates, cur, active, pages=pages)
     caches = KC.constrain_caches(caches, cache_shardings)
@@ -676,7 +684,7 @@ def decode_step(cfg: ModelConfig, params: Params, caches: Params,
 
 def verify_step(cfg: ModelConfig, params: Params, caches: Params,
                 tokens: jax.Array, cur: jax.Array, feed_mask: jax.Array,
-                pages=None):
+                pages=None, mesh=None):
     """Speculative-decoding target verification: logits for S fed tokens
     in ONE pass (one weight/cache read amortized over S positions — the
     step-count lever low-rank caches leave on the table).
@@ -692,7 +700,7 @@ def verify_step(cfg: ModelConfig, params: Params, caches: Params,
     the ring then never sees a rejected token.  Returns
     (logits (B, S, V) float32, updates)."""
     x = embed_tokens(cfg, params, jnp.maximum(tokens, 0))
-    ctx = {"cur": cur, "feed_mask": feed_mask, "pages": pages}
+    ctx = {"cur": cur, "feed_mask": feed_mask, "pages": pages, "mesh": mesh}
     x, updates, _ = run_stack(cfg, params, x, ctx, caches=caches,
                               decode=True, verify=True)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)

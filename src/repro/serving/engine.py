@@ -257,6 +257,28 @@ class Engine:
         self.draft = (parsed_draft or DraftSpec("ngram")
                       if spec_depth > 0 else None)
         self.mesh = mesh if mesh is not None else single_device_mesh()
+        # Backend telemetry + loud fallback: a requested pallas backend
+        # still routes some layer kinds through einsum (absorbed-MLA
+        # attention, cross-attention halves) — warn once so
+        # backend="pallas" is never silently a no-op, and record what
+        # the decode/verify steps will actually run for metrics().
+        if cfg.attn_backend == "pallas":
+            fallback = KC.pallas_fallback_kinds(cfg)
+            if fallback:
+                warnings.warn(
+                    f"backend='pallas': layer kinds {fallback} have no "
+                    f"pallas decode kernel and fall back to einsum",
+                    RuntimeWarning, stacklevel=2)
+        n_seq_shards = R.kernel_seq_shards(self.mesh)
+        seq_cols = page_size if page_size is not None else max_len
+        self._decode_kernel_sharded = bool(
+            cfg.attn_backend == "pallas" and cfg.mla is None
+            and n_seq_shards > 1 and seq_cols % n_seq_shards == 0)
+        self._verify_backend = (
+            None if spec_depth == 0
+            else "pallas" if (cfg.attn_backend == "pallas"
+                              and cfg.mla is None)
+            else "einsum")
         # slots-per-shard admission locality: only meaningful when the
         # slot axis actually shards (divisible); else one logical shard
         n_slot_shards = math.prod(
@@ -411,7 +433,8 @@ class Engine:
             window_fn = self._make_window(
                 cfg, max_len, sync_every,
                 cache_shardings=self._cache_shardings,
-                logits_spec=logits_spec, page_size=self.page_size)
+                logits_spec=logits_spec, page_size=self.page_size,
+                mesh=self.mesh)
             donate = (1,)
         else:
             window_fn = self._make_spec_window(
@@ -419,7 +442,8 @@ class Engine:
                 draft_cfg=self._draft_cfg,
                 cache_shardings=self._cache_shardings,
                 draft_cache_shardings=self._draft_cache_shardings,
-                logits_spec=logits_spec, page_size=self.page_size)
+                logits_spec=logits_spec, page_size=self.page_size,
+                mesh=self.mesh)
             donate = (2, 3) if self.draft_cache is not None else (1,)
         if jax.default_backend() == "cpu":
             donate = ()
@@ -499,7 +523,7 @@ class Engine:
     @staticmethod
     def _make_window(cfg: ModelConfig, max_len: int, steps: int, *,
                      cache_shardings=None, logits_spec=None,
-                     page_size: int | None = None):
+                     page_size: int | None = None, mesh=None):
         """Build the jitted window fn: ``steps`` fused decode iterations.
 
         Per iteration, per slot: pick the fed token (ingest buffer while
@@ -530,7 +554,8 @@ class Engine:
                          if page_size is not None else None)
                 logits, cache = T.decode_step(
                     cfg, params, cache, tok_in, st["cur"], stepping,
-                    cache_shardings=cache_shardings, pages=pages)
+                    cache_shardings=cache_shardings, pages=pages,
+                    mesh=mesh)
                 ks = jax.vmap(lambda k: jax.random.split(k, 2))(st["keys"])
                 sampled = S.sample_tokens(logits, st["temp"], st["top_k"],
                                           st["top_p"], ks[:, 1],
@@ -568,7 +593,8 @@ class Engine:
     def _make_spec_window(cfg: ModelConfig, max_len: int, steps: int,
                           depth: int, *, draft: DraftSpec, draft_cfg=None,
                           cache_shardings=None, draft_cache_shardings=None,
-                          logits_spec=None, page_size: int | None = None):
+                          logits_spec=None, page_size: int | None = None,
+                          mesh=None):
         """Build the jitted speculative window: ``steps`` iterations, each
         verifying up to ``depth`` draft tokens in ONE target pass.
 
@@ -614,7 +640,7 @@ class Engine:
                              else speculating & cap_ok[:, j])
                     dlogits, dcache = T.decode_step(
                         draft_cfg, dparams, dcache, d_tok, d_cur, act_j,
-                        cache_shardings=draft_cache_shardings)
+                        cache_shardings=draft_cache_shardings, mesh=mesh)
                     d_cur = d_cur + act_j.astype(d_cur.dtype)
                     if j < depth:
                         d_tok = jnp.argmax(dlogits, -1).astype(jnp.int32)
@@ -633,7 +659,7 @@ class Engine:
             pages = ((st["ptab"], page_size)
                      if page_size is not None else None)
             logits, updates = T.verify_step(cfg, params, cache, fed, cur,
-                                            cand, pages=pages)
+                                            cand, pages=pages, mesh=mesh)
             last_prompt = (feeding & ~st["more"]
                            & (st["bpos"] + 1 >= st["avail"]))
 
@@ -1446,6 +1472,9 @@ class Engine:
             "pages_peak": 0 if pool is None else pool.peak_used,
             "cow_forks": 0 if pool is None else pool.cow_forks,
             "mesh": self.mesh_str,
+            "backend": self.cfg.attn_backend,
+            "verify_backend": self._verify_backend,
+            "decode_kernel_sharded": self._decode_kernel_sharded,
             "spec_depth": self.spec_depth,
             "draft": (None if self.draft is None else
                       (self.draft.kind if self.draft.kind == "ngram"

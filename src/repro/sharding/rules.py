@@ -99,6 +99,62 @@ def batch_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 
 
+# ---------------------------------------------------------------------------
+# Manual-axes (shard_map) specs for the Pallas decode kernels
+# ---------------------------------------------------------------------------
+#
+# Under pjit, CACHE_RULES shards the ring slot x sequence and XLA derives
+# the einsum readers' collectives automatically — but a pallas_call is
+# opaque to the SPMD partitioner, so the kernel path runs it per-shard
+# under a FULL-manual ``shard_map`` and merges the partial softmaxes by
+# hand (pmax/psum LSE merge over "model").  These helpers produce the
+# in/out PartitionSpecs for that call so they cannot drift from
+# CACHE_RULES: ring leaves (B, L, ...) split exactly like the resident
+# cache (slot over the batch axes, sequence over "model"), slot-major
+# carry leaves (B, ...) split on the slot dim only, and paged pool
+# leaves (n_pages, page_size, ...) keep the page dim whole on every
+# shard (the page table holds global page ids) while the in-page offset
+# splits over "model".
+
+
+def kernel_seq_shards(mesh: Mesh | None) -> int:
+    """How many ways the kernel ring's sequence axis shards ("model")."""
+    if mesh is None or "model" not in mesh.shape:
+        return 1
+    return int(mesh.shape["model"])
+
+
+def kernel_batch_axes(mesh: Mesh, n: int):
+    """Batch-dim axes for a manual-axes kernel call: the ("pod", "data")
+    product when it divides ``n``, else None (replicated batch)."""
+    names = batch_axes(mesh)
+    total = math.prod(mesh.shape[a] for a in names)
+    if not names or total <= 1 or n % total:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def kernel_slot_spec(leaf, batch) -> P:
+    """(B, ...) slot-major operand: slot dim over ``batch``, rest whole."""
+    return P(batch, *([None] * (leaf.ndim - 1)))
+
+
+def kernel_ring_spec(leaf, batch) -> P:
+    """(B, L, ...) ring leaf: slot over ``batch``, sequence over "model"."""
+    return P(batch, "model", *([None] * (leaf.ndim - 2)))
+
+
+def kernel_pool_spec(leaf) -> P:
+    """(n_pages, page_size, ...) pool leaf: pages whole per shard (global
+    page ids stay valid everywhere), in-page offset over "model"."""
+    return P(None, "model", *([None] * (leaf.ndim - 2)))
+
+
+def kernel_repl_spec(leaf) -> P:
+    """Fully replicated operand (factors, norms, scalars)."""
+    return P(*([None] * leaf.ndim))
+
+
 def _path_names(path) -> list[str]:
     out = []
     for p in path:

@@ -244,9 +244,10 @@ class TestDepthInvariance:
         assert serve(spec_depth=4, draft="ngram") == ref
 
     def test_pallas_backend_streams_invariant(self, models):
-        """With the pallas decode kernels serving the sequential path,
-        verify always takes the (einsum) multi-query path — streams must
-        still be depth-invariant within the backend."""
+        """With the pallas kernels serving BOTH paths — single-query
+        decode and the multi-query verify kernel — streams must still be
+        depth-invariant within the backend (einsum-vs-pallas parity per
+        depth lives in tests/test_verify_kernel.py)."""
         cfg, params = models["latent"]
         cfg = dataclasses.replace(cfg, attn_backend="pallas")
         prompts = _prompts(cfg, n=3)

@@ -1,0 +1,221 @@
+"""Multi-query verify kernel parity: ``backend="pallas"`` must be a pure
+perf knob for speculative serving.
+
+The pallas verify path scores all S = spec_depth + 1 queries against
+[ring | causal self block] in ONE kernel pass with a joint softmax that
+matches the einsum reader's ``_joint_softmax`` at the logit level — so
+verify logits agree to float32 rounding and served token streams are
+TOKEN-FOR-TOKEN equal to the einsum backend, across cache variants
+(dense / latent / int8-latent), layouts (ring / paged), depths, and
+meshes.  On a forced multi-device host (``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``) the kernels additionally run
+under shard_map over the mesh's "model" axis (per-shard partial softmax,
+LSE merge); with fewer devices those tests skip via
+``make_test_mesh(skip=True)``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.models import transformer as T
+from repro.serving import Engine, Request
+
+KEY = jax.random.PRNGKey(0)
+
+CASES = {
+    "dense": {},
+    "latent": {"recalkv_ratio": 0.5},
+    "int8_latent": {"recalkv_ratio": 0.5, "cache_quant_bits": 8},
+}
+
+
+def _model(case):
+    extra = dict(CASES[case])
+    kw = {k: extra.pop(k) for k in ("recalkv_ratio",) if k in extra}
+    cfg = get_config("qwen3-4b", smoke=True, **kw)
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32, **extra)
+    return cfg, T.init_params(cfg, KEY)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {case: _model(case) for case in CASES}
+
+
+@pytest.fixture(scope="module")
+def mesh24():
+    return make_test_mesh(2, 4, skip=True)
+
+
+def _prompts(cfg, n=4, seed=3):
+    g = np.random.default_rng(seed)
+    return [g.integers(0, cfg.vocab_size, 5 + 2 * i).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve(cfg, params, prompts, max_new=6, max_len=40, **kw):
+    eng = Engine(cfg, params, max_slots=4, max_len=max_len, **kw)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=max_new))
+    eng.run()
+    return {r.uid: r.out_tokens for r in eng.finished}, eng
+
+
+class TestVerifyStepLogits:
+    """T.verify_step pallas vs einsum at the logit level, including a
+    feed-masked column (the masked column's logits are garbage on both
+    paths and excluded)."""
+
+    @pytest.mark.parametrize("depth", [2, 4])
+    @pytest.mark.parametrize("case", list(CASES))
+    def test_logits_match_einsum(self, models, case, depth):
+        cfg, params = models[case]
+        cfg_p = dataclasses.replace(cfg, attn_backend="pallas")
+        rng = np.random.default_rng(7)
+        B, P, S = 2, 6, depth + 1
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)),
+                           jnp.int32)
+        lens = jnp.asarray([P, 4], jnp.int32)
+        _, caches = T.prefill(cfg, params, toks, lens, 37)
+        cur = lens.astype(jnp.int32)
+        fed = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                          jnp.int32)
+        fm = jnp.ones((B, S), bool).at[1, S - 1].set(False)
+        lg_e, _ = T.verify_step(cfg, params, caches, fed, cur, fm)
+        lg_p, _ = T.verify_step(cfg_p, params, caches, fed, cur, fm)
+        diff = float(jnp.max(jnp.abs(lg_e - lg_p) * fm[..., None]))
+        assert diff < 2e-5, f"verify logits diverge: {diff}"
+        tok_e = jnp.argmax(lg_e, -1)
+        tok_p = jnp.argmax(lg_p, -1)
+        assert bool(jnp.all(jnp.where(fm, tok_e == tok_p, True)))
+
+
+class TestServingStreamParity:
+    """Engine streams: every (variant, layout, depth) pallas stream must
+    equal its einsum twin token for token."""
+
+    @pytest.mark.parametrize("depth", [2, 4])
+    @pytest.mark.parametrize("layout", ["ring", "paged"])
+    @pytest.mark.parametrize("case", list(CASES))
+    def test_stream_matches_einsum(self, models, case, layout, depth):
+        cfg, params = models[case]
+        prompts = _prompts(cfg)
+        kw = ({"cache_layout": "paged", "page_size": 8}
+              if layout == "paged" else {})
+        base, _ = _serve(cfg, params, prompts, spec_depth=depth,
+                         draft="ngram", **kw)
+        got, eng = _serve(cfg, params, prompts, spec_depth=depth,
+                          draft="ngram", backend="pallas", **kw)
+        assert got == base
+        m = eng.metrics()
+        assert m["verify_backend"] == "pallas"
+        assert m["backend"] == "pallas"
+
+    def test_layer_draft_stream_matches_einsum(self, models):
+        """The layer-fraction draft drives extra pallas decode_steps on
+        its own ring; the composed round must stay einsum-identical."""
+        cfg, params = models["latent"]
+        prompts = _prompts(cfg)
+        base, _ = _serve(cfg, params, prompts, spec_depth=2,
+                         draft="layers:2")
+        got, _ = _serve(cfg, params, prompts, spec_depth=2,
+                        draft="layers:2", backend="pallas")
+        assert got == base
+
+
+class TestMeshStreamParity:
+    """The shard_map kernel path on a (2, 4) forced-host mesh must emit
+    the single-device einsum streams."""
+
+    @pytest.mark.parametrize("case", list(CASES))
+    def test_ring_stream_matches(self, models, mesh24, case):
+        cfg, params = models[case]
+        prompts = _prompts(cfg)
+        base, _ = _serve(cfg, params, prompts, spec_depth=2, draft="ngram")
+        got, eng = _serve(cfg, params, prompts, spec_depth=2, draft="ngram",
+                          backend="pallas", mesh=mesh24)
+        assert got == base
+        assert eng.metrics()["decode_kernel_sharded"] is True
+
+    def test_paged_stream_matches(self, models, mesh24):
+        cfg, params = models["latent"]
+        prompts = _prompts(cfg)
+        base, _ = _serve(cfg, params, prompts, spec_depth=2, draft="ngram")
+        got, eng = _serve(cfg, params, prompts, spec_depth=2, draft="ngram",
+                          backend="pallas", mesh=mesh24,
+                          cache_layout="paged", page_size=8)
+        assert got == base
+        assert eng.metrics()["decode_kernel_sharded"] is True
+
+    def test_non_divisible_ring_falls_back_unsharded(self, models, mesh24):
+        """max_len=42 does not divide over 4 "model" shards: the kernels
+        must drop to the unsharded path (decode_kernel_sharded False)
+        with identical streams — divisibility is a routing detail, not a
+        correctness cliff."""
+        cfg, params = models["latent"]
+        prompts = _prompts(cfg)
+        base, _ = _serve(cfg, params, prompts, max_len=42, spec_depth=2,
+                         draft="ngram")
+        got, eng = _serve(cfg, params, prompts, max_len=42, spec_depth=2,
+                          draft="ngram", backend="pallas", mesh=mesh24)
+        assert got == base
+        assert eng.metrics()["decode_kernel_sharded"] is False
+
+
+class TestEngineEdges:
+    def test_eos_mid_round_pallas(self, models):
+        """An EOS accepted mid-round on the kernel verify path stops the
+        stream at exactly the sequential point."""
+        cfg, params = models["latent"]
+        g = np.random.default_rng(12)
+        pr = g.integers(0, cfg.vocab_size, 6).astype(np.int32)
+        full, _ = _serve(cfg, params, [pr], max_new=10)
+        eos = int(full[0][3])            # 4th emitted token becomes EOS
+
+        def serve(**kw):
+            eng = Engine(cfg, params, max_slots=2, max_len=40, **kw)
+            eng.submit(Request(uid=0, prompt=pr.copy(), max_new_tokens=10,
+                               eos_id=eos))
+            return eng.run()[0].out_tokens
+
+        ref = serve()
+        assert ref[-1] == eos or len(ref) == 10
+        assert serve(backend="pallas", spec_depth=3, draft="ngram") == ref
+        assert serve(backend="pallas", spec_depth=2,
+                     draft="layers:2") == ref
+
+    def test_aot_spec_kernel_no_retrace(self, models):
+        """AOT + spec_depth=2 on the kernel path compiles the spec window
+        exactly once; serving must not trace anything new."""
+        cfg, params = models["latent"]
+        prompts = _prompts(cfg)
+        base, _ = _serve(cfg, params, prompts, spec_depth=2, draft="ngram")
+        eng = Engine(cfg, params, max_slots=4, max_len=40, spec_depth=2,
+                     draft="ngram", backend="pallas", aot=True)
+        compiled = dict(eng.trace_counts)
+        assert compiled["window"] == 1
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=6))
+        eng.run()
+        assert {r.uid: r.out_tokens for r in eng.finished} == base
+        assert eng.trace_counts == compiled, "spec serving retraced"
+
+    def test_fallback_warns_once(self):
+        """backend="pallas" on an arch whose attention has no kernel
+        (absorbed MLA) must warn loudly instead of silently running
+        einsum — and metrics still reports the effective verify path."""
+        cfg = dataclasses.replace(get_config("deepseek-v3-671b", smoke=True),
+                                  dtype=jnp.float32)
+        params = T.init_params(cfg, KEY)
+        with pytest.warns(RuntimeWarning, match="fall back to einsum"):
+            eng = Engine(cfg, params, max_slots=2, max_len=40,
+                         backend="pallas", spec_depth=2, draft="ngram")
+        m = eng.metrics()
+        assert m["verify_backend"] == "einsum"
+        assert m["decode_kernel_sharded"] is False
