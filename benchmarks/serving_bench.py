@@ -18,6 +18,14 @@ overlapped pipeline with AOT warmup (``overlap=True, aot=True``), ring
 and paged — ``speedup_vs_sync`` records the throughput ratio against the
 matching blocking row in the same entry.
 
+Continuous rows: a saturating mixed-length load (``continuous_mix``)
+drives the depth-3 window pipeline with device-side mid-window slot
+swaps — ``occupancy_device_mean`` (mean active slots per fused-scan
+iteration), ``slot_swaps``, client-observed inter-token latency
+(``itl_p50_ms``/``itl_p95_ms``) and the host-boundary stage shares
+(``profile_shares``) are the recorded trajectory; ``--profile PATH``
+additionally dumps the per-event boundary timeline as JSON.
+
 Mesh rows: the latent load is re-run over engine mesh shapes (``1x1``
 and ``2x4``) for BOTH backends — the pallas rows exercise the shard_map
 kernel path (per-shard partial softmax + LSE merge over the "model"
@@ -72,7 +80,12 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
                  cache_layout: str = "ring", page_size: int | None = None,
                  n_pages: int | None = None, prompts=None,
                  workload: str | None = None, overlap: bool = False,
-                 aot: bool = False) -> dict:
+                 aot: bool = False, pipeline_depth: int = 2,
+                 continuous: bool = False,
+                 admission_thread: bool | None = None,
+                 profile: bool = False, new_tokens_list=None,
+                 stamp_tokens: bool = False,
+                 profile_out: dict | None = None) -> dict:
     kw, extra = VARIANTS[variant]
     cfg = dataclasses.replace(get_config(arch, smoke=True, **kw),
                               dtype=jnp.float32, attn_backend=backend,
@@ -82,15 +95,27 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
                  sync_every=sync_every, mesh=mesh_from_spec(mesh_spec),
                  spec_depth=spec_depth, draft=draft,
                  cache_layout=cache_layout, page_size=page_size,
-                 n_pages=n_pages, overlap=overlap, aot=aot)
+                 n_pages=n_pages, overlap=overlap, aot=aot,
+                 pipeline_depth=pipeline_depth, continuous=continuous,
+                 admission_thread=admission_thread, profile=profile)
     if prompts is None:
         g = np.random.default_rng(1)
         prompts = [g.integers(0, cfg.vocab_size,
                               int(g.integers(4, max_len // 3))
                               ).astype(np.int32)
                    for _ in range(requests)]
+    # inter-token latency as the CLIENT sees it: perf_counter stamps on
+    # every on_token callback (backlog-thread domain under overlap), gaps
+    # taken within each request's stream
+    stamps: dict[int, list[float]] = {}
     for i, p in enumerate(prompts):
-        eng.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
+        nt = new_tokens if new_tokens_list is None else new_tokens_list[i]
+        cb = None
+        if stamp_tokens:
+            cb = (lambda r, t, _u=i:
+                  stamps.setdefault(_u, []).append(time.perf_counter()))
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=nt,
+                           on_token=cb))
     finished = eng.run()
     eng.close()                      # settle backlog counters (no-op sync)
     m = eng.metrics()
@@ -131,10 +156,29 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
         assert busy <= 1.0 / sync_every + 1e-9, m
         row["overlap"] = True
         row["aot"] = aot
+        row["pipeline_depth"] = m["pipeline_depth"]
         row["window_overlap"] = round(m["window_overlap"], 4)
         row["windows_idle"] = m["windows_idle"]
         row["busy_decode_syncs_per_token"] = round(busy, 4)
         row["ttft_s"] = round(m["ttft_s"], 4)
+        row["occupancy_device_mean"] = round(m["occupancy_device_mean"], 2)
+        # host-boundary stage shares (always-on counters): where the
+        # boundary wall-clock actually goes — dispatch / harvest /
+        # admission_stage / backlog_drain / bookkeep (+ the admission
+        # worker's off-thread prefill time)
+        row["profile_shares"] = {k: round(v, 3)
+                                 for k, v in m["profile"]["shares"].items()}
+    if continuous:
+        row["continuous"] = True
+        row["slot_swaps"] = m["slot_swaps"]
+    if stamp_tokens:
+        gaps = [b - a for s in stamps.values()
+                for a, b in zip(s, s[1:])]
+        if gaps:
+            row["itl_p50_ms"] = round(
+                float(np.percentile(gaps, 50)) * 1e3, 2)
+            row["itl_p95_ms"] = round(
+                float(np.percentile(gaps, 95)) * 1e3, 2)
     if spec_depth:
         row["spec_depth"] = spec_depth
         row["draft"] = m["draft"]
@@ -152,6 +196,11 @@ def bench_engine(arch: str, variant: str, backend: str, *, slots: int,
         row["cow_forks"] = m["cow_forks"]
     if workload:
         row["workload"] = workload
+    if profile_out is not None:
+        # the bounded per-event timeline (engine profile=True) plus the
+        # aggregate shares — dumped by --profile as a standalone JSON
+        profile_out["profile"] = m["profile"]
+        profile_out["events"] = list(eng._prof_events)
     return row
 
 
@@ -172,10 +221,16 @@ def bench_device_loop(arch: str, variant: str, *, slots: int, max_len: int,
     loop = jax.jit(lambda c, t, u: T.decode_loop(
         cfg, params, c, t, u, new_tokens))
     loop(caches, tok, cur)[3].block_until_ready()      # compile
-    t0 = time.time()
-    out = loop(caches, tok, cur)[3]
-    out.block_until_ready()
-    dt = time.time() - t0
+    # best-of-3: the row is an UPPER bound and scheduler contention is
+    # one-sided noise, so min-of-N is the right estimator (a single
+    # ~10ms timed call swings >40% run-to-run on a busy host and flakes
+    # the 20% perf gate)
+    dt = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        out = loop(caches, tok, cur)[3]
+        out.block_until_ready()
+        dt = min(dt, time.time() - t0)
     return {
         "variant": variant,
         "backend": "device_loop",
@@ -420,12 +475,91 @@ def bench_overlap_rows(arch: str, *, slots: int, max_len: int,
     return rows
 
 
+def bench_continuous_rows(arch: str, *, slots: int, max_len: int,
+                          new_tokens: int, sync_every: int,
+                          profile_out: dict | None = None) -> list[dict]:
+    """Continuous-batching rows: a saturating mixed-length load (4x the
+    slot count, short and long prompts, staggered ``max_new_tokens``) so
+    slots free mid-window constantly — the load the device-side slot
+    swap exists for.  Three rows on the IDENTICAL load: the blocking
+    engine (baseline for ``speedup_vs_sync``), the depth-3 pipeline
+    without continuous batching (its ``occupancy_device_mean`` shows
+    slots idling until the next boundary), and depth-3 + continuous
+    (staged requests install INSIDE the fused scan).  The continuous
+    row must swap in-scan and lift device occupancy over the boundary-
+    only pipeline — that ordering is structural (a freed slot stays
+    empty for the rest of the window without the swap), not timing, so
+    it is asserted.  ``itl_p50_ms``/``itl_p95_ms`` record client-
+    observed inter-token latency from on_token stamps."""
+    g = np.random.default_rng(7)
+    vocab = get_config(arch, smoke=True).vocab_size
+    n = 6 * slots
+    prompts, new_list = [], []
+    for i in range(n):
+        # mostly short prompts (admission keeps pace with decode) with a
+        # long one per wave-ish group, and decode lengths long and
+        # staggered enough that slots free MID-window while staged
+        # successors are already waiting to be swapped in
+        plen = max_len // 3 if i % 8 == 0 else int(g.integers(4, 8))
+        nt = (new_tokens + sync_every, new_tokens + 2 * sync_every,
+              max_len - sync_every - 1)[i % 3]
+        nt = min(nt, max_len - plen - 1)
+        prompts.append(g.integers(0, vocab, plen).astype(np.int32))
+        new_list.append(nt)
+    common = dict(slots=slots, max_len=max_len, requests=n,
+                  new_tokens=new_tokens, sync_every=sync_every,
+                  prompts=prompts, new_tokens_list=new_list,
+                  workload="continuous_mix")
+    rows = []
+    t0 = time.time()
+    sync_row = bench_engine(arch, "latent", "einsum", stamp_tokens=True,
+                            **common)
+    sync_row["bench_seconds"] = round(time.time() - t0, 1)
+    rows.append(sync_row)
+    print(f"serving/latent/einsum/continuous_mix/sync: "
+          f"{sync_row['tokens_per_s']:.1f} tok/s, "
+          f"itl p50 {sync_row.get('itl_p50_ms', 0):.1f}ms")
+    t0 = time.time()
+    over_row = bench_engine(arch, "latent", "einsum", overlap=True,
+                            aot=True, pipeline_depth=3, **common)
+    over_row["bench_seconds"] = round(time.time() - t0, 1)
+    rows.append(over_row)
+    print(f"serving/latent/einsum/continuous_mix/overlap-d3: "
+          f"{over_row['tokens_per_s']:.1f} tok/s, "
+          f"device occupancy {over_row['occupancy_device_mean']:.2f}")
+    t0 = time.time()
+    cont_row = bench_engine(arch, "latent", "einsum", overlap=True,
+                            aot=True, pipeline_depth=3, continuous=True,
+                            profile=True, stamp_tokens=True,
+                            profile_out=profile_out, **common)
+    cont_row["bench_seconds"] = round(time.time() - t0, 1)
+    if sync_row["tokens_per_s"] > 0:
+        cont_row["speedup_vs_sync"] = round(
+            cont_row["tokens_per_s"] / sync_row["tokens_per_s"], 2)
+    rows.append(cont_row)
+    print(f"serving/latent/einsum/continuous_mix/continuous-d3: "
+          f"{cont_row['tokens_per_s']:.1f} tok/s "
+          f"({cont_row.get('speedup_vs_sync', '?')}x sync), "
+          f"{cont_row['slot_swaps']} in-scan swaps, "
+          f"device occupancy {cont_row['occupancy_device_mean']:.2f} "
+          f"vs {over_row['occupancy_device_mean']:.2f} boundary-only, "
+          f"itl p95 {cont_row.get('itl_p95_ms', 0):.1f}ms")
+    assert cont_row["slot_swaps"] > 0, cont_row
+    assert (cont_row["occupancy_device_mean"]
+            > over_row["occupancy_device_mean"]), (cont_row, over_row)
+    assert cont_row.get("speedup_vs_sync", 0) > 1.0, (cont_row, sync_row)
+    assert cont_row["tokens_per_s"] > over_row["tokens_per_s"], (cont_row,
+                                                                over_row)
+    return rows
+
+
 SPEC_CONFIGS = ((2, "ngram"), (2, "layers:2"))
 
 
 def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
         requests: int = 6, new_tokens: int = 16,
-        sync_every: int = 8, mesh_rows: bool = True) -> dict:
+        sync_every: int = 8, mesh_rows: bool = True,
+        profile_out: dict | None = None) -> dict:
     rows = []
     for variant in VARIANTS:
         base = None
@@ -476,6 +610,10 @@ def run(arch: str = "qwen3-4b", *, slots: int = 4, max_len: int = 48,
     rows += bench_overlap_rows(arch, slots=slots, max_len=max_len,
                                requests=requests, new_tokens=new_tokens,
                                sync_every=sync_every, have_rows=rows)
+    rows += bench_continuous_rows(arch, slots=slots, max_len=max_len,
+                                  new_tokens=new_tokens,
+                                  sync_every=sync_every,
+                                  profile_out=profile_out)
     if mesh_rows:
         rows += bench_mesh_rows(arch, slots=slots, max_len=max_len,
                                 requests=requests, new_tokens=new_tokens,
@@ -535,6 +673,10 @@ def main(argv=None):
                     help="internal: print one mesh row as MESHROW json "
                          "(run in a forced-host subprocess) and exit")
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--profile", default=None, metavar="PATH",
+                    help="dump the continuous-row host-boundary timeline "
+                         "(per-event stage/t/dur + aggregate shares) as "
+                         "JSON to PATH")
     args = ap.parse_args(argv)
     if args.one_mesh_row:
         row = bench_engine(args.arch, "latent", args.backend,
@@ -545,11 +687,18 @@ def main(argv=None):
                            mesh_spec=args.one_mesh_row)
         print("MESHROW " + json.dumps(row))
         return
+    profile_out = {} if args.profile else None
     entry = run(args.arch, slots=args.slots, max_len=args.max_len,
                 requests=args.requests, new_tokens=args.new_tokens,
-                sync_every=args.sync_every, mesh_rows=args.mesh_rows)
+                sync_every=args.sync_every, mesh_rows=args.mesh_rows,
+                profile_out=profile_out)
     append_trajectory(entry, args.out)
     print(f"trajectory row appended to {os.path.abspath(args.out)}")
+    if args.profile:
+        with open(args.profile, "w") as f:
+            json.dump(profile_out, f, indent=1)
+        print(f"host-boundary timeline ({len(profile_out['events'])} "
+              f"events) written to {os.path.abspath(args.profile)}")
 
 
 if __name__ == "__main__":

@@ -109,10 +109,12 @@ def serve(artifact: CompressionArtifact | str, *, max_slots: int,
     ``source``, the speculative-decoding pair ``spec_depth`` /
     ``draft``, the paged-cache trio ``cache_layout`` / ``page_size`` /
     ``n_pages`` — ``cache_layout="paged"`` pools cache pages across
-    slots with copy-on-write prompt-prefix sharing — and the pipeline
-    pair ``overlap`` / ``aot`` (double-buffered decode windows with a
-    backlog token thread; AOT-compiled window + prefill executables);
-    token streams are invariant to all of these) pass through to the
+    slots with copy-on-write prompt-prefix sharing — the pipeline
+    knobs ``overlap`` / ``aot`` / ``pipeline_depth`` / ``continuous`` /
+    ``admission_thread`` (N-deep window pipeline, device-side mid-window
+    slot swap, threaded admission prefill, AOT-compiled executables),
+    plus ``adaptive_spec``, ``pin_prefixes`` and ``profile``; token
+    streams are invariant to all of these) pass through to the
     Engine."""
     from repro.serving.engine import Engine  # local: engine imports api too
 

@@ -86,6 +86,28 @@ def main(argv=None):
                     help="AOT-compile the window + prefill buckets at "
                          "boot, so the first request pays load time "
                          "rather than trace time")
+    ap.add_argument("--pipeline-depth", type=int, default=3,
+                    help="in-flight decode windows under --overlap "
+                         "(2 = the classic double buffer)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: staged requests install "
+                         "into freed slots INSIDE the fused window "
+                         "(device-side mid-window slot swap); streams "
+                         "are identical to the sync engine")
+    ap.add_argument("--admission-thread",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="stage admission prefill on a worker thread "
+                         "(default: on whenever --overlap is)")
+    ap.add_argument("--pin-prefixes", type=int, default=0,
+                    help="pin the K hottest registered prefix pages "
+                         "against pool recycling (paged layout only)")
+    ap.add_argument("--adaptive-spec", action="store_true",
+                    help="degrade cold-draft slots to plain decode at "
+                         "window boundaries (needs --spec-depth > 0; "
+                         "streams are invariant)")
+    ap.add_argument("--profile", action="store_true",
+                    help="record the host-boundary stage timeline "
+                         "(metrics()['profile'])")
     args = ap.parse_args(argv)
 
     kw = {"smoke": args.smoke}
@@ -111,13 +133,20 @@ def main(argv=None):
                  mesh=mesh_from_spec(args.mesh),
                  spec_depth=args.spec_depth, draft=args.draft,
                  cache_layout=args.cache_layout, page_size=args.page_size,
-                 n_pages=args.n_pages, overlap=args.overlap, aot=args.aot)
+                 n_pages=args.n_pages, overlap=args.overlap, aot=args.aot,
+                 pipeline_depth=args.pipeline_depth if args.overlap else 2,
+                 continuous=args.continuous,
+                 admission_thread=args.admission_thread,
+                 pin_prefixes=args.pin_prefixes,
+                 adaptive_spec=args.adaptive_spec, profile=args.profile)
     spec = (f", spec_depth={args.spec_depth} ({eng.metrics()['draft']})"
             if args.spec_depth else "")
     layout = ("" if args.cache_layout == "ring" else
               f", paged (page_size={eng.page_size}, "
               f"{eng.n_pages} pages)")
-    mode = ("overlapped" if args.overlap else "sync") + \
+    mode = (f"overlapped x{args.pipeline_depth}" if args.overlap
+            else "sync") + \
+        (", continuous" if args.continuous else "") + \
         (", aot" if args.aot else "")
     print(f"[serve] {cfg.name}: cache {cache_bytes(eng.cache)/2**20:.1f} MiB "
           f"({args.slots} slots x {args.max_len} positions), "
@@ -143,7 +172,11 @@ def main(argv=None):
     if args.overlap:
         print(f"[serve] overlap: {m['window_overlap']:.2f} of windows "
               f"dispatched before the prior completed, "
-              f"{m['windows_idle']} idle windows")
+              f"{m['windows_idle']} idle windows, "
+              f"device occupancy {m['occupancy_device_mean']:.2f}"
+              f"/{args.slots}"
+              + (f", {m['slot_swaps']} in-scan swaps"
+                 if args.continuous else ""))
     if args.spec_depth:
         print(f"[serve] speculation: accept rate {m['accept_rate']:.2f} "
               f"({m['draft_accepted']}/{m['draft_proposed']} draft tokens "

@@ -717,6 +717,32 @@ def commit_verify_writes(caches: Params, updates: Params, cur: jax.Array,
     return KC.constrain_caches(caches, cache_shardings)
 
 
+def swap_cache_slot(caches: Params, stage: Params, slot: jax.Array,
+                    q: jax.Array) -> Params:
+    """Install staged-row ``q`` of a stage cache (same tree as the ring
+    pool, see :func:`init_decode_cache`) into serving-slot row ``slot``
+    of the resident pool — the device side of a mid-window continuous-
+    batching swap.  ``slot``/``q`` are traced scalars; passing a
+    ``slot`` >= batch makes the scatter a no-op (``mode="drop"``), which
+    is how the fused window expresses "no swap this iteration" without a
+    branch.  Ring layout only: paged swaps go through the page table
+    (the staged request's pages are scattered into the shared pool at
+    stage time, so installing is just a carry-row copy)."""
+    def leaf(axis):
+        def f(pool, srow):
+            idx = (slice(None),) * axis + (slot,)
+            return pool.at[idx].set(jnp.take(srow, q, axis=axis),
+                                    mode="drop")
+        return f
+    return {
+        # prefix/suffix leaves are (B, ...); scanned blocks carry a
+        # leading (n_per,) layer axis before the slot axis.
+        "prefix": jax.tree.map(leaf(0), caches["prefix"], stage["prefix"]),
+        "blocks": jax.tree.map(leaf(1), caches["blocks"], stage["blocks"]),
+        "suffix": jax.tree.map(leaf(0), caches["suffix"], stage["suffix"]),
+    }
+
+
 def decode_loop(cfg: ModelConfig, params: Params, caches: Params,
                 tokens: jax.Array, cur: jax.Array, steps: int, *,
                 active: jax.Array | None = None, rng: jax.Array | None = None,

@@ -78,12 +78,18 @@ from repro.serving import draft as D
 from repro.serving import sampler as S
 from repro.serving.draft import DraftSpec
 from repro.serving.pages import PagePool, PrefixRegistry, prefix_key
-from repro.serving.pipeline import InflightWindow, TokenBacklog
+from repro.serving.pipeline import (AdmissionWorker, InflightWindow,
+                                    StagedEntry, StagedWave, TokenBacklog)
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 from repro.sharding import rules as R
 
 __all__ = ["Engine", "Request", "SamplingParams", "DraftSpec"]
+
+# Sentinel for an empty device-side staging row: the in-scan install
+# picks argmin(seq), so the max int32 sorts every real (monotonically
+# assigned) staging sequence number ahead of every free row.
+STAGE_FREE = np.iinfo(np.int32).max
 
 
 def _array_ready(x) -> bool:
@@ -95,10 +101,13 @@ def _array_ready(x) -> bool:
         return True
 
 
-def _merge_slot(pool_cache, new_cache, slots: jax.Array):
-    """Copy ``new_cache``'s leading batch rows into ``pool_cache`` at
-    ``slots`` (the prefill wave may be padded past ``len(slots)`` rows for
-    shape bucketing — the pad rows are dropped here).
+def _merge_slot(pool_cache, new_cache, slots: jax.Array, rows=None):
+    """Copy ``new_cache`` batch rows into ``pool_cache`` at ``slots``.
+    Without ``rows`` the leading ``len(slots)`` source rows are taken
+    (the prefill wave may be padded past that for shape bucketing — the
+    pad rows are dropped here); with ``rows`` (same length as ``slots``)
+    an arbitrary subset of wave rows merges, which is how a staged wave
+    larger than the free slots merges across several boundaries.
 
     Batch is dim 0 for prefix/suffix caches but dim 1 under the scanned
     "blocks" subtree (leading dim = pattern periods)."""
@@ -106,8 +115,10 @@ def _merge_slot(pool_cache, new_cache, slots: jax.Array):
     def one(path, pool, new):
         key0 = getattr(path[0], "key", None)
         if key0 == "blocks":
-            return pool.at[:, slots].set(new[:, :n].astype(pool.dtype))
-        return pool.at[slots].set(new[:n].astype(pool.dtype))
+            src = new[:, rows] if rows is not None else new[:, :n]
+            return pool.at[:, slots].set(src.astype(pool.dtype))
+        src = new[rows] if rows is not None else new[:n]
+        return pool.at[slots].set(src.astype(pool.dtype))
     return jax.tree_util.tree_map_with_path(one, pool_cache, new_cache)
 
 
@@ -165,7 +176,19 @@ class Engine:
     contract).  ``aot`` lowers + compiles the fused window and every
     reachable power-of-two (wave, prompt-len) prefill bucket at
     construction, so the first request pays load time, not trace time.
+    ``pipeline_depth`` generalizes the double buffer to N windows in
+    flight; ``continuous`` adds the device-side staging queue + in-scan
+    slot swap; ``admission_thread`` moves wave prefill staging onto a
+    worker thread (default: on whenever overlap is); ``adaptive_spec``
+    degrades cold-draft slots to plain decode at window boundaries;
+    ``pin_prefixes`` pins the K hottest registered prefix pages against
+    pool recycling; ``profile`` records a host-boundary stage timeline.
     """
+
+    # adaptive speculation: degrade a slot once it has proposed at least
+    # MIN_PROPOSED draft tokens with an accept rate below ACCEPT_FLOOR
+    ADAPTIVE_MIN_PROPOSED = 8
+    ADAPTIVE_ACCEPT_FLOOR = 0.25
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_len: int, source: jax.Array | None = None,
@@ -179,7 +202,13 @@ class Engine:
                  page_size: int | None = None,
                  n_pages: int | None = None,
                  overlap: bool = False,
-                 aot: bool = False):
+                 aot: bool = False,
+                 pipeline_depth: int = 2,
+                 continuous: bool = False,
+                 admission_thread: bool | None = None,
+                 pin_prefixes: int = 0,
+                 adaptive_spec: bool = False,
+                 profile: bool = False):
         if backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=backend)
         if sync_every < 1:
@@ -233,6 +262,32 @@ class Engine:
             # bitwise-identical to the ring kernel's tile sequence (the
             # paged <-> ring parity contract).
             cfg = dataclasses.replace(cfg, attn_block=page_size)
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        if pipeline_depth != 2 and not overlap:
+            raise ValueError("pipeline_depth is the overlapped engine's "
+                             "in-flight window budget; set overlap=True")
+        if continuous and not overlap:
+            raise ValueError("continuous batching (in-window slot swap) "
+                             "requires overlap=True")
+        if admission_thread and not overlap:
+            raise ValueError("admission_thread requires overlap=True (the "
+                             "sync engine admits inline by definition)")
+        if continuous:
+            parsed = DraftSpec.parse(draft)
+            if parsed is not None and parsed.kind == "layers":
+                raise ValueError(
+                    "continuous batching is incompatible with the layer-"
+                    "fraction draft: its slot-major ring has no staged "
+                    "twin for the in-scan install")
+        if adaptive_spec and spec_depth == 0:
+            raise ValueError("adaptive_spec degrades speculative depth "
+                             "per slot; it needs spec_depth > 0")
+        if pin_prefixes < 0:
+            raise ValueError("pin_prefixes must be >= 0")
+        if pin_prefixes > 0 and cache_layout != "paged":
+            raise ValueError("pin_prefixes pins page-pool prefixes; it "
+                             "needs cache_layout='paged'")
         if spec_depth < 0:
             raise ValueError("spec_depth must be >= 0")
         if spec_depth > 0:
@@ -345,6 +400,19 @@ class Engine:
             # the prompt at admission and extended on-device as tokens
             # are fed (a (B, max_len) carry leaf under carry_specs)
             self._st["hist"] = np.zeros((max_slots, max_len), np.int32)
+        if adaptive_spec:
+            # per-slot speculation gate: the window skips proposing for
+            # slots degraded to plain decode (a cold draft's proposals
+            # cost a wider verify for nothing).  Streams are invariant
+            # to any spec_on schedule (deterministic accept/residual).
+            self._st["spec_on"] = np.ones(max_slots, bool)
+        if continuous:
+            # per-slot generation counter, bumped by every in-scan
+            # install: host scatters onto the live carry (refills,
+            # degrades) are gen-guarded, so a scatter aimed at a slot
+            # the device already handed to a NEW request drops instead
+            # of clobbering it.
+            self._st["gen"] = np.zeros(max_slots, np.int32)
         if self._pages is not None:
             # slot -> physical-page table: the device-side indirection the
             # paged readers/writers resolve through.  Unmapped logical
@@ -373,6 +441,13 @@ class Engine:
         # -- overlapped-pipeline state (inert when overlap=False) --------
         self.overlap = bool(overlap)
         self.aot = bool(aot)
+        self.pipeline_depth = pipeline_depth
+        self.continuous = bool(continuous)
+        self.adaptive_spec = bool(adaptive_spec)
+        self.admission_thread = (bool(overlap) if admission_thread is None
+                                 else bool(admission_thread))
+        self.pin_prefixes = pin_prefixes
+        self.profile = bool(profile)
         self._inflight: deque[InflightWindow] = deque()
         self._st_dev: dict | None = None     # device-resident carry
         self._dispatch_index = 0             # windows dispatched so far
@@ -386,6 +461,34 @@ class Engine:
         self._backlog = TokenBacklog() if self.overlap else None
         self._repl = jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec())
+        # threaded-admission + continuous-batching state.  _sched_lock
+        # guards the queue <-> staged handoff (the only scheduler surface
+        # the admission worker touches); everything else scheduler-side
+        # stays main-thread.
+        self._sched_lock = threading.Lock()
+        self._staged_waves: deque[StagedWave] = deque()
+        self._stage_tab: list[StagedEntry | None] = [None] * max_slots
+        self._stage_by_seq: dict[int, tuple[int, StagedEntry]] = {}
+        self._stage_seq_next = 0
+        self._stage_dev: dict | None = None
+        self.slot_swaps = 0            # in-scan installs confirmed
+        self._act_iters = 0            # sum of per-iteration stepping slots
+        self.spec_degraded = 0         # slots degraded to plain decode
+        self._spec_acc = np.zeros(max_slots, np.int64)
+        self._spec_prop = np.zeros(max_slots, np.int64)
+        self._prefix_hits: dict[int, int] = {}   # page -> registry hits
+        # host-boundary profiler: per-stage wall-clock sums (always on —
+        # the counters are cheap); profile=True additionally records a
+        # bounded event timeline for serving_bench --profile.
+        self._prof = {k: 0.0 for k in
+                      ("dispatch", "harvest", "bookkeep", "admission_stage",
+                       "backlog_drain")}
+        self._prof_events: list[dict] = []
+        self._prof_t0 = time.perf_counter()
+        self._admission: AdmissionWorker | None = None
+        if self.overlap and self.admission_thread:
+            self._admission = AdmissionWorker(self._take_staged_locked,
+                                              self._prepare_wave)
 
         # trace-count hooks: the counters bump inside the traced python
         # functions, so they advance exactly once per (re)trace — the AOT
@@ -418,6 +521,23 @@ class Engine:
         # instead of holding two full caches live — the cache IS the HBM
         # footprint the paper halves.  (CPU ignores donation and would
         # warn, so only donate where it takes effect.)
+        # continuous batching: a B-row device staging area — seq keys
+        # (STAGE_FREE = empty), one carry row per staged request, and
+        # (ring only) a stage cache tree the in-scan install copies a
+        # slot row out of.  Paged mode needs no stage cache: a staged
+        # request's pages are scattered straight into the shared pool at
+        # stage time (they are freshly allocated, so no live reader can
+        # see them until its ptab row installs).
+        stage_tpl = None
+        if self.continuous:
+            stage_tpl = {
+                "seq": np.full(max_slots, STAGE_FREE, np.int32),
+                "rows": {k: np.zeros((max_slots,) + v.shape[1:], v.dtype)
+                         for k, v in self._st.items()},
+            }
+            if self._pages is None:
+                stage_tpl["cache"] = T.init_decode_cache(cfg, max_slots,
+                                                         max_len)
         in_sh, out_sh = R.window_shardings(
             self.mesh, self.params, self.cache, self._st,
             param_shardings=param_shardings,
@@ -425,7 +545,7 @@ class Engine:
             draft_params=self.draft_params, draft_cache=self.draft_cache,
             draft_param_shardings=draft_param_shardings,
             draft_cache_shardings=self._draft_cache_shardings,
-            spec_outputs=spec_depth > 0)
+            spec_outputs=spec_depth > 0, stage=stage_tpl)
         logits_spec = jax.sharding.NamedSharding(
             self.mesh, R.slot_stacked_spec(max_slots, self.mesh,
                                            lead_dims=0))
@@ -434,7 +554,7 @@ class Engine:
                 cfg, max_len, sync_every,
                 cache_shardings=self._cache_shardings,
                 logits_spec=logits_spec, page_size=self.page_size,
-                mesh=self.mesh)
+                mesh=self.mesh, continuous=self.continuous)
             donate = (1,)
         else:
             window_fn = self._make_spec_window(
@@ -443,7 +563,8 @@ class Engine:
                 cache_shardings=self._cache_shardings,
                 draft_cache_shardings=self._draft_cache_shardings,
                 logits_spec=logits_spec, page_size=self.page_size,
-                mesh=self.mesh)
+                mesh=self.mesh, continuous=self.continuous,
+                adaptive=self.adaptive_spec)
             donate = (2, 3) if self.draft_cache is not None else (1,)
         if jax.default_backend() == "cpu":
             donate = ()
@@ -451,6 +572,10 @@ class Engine:
             def counted_fn(params, dparams, cache, dcache, st):
                 self.trace_counts["window"] += 1
                 return window_fn(params, dparams, cache, dcache, st)
+        elif self.continuous:
+            def counted_fn(params, cache, st, stage):
+                self.trace_counts["window"] += 1
+                return window_fn(params, cache, st, stage)
         else:
             def counted_fn(params, cache, st):
                 self.trace_counts["window"] += 1
@@ -460,7 +585,12 @@ class Engine:
         # the carry subtree of in_shardings, for committed state placement
         # (the overlapped pipeline and AOT executables both need inputs
         # that already sit where the compiled window expects them)
-        self._carry_sh = in_sh[-1]
+        if self.continuous:
+            self._carry_sh = in_sh[-2]
+            self._stage_sh = in_sh[-1]
+            self._stage_dev = jax.device_put(stage_tpl, self._stage_sh)
+        else:
+            self._carry_sh = in_sh[-1]
         if self.aot:
             self._aot_compile()
 
@@ -476,6 +606,8 @@ class Engine:
         if self.draft_cache is not None:
             args = (self.params, self.draft_params, self.cache,
                     self.draft_cache, st)
+        elif self.continuous:
+            args = (self.params, self.cache, st, self._stage_dev)
         else:
             args = (self.params, self.cache, st)
         self._window = self._window.lower(*args).compile()
@@ -521,9 +653,43 @@ class Engine:
     # -- fused decode window -------------------------------------------------
 
     @staticmethod
+    def _stage_install(st, cache, seq, stage, max_len=None):
+        """The device half of continuous batching: install (at most) the
+        FIFO-head staged request into the lowest free slot.  ``seq`` is a
+        scan CARRY — clearing the installed entry there makes the install
+        exactly-once across any pipeline depth (later windows chain on
+        this window's seq output).  Rows/cache are read-only inputs.  A
+        full batch (or an empty stage) degenerates to an out-of-range
+        scatter index, which ``mode="drop"`` turns into a no-op — no
+        branch, so the window stays one trace."""
+        B = st["act"].shape[0]
+        q = jnp.argmin(seq).astype(jnp.int32)
+        have = seq[q] != STAGE_FREE
+        slot = jnp.argmax(~st["act"]).astype(jnp.int32)
+        do = have & ~st["act"][slot]
+        tgt = jnp.where(do, slot, B)
+        st2 = {}
+        for k, v in st.items():
+            if k == "gen":
+                # generation bump, NOT a copy: the host's gen-guarded
+                # scatters key off this to drop writes aimed at the
+                # slot's previous occupant
+                st2[k] = v.at[tgt].add(1, mode="drop")
+            else:
+                st2[k] = v.at[tgt].set(
+                    jnp.take(stage["rows"][k], q, axis=0), mode="drop")
+        if "cache" in stage:
+            cache = T.swap_cache_slot(cache, stage["cache"], tgt, q)
+        seq2 = seq.at[jnp.where(do, q, B)].set(STAGE_FREE, mode="drop")
+        sw_seq = jnp.where(do, seq[q], -1).astype(jnp.int32)
+        sw_slot = jnp.where(do, slot, -1).astype(jnp.int32)
+        return st2, cache, seq2, sw_seq, sw_slot
+
+    @staticmethod
     def _make_window(cfg: ModelConfig, max_len: int, steps: int, *,
                      cache_shardings=None, logits_spec=None,
-                     page_size: int | None = None, mesh=None):
+                     page_size: int | None = None, mesh=None,
+                     continuous: bool = False):
         """Build the jitted window fn: ``steps`` fused decode iterations.
 
         Per iteration, per slot: pick the fed token (ingest buffer while
@@ -532,14 +698,25 @@ class Engine:
         update emit/termination flags — all under one lax.scan, so the
         only host sync is the caller harvesting the stacked outputs.
 
+        ``continuous`` threads the device staging queue through the scan
+        (see ``_stage_install``): each iteration may refill one freed
+        slot from staged state before stepping, so a mid-window death
+        costs idle iterations only until the next staged head, not until
+        the boundary.
+
         ``cache_shardings``/``logits_spec`` pin the scan carry's ring
         layout and the sampler's slot-sharded logits so the loop body
         never reshards mid-scan (the mesh must not smuggle per-step
         transfers back in)."""
 
-        def window(params, cache, st):
+        def window(params, cache, st, stage=None):
             def body(carry, _):
-                cache, st = carry
+                if continuous:
+                    cache, st, seq = carry
+                    st, cache, seq, sw_seq, sw_slot = Engine._stage_install(
+                        st, cache, seq, stage)
+                else:
+                    cache, st = carry
                 feeding = st["bpos"] < st["avail"]
                 buf_tok = jnp.take_along_axis(
                     st["buf"],
@@ -556,7 +733,7 @@ class Engine:
                     cfg, params, cache, tok_in, st["cur"], stepping,
                     cache_shardings=cache_shardings, pages=pages,
                     mesh=mesh)
-                ks = jax.vmap(lambda k: jax.random.split(k, 2))(st["keys"])
+                ks = S.split_keys(st["keys"])
                 sampled = S.sample_tokens(logits, st["temp"], st["top_k"],
                                           st["top_p"], ks[:, 1],
                                           spec=logits_spec)
@@ -579,11 +756,21 @@ class Engine:
                        "keys": jnp.where(emit[:, None], ks[:, 0], st["keys"]),
                        "bpos": st["bpos"] + feeding.astype(st["bpos"].dtype),
                        "left": left2}
-                return (cache, st2), (sampled, emit)
+                n_act = stepping.astype(jnp.int32).sum()
+                if continuous:
+                    return ((cache, st2, seq),
+                            (sampled, emit, sw_seq, sw_slot, n_act))
+                return (cache, st2), (sampled, emit, n_act)
 
-            (cache, st), (toks, emits) = jax.lax.scan(
+            if continuous:
+                (cache, st, seq), (toks, emits, sw_seq, sw_slot, n_act) = \
+                    jax.lax.scan(body, (cache, st, stage["seq"]), None,
+                                 length=steps)
+                return (cache, st, seq, sw_seq, sw_slot, toks, emits,
+                        n_act)
+            (cache, st), (toks, emits, n_act) = jax.lax.scan(
                 body, (cache, st), None, length=steps)
-            return cache, st, toks, emits
+            return cache, st, toks, emits, n_act
 
         return window
 
@@ -594,7 +781,8 @@ class Engine:
                           depth: int, *, draft: DraftSpec, draft_cfg=None,
                           cache_shardings=None, draft_cache_shardings=None,
                           logits_spec=None, page_size: int | None = None,
-                          mesh=None):
+                          mesh=None, continuous: bool = False,
+                          adaptive: bool = False):
         """Build the jitted speculative window: ``steps`` iterations, each
         verifying up to ``depth`` draft tokens in ONE target pass.
 
@@ -613,7 +801,13 @@ class Engine:
         S_pos = depth + 1
         has_draft_model = draft.kind == "layers"
 
-        def round_body(params, dparams, cache, dcache, st):
+        def round_body(params, dparams, cache, dcache, st, seq=None,
+                       stage=None):
+            sw = ()
+            if continuous:
+                st, cache, seq, sw_seq, sw_slot = Engine._stage_install(
+                    st, cache, seq, stage)
+                sw = (sw_seq, sw_slot)
             feeding = st["bpos"] < st["avail"]
             buf_tok = jnp.take_along_axis(
                 st["buf"],
@@ -623,6 +817,12 @@ class Engine:
             stalled = st["more"] & ~feeding
             stepping = st["act"] & ~stalled
             speculating = stepping & ~feeding
+            if adaptive:
+                # degraded slots propose nothing — they ride the window
+                # as plain decode (column 0 only).  Any spec_on schedule
+                # leaves streams bitwise identical (deterministic
+                # accept/residual), so this is purely a cost knob.
+                speculating = speculating & st["spec_on"]
             cur = st["cur"]
             js = jnp.arange(S_pos, dtype=cur.dtype)
             cap_ok = (cur[:, None] + js[None, :]) < max_len      # (B, S)
@@ -678,7 +878,7 @@ class Engine:
                     valid_j = (emit_prev & ~done_any & cand[:, j]
                                & (fed[:, j] == s_prev))
                     emit_j = valid_j
-                ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys_state)
+                ks = S.split_keys(keys_state)
                 s_j = S.sample_tokens(logits[:, j], st["temp"],
                                       st["top_k"], st["top_p"], ks[:, 1],
                                       spec=logits_spec)
@@ -727,30 +927,44 @@ class Engine:
             # positions it dared to predict
             proposed = ((cand[:, 1:] & (fed[:, 1:] >= 0))
                         .astype(jnp.int32).sum(axis=1))
-            return cache, dcache, st2, (toks_r, emits_r, accepted,
-                                        proposed)
+            n_act = stepping.astype(jnp.int32).sum()
+            return cache, dcache, st2, seq, (toks_r, emits_r, accepted,
+                                             proposed, n_act) + sw
 
         if has_draft_model:
             def window(params, dparams, cache, dcache, st):
                 def body(carry, _):
                     cache, dcache, st = carry
-                    cache, dcache, st2, ys = round_body(
+                    cache, dcache, st2, _, ys = round_body(
                         params, dparams, cache, dcache, st)
                     return (cache, dcache, st2), ys
-                (cache, dcache, st), (toks, emits, acc, prop) = \
+                (cache, dcache, st), (toks, emits, acc, prop, n_act) = \
                     jax.lax.scan(body, (cache, dcache, st), None,
                                  length=steps)
-                return cache, dcache, st, toks, emits, acc, prop
+                return cache, dcache, st, toks, emits, acc, prop, n_act
+        elif continuous:
+            def window(params, cache, st, stage):
+                def body(carry, _):
+                    cache, st, seq = carry
+                    cache, _, st2, seq, ys = round_body(
+                        params, None, cache, None, st, seq, stage)
+                    return (cache, st2, seq), ys
+                ((cache, st, seq),
+                 (toks, emits, acc, prop, n_act, sw_seq, sw_slot)) = \
+                    jax.lax.scan(body, (cache, st, stage["seq"]), None,
+                                 length=steps)
+                return (cache, st, seq, sw_seq, sw_slot, toks, emits,
+                        acc, prop, n_act)
         else:
             def window(params, cache, st):
                 def body(carry, _):
                     cache, st = carry
-                    cache, _, st2, ys = round_body(params, None, cache,
-                                                   None, st)
+                    cache, _, st2, _, ys = round_body(params, None, cache,
+                                                      None, st)
                     return (cache, st2), ys
-                (cache, st), (toks, emits, acc, prop) = jax.lax.scan(
+                (cache, st), (toks, emits, acc, prop, n_act) = jax.lax.scan(
                     body, (cache, st), None, length=steps)
-                return cache, st, toks, emits, acc, prop
+                return cache, st, toks, emits, acc, prop, n_act
 
         return window
 
@@ -768,11 +982,17 @@ class Engine:
                       page_size: int | None = None,
                       n_pages: int | None = None,
                       overlap: bool = False,
-                      aot: bool = False) -> "Engine":
+                      aot: bool = False,
+                      pipeline_depth: int = 2,
+                      continuous: bool = False,
+                      admission_thread: bool | None = None,
+                      pin_prefixes: int = 0,
+                      adaptive_spec: bool = False,
+                      profile: bool = False) -> "Engine":
         """Boot an engine straight from a saved compression artifact —
         the compress-offline / serve-forever workflow across processes.
-        ``overlap``/``aot`` select the double-buffered pipeline and
-        AOT-compiled executables exactly as on the constructor."""
+        ``overlap``/``aot``/``pipeline_depth``/``continuous`` select the
+        pipelined engine exactly as on the constructor."""
         from repro.api import load_artifact  # local: api imports models too
 
         art = load_artifact(path)
@@ -781,7 +1001,11 @@ class Engine:
                    sync_every=sync_every, prefill_chunk=prefill_chunk,
                    mesh=mesh, spec_depth=spec_depth, draft=draft,
                    cache_layout=cache_layout, page_size=page_size,
-                   n_pages=n_pages, overlap=overlap, aot=aot)
+                   n_pages=n_pages, overlap=overlap, aot=aot,
+                   pipeline_depth=pipeline_depth, continuous=continuous,
+                   admission_thread=admission_thread,
+                   pin_prefixes=pin_prefixes, adaptive_spec=adaptive_spec,
+                   profile=profile)
 
     # -- back-compat conveniences -------------------------------------------
 
@@ -808,7 +1032,27 @@ class Engine:
     # -- admission ----------------------------------------------------------
 
     def submit(self, req: Request) -> Request:
-        return self.scheduler.submit(req)
+        with self._sched_lock:
+            self.scheduler.submit(req)
+        if self._admission is not None:
+            self._admission.kick(self._staging_capacity())
+        return req
+
+    def _staging_capacity(self) -> int:
+        """How many MORE requests admission may pull off the queue right
+        now: free device stage rows (continuous) or free slots, minus
+        what is already staged upstream but not yet merged."""
+        with self._sched_lock:
+            staged = len(self.scheduler.staged)
+            if self.continuous:
+                in_rows = sum(e is not None for e in self._stage_tab)
+                budget = self.B - in_rows
+                return max(0, budget - (staged - in_rows))
+            return max(0, len(self.scheduler.free_slots()) - staged)
+
+    def _take_staged_locked(self, max_n: int) -> list[Request]:
+        with self._sched_lock:
+            return self.scheduler.take_staged(max_n)
 
     def _record_token(self, req: Request, tok: int):
         """Credit one emitted token to a request: append, stamp ttft on
@@ -855,12 +1099,14 @@ class Engine:
         reach = min(len(req.prompt) + req.max_new_tokens, self.max_len)
         return -(-reach // self.page_size)
 
-    def _assign_pages(self, slot: int, req: Request, first_len: int):
+    def _map_pages(self, req: Request, first_len: int):
         """Map ``req``'s logical pages to physical ones: longest
         registry-hit prefix is *retained* (refcount++, no copy), the rest
         freshly allocated.  Returns (mapping, scatter_cols): the full
-        physical mapping for the ptab row, and which logical pages the
-        wave prefill must scatter (the non-shared ones).
+        physical mapping for a ptab row, and which logical pages the
+        wave prefill must scatter (the non-shared ones).  Main-thread
+        only (mutates the pool/registry) — the staging path calls this
+        at the boundary merge, never on the admission worker.
 
         Copy-on-write resolves at admission: only prefix pages FULLY
         covered by this wave's prefill are shareable, and the first
@@ -878,6 +1124,7 @@ class Engine:
                 break
             shared.append(pg)
         for pg in shared:
+            self._note_prefix_hit(pg)
             if self._pages.refcount(pg) == 0:
                 # every holder retired but the page was never recycled:
                 # its latent content is still resident, so the recurring
@@ -895,6 +1142,7 @@ class Engine:
             # a recycled page's old prefix key (if any) is dead now —
             # the registry must never map a prefix to rewritten content
             self._prefixes.drop_page(pg)
+            self._prefix_hits.pop(pg, None)
         mapping = shared + own
         for j in range(len(shared), n_need):
             # register pages whose content this wave's prefill fully
@@ -902,11 +1150,39 @@ class Engine:
             if (j + 1) * ps <= first_len:
                 self._prefixes.register(prefix_key(req.prompt, j, ps),
                                         mapping[j])
+        self._update_pins()
+        return mapping, list(range(len(shared), n_need))
+
+    def _assign_pages(self, slot: int, req: Request, first_len: int):
+        """_map_pages plus the slot bindings (page list + ptab row)."""
+        mapping, scat = self._map_pages(req, first_len)
         self._slot_pages[slot] = list(mapping)
         row = self._st["ptab"][slot]
         row[:] = 0
-        row[: n_need] = mapping
-        return mapping, list(range(len(shared), n_need))
+        row[: len(mapping)] = mapping
+        return mapping, scat
+
+    def _note_prefix_hit(self, page: int):
+        if self.pin_prefixes:
+            self._prefix_hits[page] = self._prefix_hits.get(page, 0) + 1
+
+    def _update_pins(self):
+        """Keep the ``pin_prefixes`` hottest still-registered prefix
+        pages pinned (exempt from LRU recycling, parked at refcount 0).
+        Hit counts die with their page's registry entry, so a recycled
+        page can't haunt the ranking."""
+        if not self.pin_prefixes:
+            return
+        registered = self._prefixes.pages()
+        alive = {pg: h for pg, h in self._prefix_hits.items()
+                 if pg in registered}
+        want = set(sorted(alive, key=lambda p: (-alive[p], p))
+                   [: self.pin_prefixes])
+        for pg in range(1, self.n_pages):
+            if pg in want:
+                self._pages.pin(pg)
+            elif self._pages.is_pinned(pg):
+                self._pages.unpin(pg)
 
     def _admission_wave(self):
         """Host half of admission: take a wave off the queue and build
@@ -978,7 +1254,7 @@ class Engine:
             self.draft_cache = _merge_slot(self.draft_cache, dnew, slots)
         return logits
 
-    def _admit_sample_first(self, wave, first_lens, logits):
+    def _admit_sample_first(self, reqs, first_lens, logits):
         """Sample every wave row's first token with the SAME policy + key
         split the decode window would use — a request's stream is then
         identical whether its first token comes from the wave prefill
@@ -987,23 +1263,25 @@ class Engine:
         seed engine.  Knobs are padded to the full (W,) bucket and the
         sampler is the shared jitted entry point, so the value is bitwise
         identical under sync and overlapped admission (sample_tokens is
-        batch-invariant per row).  Returns device futures."""
+        batch-invariant per row).  Returns device futures.  Thread-safe
+        (pure numpy + jax dispatch), so the admission worker can run it
+        off-thread."""
         W = logits.shape[0]
-        specs = [r.sampling or self.sampling for _, r in wave]
+        specs = [r.sampling or self.sampling for r in reqs]
         keys0 = np.zeros((W, 2), np.uint32)
         temp = np.zeros(W, np.float32)
         top_k = np.zeros(W, np.int32)
         top_p = np.ones(W, np.float32)
         eos = np.full(W, -1, np.int32)
         full = np.zeros(W, bool)
-        for i, (sp, (_, r)) in enumerate(zip(specs, wave)):
+        for i, (sp, r) in enumerate(zip(specs, reqs)):
             keys0[i] = sp.slot_key(r.uid)
             temp[i] = sp.temperature
             top_k[i] = sp.top_k
             top_p[i] = sp.top_p
             eos[i] = -1 if r.eos_id is None else r.eos_id
             full[i] = first_lens[i] == len(r.prompt)
-        ks = jax.vmap(lambda k: jax.random.split(k, 2))(jnp.asarray(keys0))
+        ks = S.split_keys(jnp.asarray(keys0))
         first = S.sample_tokens_jit(logits, jnp.asarray(temp),
                                     jnp.asarray(top_k), jnp.asarray(top_p),
                                     ks[:, 1])
@@ -1021,6 +1299,12 @@ class Engine:
         st["eos"][slot] = eos_id
         st["bpos"][slot] = 0
         st["act"][slot] = True
+        if "spec_on" in st:
+            # adaptive degradation is per REQUEST: a fresh admission gets
+            # the draft back, with clean accept/propose accumulators
+            st["spec_on"][slot] = True
+        self._spec_acc[slot] = 0
+        self._spec_prop[slot] = 0
         if "hist" in st:
             # the WHOLE prompt is known at admission (even the not-
             # yet-ingested tail): seed the n-gram corpus up front
@@ -1049,7 +1333,7 @@ class Engine:
         wave, first_lens, toks, lens = taken
         logits = self._admit_prefill(wave, first_lens, toks, lens)
         specs, keys0, eos, full, ks, first_dev = self._admit_sample_first(
-            wave, first_lens, logits)
+            [r for _, r in wave], first_lens, logits)
         first = np.asarray(first_dev)
         ks = np.asarray(ks)
         self.host_syncs += 1
@@ -1106,71 +1390,315 @@ class Engine:
                             for k, v in self._st.items()}
 
     def _scatter_rows(self, slots_pad: np.ndarray, host_rows: dict,
-                      dev_rows: dict):
+                      dev_rows: dict, guard_gen=None):
         """Scatter per-slot rows into the device carry.  ``slots_pad`` is
         bucket-padded with out-of-range index B; mode="drop" discards the
-        pad rows, so bucketing never writes a real slot."""
+        pad rows, so bucketing never writes a real slot.
+
+        ``guard_gen`` (continuous batching): the host's per-slot
+        generation counters at decision time.  An in-scan install may
+        have repopulated a slot since — the device compares its ``gen``
+        leaf against the guard and redirects mismatched rows to the drop
+        index, so a stale host decision can never clobber a freshly
+        installed request."""
         sl = jnp.asarray(slots_pad)
         st = dict(self._st_dev)
+        if guard_gen is not None:
+            ok = st["gen"][sl] == jnp.asarray(guard_gen)
+            sl = jnp.where(ok, sl, self.B)
         for k, rows in {**host_rows, **dev_rows}.items():
             st[k] = st[k].at[sl].set(
                 jnp.asarray(rows).astype(st[k].dtype), mode="drop")
         self._st_dev = st
 
-    def _admit_async(self):
-        """Overlapped admission: identical scheduler/mirror bookkeeping
-        to _admit, but the prefill + first-token sample stay device
-        futures — merged into the leading carry by scatter, with the
-        first-token emission deferred to the backlog worker."""
-        taken = self._admission_wave()
-        if taken is None:
-            return
-        wave, first_lens, toks, lens = taken
-        logits = self._admit_prefill(wave, first_lens, toks, lens)
+    def _prepare_wave(self, reqs) -> StagedWave:
+        """Stage a wave OFF the admission path: bucket the prompts,
+        dispatch the prefill into a FRESH per-wave cache, and sample each
+        row's first token.  Pure device dispatch against immutable engine
+        state — no scheduler, pool, or mirror mutation — so the admission
+        worker thread can run it concurrently with boundary work.  All
+        merging happens later, on the main thread, at a boundary."""
+        first_lens = [self.scheduler.first_chunk_len(r) for r in reqs]
+        W = _bucket(len(reqs), self.B)
+        P = _bucket(max(first_lens), self.max_len)
+        toks = np.zeros((W, P), np.int32)
+        lens = np.zeros((W,), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, : first_lens[i]] = r.prompt[: first_lens[i]]
+            lens[i] = first_lens[i]
+        tj, lj = self._prefill_args(toks, lens)
+        logits, new_cache = self._prefill(self.params, tj, lj)
+        draft_new = None
+        if self.draft_cache is not None:
+            _, draft_new = self._draft_prefill(self.draft_params, tj, lj)
         specs, keys0, eos, full, ks, first = self._admit_sample_first(
-            wave, first_lens, logits)
-        self.host_syncs += 1
-        self.admission_syncs += 1
+            reqs, first_lens, logits)
+        return StagedWave(reqs=list(reqs), first_lens=first_lens,
+                          specs=specs, keys0=keys0, eos=eos, full=full,
+                          ks=ks, first=first, new_cache=new_cache,
+                          draft_new_cache=draft_new)
+
+    def _admit_overlap(self):
+        """Boundary admission for the overlapped engine: collect prepared
+        waves (from the worker, or prepared inline), then merge them —
+        straight into free slots, or into the device staging queue under
+        continuous batching.  ``host_syncs``/``admission_syncs`` tick once
+        per wave at its FIRST merge, however many boundaries the merge
+        spans, preserving the host_syncs == windows + admission_syncs
+        identity."""
+        if self._admission is not None:
+            self._staged_waves.extend(self._admission.poll())
+        else:
+            cap = self._staging_capacity()
+            if cap > 0:
+                reqs = self._take_staged_locked(cap)
+                if reqs:
+                    self._staged_waves.append(self._prepare_wave(reqs))
+        if self.continuous:
+            self._stage_from_waves()
+        else:
+            self._place_from_waves()
+        if self._admission is not None:
+            self._admission.kick(self._staging_capacity())
+
+    def _place_from_waves(self):
+        """Merge prepared waves into free slots (non-continuous overlap).
+        Head-of-line FIFO like every admission path: a wave that doesn't
+        fully fit (slots or pages) blocks the ones behind it and resumes
+        at the next boundary."""
+        while self._staged_waves:
+            wv = self._staged_waves[0]
+            todo = wv.reqs[wv.merged:]
+            if not todo:
+                self._staged_waves.popleft()
+                continue
+            with self._sched_lock:
+                free = len(self.scheduler.free_slots())
+            n = min(len(todo), free)
+            if self._pages is not None:
+                budget = self._pages.free_count
+                fit = 0
+                for r in todo[:n]:
+                    need = self._pages_needed(r)
+                    if need > budget:
+                        break
+                    budget -= need
+                    fit += 1
+                n = fit
+            if n == 0:
+                return
+            if wv.merged == 0:
+                self.host_syncs += 1
+                self.admission_syncs += 1
+            with self._sched_lock:
+                placed = self.scheduler.place_wave(todo[:n])
+            idx = list(range(wv.merged, wv.merged + n))
+            self._merge_wave_rows(wv, placed, idx)
+            wv.merged += n
+            if wv.merged < len(wv.reqs):
+                return
+            self._staged_waves.popleft()
+
+    def _merge_wave_rows(self, wv: StagedWave, placed, idx):
+        """Merge wave rows ``idx`` into their placed slots: cache
+        scatter, mirror bookkeeping, carry-row scatter, and the deferred
+        first-token emission — the device half of what _admit does
+        synchronously, expressed as dataflow on the leading carry."""
         st = self._st
-        n, W = len(wave), toks.shape[0]
-        for i, (slot, r) in enumerate(wave):
-            self._admit_bookkeep(slot, r, specs[i], first_lens[i], eos[i])
-            st["keys"][slot] = keys0[i]   # placeholder: device holds truth
-            if full[i]:
+        slots = jnp.asarray([s for s, _ in placed])
+        rows_ix = jnp.asarray(idx)
+        if self._pages is None:
+            self.cache = _merge_slot(self.cache, wv.new_cache, slots,
+                                     rows=rows_ix)
+        else:
+            rws, cols, phys = [], [], []
+            for i, (slot, r) in zip(idx, placed):
+                mapping, scat = self._assign_pages(slot, r,
+                                                   wv.first_lens[i])
+                for j in scat:
+                    rws.append(i)
+                    cols.append(j)
+                    phys.append(mapping[j])
+            if phys:
+                self.cache = _merge_slot_paged(
+                    self.cache, wv.new_cache, jnp.asarray(rws),
+                    jnp.asarray(cols), jnp.asarray(phys), self.page_size)
+        if wv.draft_new_cache is not None:
+            self.draft_cache = _merge_slot(self.draft_cache,
+                                           wv.draft_new_cache, slots,
+                                           rows=rows_ix)
+        for i, (slot, r) in zip(idx, placed):
+            self._admit_bookkeep(slot, r, wv.specs[i], wv.first_lens[i],
+                                 wv.eos[i])
+            st["keys"][slot] = wv.keys0[i]   # placeholder: device = truth
+            if wv.full[i]:
                 self._admit_tokens += 1
             self._slot_epoch[slot] = self._dispatch_index
             self._buf_epoch[slot] = self._dispatch_index
-        # host-known carry rows straight from the mirror the bookkeeping
-        # just wrote; tok/keys/act depend on the sampled first token and
-        # stay on device
-        slots_pad = np.full(W, self.B, np.int32)
-        slots_pad[:n] = [s for s, _ in wave]
+        # host-known carry rows from the mirror the bookkeeping just
+        # wrote; tok/keys/act depend on the sampled first token and stay
+        # on device.  Pad to a slot-count bucket (mode="drop" pads).
+        n = len(placed)
+        Wb = _bucket(n, self.B)
+        slots_pad = np.full(Wb, self.B, np.int32)
+        slots_pad[:n] = [s for s, _ in placed]
         host_rows = {}
         for k, arr in st.items():
             if k in ("tok", "keys", "act"):
                 continue
-            rows = np.zeros((W,) + arr.shape[1:], arr.dtype)
-            for i, (slot, _) in enumerate(wave):
+            rows = np.zeros((Wb,) + arr.shape[1:], arr.dtype)
+            for i, (slot, _) in enumerate(placed):
                 rows[i] = arr[slot]
             host_rows[k] = rows
-        full_d = jnp.asarray(full)
-        eos_d = jnp.asarray(eos)
-        left_d = jnp.asarray(
-            np.array([r.max_new_tokens - 1 for _, r in wave]
-                     + [0] * (W - n), np.int32))
+        pad_ix = np.zeros(Wb, np.int64)
+        pad_ix[:n] = idx
+        sel = jnp.asarray(pad_ix)
+        full_d = jnp.asarray(wv.full)[sel]
+        eos_d = jnp.asarray(wv.eos)[sel]
+        first_sel = wv.first[sel]
+        left_d = jnp.asarray(np.array(
+            [wv.reqs[i].max_new_tokens - 1 for i in idx] + [0] * (Wb - n),
+            np.int32))
         dev_rows = {
-            "tok": jnp.where(full_d, first, 0),
+            "tok": jnp.where(full_d, first_sel, 0),
             # a full-prompt row can die at its very first token (eos, or
             # an exhausted budget) — the same checks the window applies
-            "act": jnp.where(full_d, (first != eos_d) & (left_d > 0),
+            "act": jnp.where(full_d, (first_sel != eos_d) & (left_d > 0),
                              True),
-            "keys": jnp.where(full_d[:, None], ks[:, 0],
-                              jnp.asarray(keys0)),
+            "keys": jnp.where(full_d[:, None], wv.ks[sel][:, 0],
+                              jnp.asarray(wv.keys0)[sel]),
         }
         self._scatter_rows(slots_pad, host_rows, dev_rows)
-        entries = [(r, i) for i, (_, r) in enumerate(wave) if full[i]]
+        entries = [(r, i) for i, (_, r) in zip(idx, placed) if wv.full[i]]
         if entries:
-            self._backlog.put(self._admit_item(first, entries))
+            self._backlog.put(self._timed(
+                self._admit_item(wv.first, entries), "backlog_drain"))
+
+    def _stage_bookkeep(self, r: Request, sp, first_len: int, eos_id):
+        """Host-known carry ROW for a staged request — everything
+        _admit_bookkeep writes to the mirror, built standalone so the
+        install can land it on whichever slot the device picks.  Returns
+        (row dict over every carry leaf, pending prompt tail)."""
+        st = self._st
+        row = {k: np.zeros(v.shape[1:], v.dtype) for k, v in st.items()}
+        row["cur"][...] = first_len
+        row["temp"][...] = sp.temperature
+        row["top_k"][...] = sp.top_k
+        row["top_p"][...] = sp.top_p
+        row["eos"][...] = eos_id
+        row["act"][...] = True
+        if "hist" in row:
+            row["hist"][: len(r.prompt)] = r.prompt
+        if "spec_on" in row:
+            row["spec_on"][...] = True
+        rest = r.prompt[first_len:]
+        if rest.size == 0:
+            row["left"][...] = r.max_new_tokens - 1
+            pending = np.zeros((0,), np.int32)
+        else:
+            width = self.scheduler.prefill_chunk or int(rest.shape[0])
+            chunk, pending = rest[:width], rest[width:]
+            row["buf"][: chunk.shape[0]] = chunk
+            row["avail"][...] = chunk.shape[0]
+            row["more"][...] = pending.size > 0
+            row["left"][...] = r.max_new_tokens
+        return row, pending
+
+    def _stage_from_waves(self):
+        """Continuous batching: move prepared wave rows into the device
+        staging queue (carry rows + FIFO seq keys + cache content),
+        bounded by free stage rows and — paged — the page budget.
+        Head-of-line FIFO, like every admission path.  Requests stay in
+        ``scheduler.staged`` until their install is confirmed at a
+        harvest; the scan itself picks the slot."""
+        free_rows = [q for q, e in enumerate(self._stage_tab) if e is None]
+        while self._staged_waves and free_rows:
+            wv = self._staged_waves[0]
+            if wv.merged >= len(wv.reqs):
+                self._staged_waves.popleft()
+                continue
+            i = wv.merged
+            r = wv.reqs[i]
+            if (self._pages is not None
+                    and self._pages_needed(r) > self._pages.free_count):
+                return
+            if wv.merged == 0:
+                self.host_syncs += 1
+                self.admission_syncs += 1
+            self._stage_one(wv, i, free_rows.pop(0))
+            wv.merged += 1
+        while (self._staged_waves
+               and self._staged_waves[0].merged
+                   >= len(self._staged_waves[0].reqs)):
+            self._staged_waves.popleft()
+
+    def _stage_one(self, wv: StagedWave, i: int, q: int):
+        """Scatter wave row ``i`` into stage row ``q``: the host-known
+        carry row, the device first-token pieces, the monotone seq key
+        the scan's installer FIFOs on, and the prefilled cache content
+        (stage cache row for ring, pool pages for paged)."""
+        r = wv.reqs[i]
+        row, pending = self._stage_bookkeep(r, wv.specs[i],
+                                            wv.first_lens[i], wv.eos[i])
+        pages = None
+        if self._pages is not None:
+            mapping, scat = self._map_pages(r, wv.first_lens[i])
+            pages = list(mapping)
+            row["ptab"][: len(mapping)] = mapping
+            rws = [i] * len(scat)
+            cols = list(scat)
+            phys = [mapping[j] for j in scat]
+            if phys:
+                # freshly-allocated (refcount-1) pages only, chained on
+                # the LATEST cache future: no in-flight window reads them,
+                # and the window that can see this seq key sees the pages
+                self.cache = _merge_slot_paged(
+                    self.cache, wv.new_cache, jnp.asarray(rws),
+                    jnp.asarray(cols), jnp.asarray(phys), self.page_size)
+        else:
+            self._stage_dev = {
+                **self._stage_dev,
+                "cache": _merge_slot(self._stage_dev["cache"],
+                                     wv.new_cache, jnp.asarray([q]),
+                                     rows=jnp.asarray([i])),
+            }
+        seq_val = self._stage_seq_next
+        self._stage_seq_next += 1
+        ent = StagedEntry(req=r, host_row=row, pending=pending,
+                          pages=pages, seq=seq_val, keys0=wv.keys0[i],
+                          full=bool(wv.full[i]))
+        full_d = jnp.asarray(bool(wv.full[i]))
+        eos_d = jnp.int32(int(wv.eos[i]))
+        left0 = jnp.int32(r.max_new_tokens - 1)
+        first_i = wv.first[i]
+        dev_row = {
+            "tok": jnp.where(full_d, first_i, 0),
+            "act": jnp.where(full_d, (first_i != eos_d) & (left0 > 0),
+                             True),
+            "keys": jnp.where(full_d, wv.ks[i, 0],
+                              jnp.asarray(ent.keys0)),
+        }
+        rows_dev = dict(self._stage_dev["rows"])
+        for k, v in row.items():
+            if k in ("tok", "act", "keys"):
+                continue
+            rows_dev[k] = rows_dev[k].at[q].set(
+                jnp.asarray(v).astype(rows_dev[k].dtype))
+        for k, v in dev_row.items():
+            rows_dev[k] = rows_dev[k].at[q].set(v.astype(rows_dev[k].dtype))
+        self._stage_dev = {
+            **self._stage_dev, "rows": rows_dev,
+            "seq": self._stage_dev["seq"].at[q].set(seq_val),
+        }
+        self._stage_tab[q] = ent
+        self._stage_by_seq[seq_val] = (q, ent)
+        if ent.full:
+            # first token was emitted at STAGE time (parity with direct
+            # admission); it must reach the stream before any window item
+            # carrying this request's later tokens — backlog FIFO does it
+            self._admit_tokens += 1
+            self._backlog.put(self._timed(
+                self._admit_item(wv.first, [(r, i)]), "backlog_drain"))
 
     def _admit_item(self, first, entries):
         def item():
@@ -1205,37 +1733,61 @@ class Engine:
             for i, slot in enumerate(slots):
                 rows[i] = arr[slot]
             host_rows[k] = rows
-        self._scatter_rows(slots_pad, host_rows, {})
+        gg = None
+        if self.continuous:
+            gg = np.zeros(R_, np.int32)
+            gg[:n] = st["gen"][slots]
+        self._scatter_rows(slots_pad, host_rows, {}, guard_gen=gg)
 
     def _dispatch_window(self) -> bool:
-        """One pipeline boundary's front half: merge host decisions into
-        the leading carry, then launch the next window on it.  Returns
-        False when nothing is active to decode (no dispatch)."""
-        self._ensure_dev_state()
-        self._admit_async()
-        self._refill_async()
-        if not self._st["act"].any():
+        """One pipeline boundary's front half: launch the next window on
+        the merged leading carry.  Returns False when nothing is active
+        to decode AND (under continuous batching) nothing is staged for
+        an in-scan install."""
+        staged_pending = (self.continuous
+                          and any(e is not None for e in self._stage_tab))
+        if not (self._st["act"].any() or staged_pending):
             return False
         occ, qd = self.scheduler.occupancy, self.scheduler.queue_depth
         prior = self._inflight[-1] if self._inflight else None
         overlapped = prior is not None and not _array_ready(prior.status)
-        acc = prop = None
+        acc = prop = sw_seq = sw_slot = None
         if self.draft_cache is not None:
             (self.cache, self.draft_cache, st2, toks, emits, acc,
-             prop) = self._window(self.params, self.draft_params,
-                                  self.cache, self.draft_cache,
-                                  self._st_dev)
+             prop, n_act) = self._window(self.params, self.draft_params,
+                                         self.cache, self.draft_cache,
+                                         self._st_dev)
+        elif self.continuous and self.spec_depth > 0:
+            (self.cache, st2, seq, sw_seq, sw_slot, toks, emits, acc,
+             prop, n_act) = self._window(self.params, self.cache,
+                                         self._st_dev, self._stage_dev)
+            self._stage_dev = {**self._stage_dev, "seq": seq}
+        elif self.continuous:
+            (self.cache, st2, seq, sw_seq, sw_slot, toks, emits,
+             n_act) = self._window(self.params, self.cache,
+                                   self._st_dev, self._stage_dev)
+            self._stage_dev = {**self._stage_dev, "seq": seq}
         elif self.spec_depth > 0:
-            self.cache, st2, toks, emits, acc, prop = self._window(
+            self.cache, st2, toks, emits, acc, prop, n_act = self._window(
                 self.params, self.cache, self._st_dev)
         else:
-            self.cache, st2, toks, emits = self._window(
+            self.cache, st2, toks, emits, n_act = self._window(
                 self.params, self.cache, self._st_dev)
         self._st_dev = st2
-        # pack the harvest-critical leaves into ONE array at dispatch so
-        # the trailing-boundary block is a single small transfer
-        status = jnp.stack([st2["act"].astype(jnp.int32),
-                            st2["bpos"].astype(jnp.int32)])
+        # pack the harvest-critical pieces into ONE 1-D array at dispatch
+        # so the trailing-boundary block is a single small transfer; the
+        # harvest parses it positionally by the same layout
+        parts = [st2["act"].astype(jnp.int32), st2["bpos"].astype(jnp.int32)]
+        if self.continuous:
+            parts.append(st2["gen"])
+        if self.adaptive_spec:
+            parts.append(acc.sum(axis=0))
+            parts.append(prop.sum(axis=0))
+        if self.continuous:
+            parts.append(sw_seq)
+            parts.append(sw_slot)
+        parts.append(n_act.sum().reshape(1))
+        status = jnp.concatenate(parts)
         self._inflight.append(InflightWindow(
             index=self._dispatch_index, status=status, toks=toks,
             emits=emits, slot_reqs=list(self.scheduler.slot_req),
@@ -1247,27 +1799,139 @@ class Engine:
 
     def _harvest_trailing(self):
         """Block on the trailing window's status (the pipeline's one
-        device sync), refresh the epoch-eligible mirror slots, retire
-        finished requests, and hand token work to the backlog."""
+        device sync), process confirmed in-scan installs, refresh the
+        epoch-eligible mirror slots, retire finished requests, and hand
+        token work to the backlog."""
         w = self._inflight.popleft()
+        t0 = time.perf_counter()
         status = np.asarray(w.status)
+        t1 = time.perf_counter()
+        self._prof_add("harvest", t0, t1 - t0)
         self.host_syncs += 1
         self.windows += 1
         self._occupancy_sum += w.occ
         self._queue_depth_sum += w.qd
-        act = status[0].astype(bool)
-        bpos = status[1]
+        B = self.B
+        act = status[:B].astype(bool)
+        bpos = status[B: 2 * B]
+        off = 2 * B
+        accs = props = sw_seq = sw_slot = None
+        if self.continuous:
+            off += B                      # gen leaf: mirrored per install
+        if self.adaptive_spec:
+            accs = status[off: off + B]
+            props = status[off + B: off + 2 * B]
+            off += 2 * B
+        if self.continuous:
+            K = self.sync_every
+            sw_seq = status[off: off + K]
+            sw_slot = status[off + K: off + 2 * K]
+            off += 2 * K
+        self._act_iters += int(status[off])
+        # snapshot the PRE-install slot->request map and the in-window
+        # swap list BEFORE bookkeeping mutates them: the backlog item
+        # credits each iteration's tokens to whoever held the slot then
+        base = list(w.slot_reqs)
+        installs, swaps = [], []
+        if sw_seq is not None:
+            for k in range(self.sync_every):
+                sv = int(sw_seq[k])
+                if sv < 0:
+                    continue
+                q, ent = self._stage_by_seq.pop(sv)
+                installs.append((k, int(sw_slot[k]), q, ent))
+                swaps.append((k, int(sw_slot[k]), ent.req))
+        item = self._window_item(w, base, swaps)
+        for k, s, q, ent in installs:
+            self._install_entry(w, s, q, ent)
         ok = self._slot_epoch <= w.index
+        if accs is not None:
+            self._adaptive_update(ok, act, accs, props,
+                                  {s for _, s, _, _ in installs})
         self._st["act"][ok] = act[ok]
         bok = ok & (self._buf_epoch <= w.index)
         self._st["bpos"][bok] = bpos[bok]
-        self._backlog.put(self._window_item(w))
+        self._backlog.put(self._timed(item, "backlog_drain"))
         for slot, r in enumerate(w.slot_reqs):
             if (r is not None and ok[slot] and not act[slot]
                     and self.scheduler.slot_req[slot] is r):
                 self._finish(slot)
+        self.slot_swaps += len(installs)
+        self._prof_add("bookkeep", t1, time.perf_counter() - t1)
 
-    def _window_item(self, w: InflightWindow):
+    def _install_entry(self, w: InflightWindow, s: int, q: int,
+                       ent: StagedEntry):
+        """Main-thread bookkeeping for a CONFIRMED in-scan install: the
+        device already owns slot ``s``'s carry row (the scan wrote it at
+        iteration time); scheduler, mirror, pages, and epochs catch up
+        here, retroactively."""
+        if self.scheduler.slot_req[s] is not None:
+            # the previous occupant died inside this window before the
+            # install; its final tokens ride this window's backlog item
+            self._finish(s)
+        with self._sched_lock:
+            self.scheduler.place(s, ent.req)
+        st = self._st
+        for k, v in ent.host_row.items():
+            if k == "gen":
+                continue
+            st[k][s] = v
+        st["gen"][s] += 1                 # mirror the scan's install bump
+        self.scheduler.set_pending(s, np.asarray(ent.pending, np.int32))
+        if self._pages is not None:
+            self._slot_pages[s] = list(ent.pages)
+        self._slot_epoch[s] = w.index
+        self._buf_epoch[s] = w.index
+        self._spec_acc[s] = 0
+        self._spec_prop[s] = 0
+        # windows dispatched before this install was known snapshot the
+        # OLD occupant; patch them so their items credit the new one
+        # from their own iteration 0 (the install predates them all)
+        w.slot_reqs[s] = ent.req
+        for wf in self._inflight:
+            wf.slot_reqs[s] = ent.req
+        self._stage_tab[q] = None
+
+    def _adaptive_update(self, ok, act, accs, props, installed):
+        """Fold a window's per-slot accept/propose counts into the
+        running accumulators and degrade cold-draft slots to plain
+        decode.  Sticky per request: spec_on resets at the next
+        admission, not mid-request."""
+        st = self._st
+        degrade = []
+        for s in range(self.B):
+            if s in installed or not ok[s]:
+                continue
+            self._spec_acc[s] += int(accs[s])
+            self._spec_prop[s] += int(props[s])
+            if (st["spec_on"][s] and act[s]
+                    and self._spec_prop[s] >= self.ADAPTIVE_MIN_PROPOSED
+                    and self._spec_acc[s]
+                        < self.ADAPTIVE_ACCEPT_FLOOR * self._spec_prop[s]):
+                st["spec_on"][s] = False
+                degrade.append(s)
+        if not degrade:
+            return
+        self.spec_degraded += len(degrade)
+        if self._st_dev is None:
+            return                        # sync engine: mirror uploads
+        n = len(degrade)
+        Rb = _bucket(n, self.B)
+        slots_pad = np.full(Rb, self.B, np.int32)
+        slots_pad[:n] = degrade
+        gg = None
+        if self.continuous:
+            gg = np.zeros(Rb, np.int32)
+            gg[:n] = st["gen"][degrade]
+        self._scatter_rows(slots_pad, {"spec_on": np.zeros(Rb, bool)}, {},
+                           guard_gen=gg)
+
+    def _window_item(self, w: InflightWindow, base=None, swaps=None):
+        slot_reqs = list(w.slot_reqs) if base is None else base
+        swap_iter: dict[int, list] = {}
+        for k, s, r in (swaps or ()):
+            swap_iter.setdefault(k, []).append((s, r))
+
         def item():
             toks = np.asarray(w.toks)           # (K, B) or (K, B, S)
             emits = np.asarray(w.emits)
@@ -1284,25 +1948,64 @@ class Engine:
                     self.windows_idle += 1
                 self.draft_accepted += acc
                 self.draft_proposed += prop
+            reqs = slot_reqs
             for k in range(toks.shape[0]):
+                for s, r in swap_iter.get(k, ()):
+                    reqs[s] = r
                 for j in range(toks.shape[2]):
                     for i in np.nonzero(emits[k, :, j])[0]:
-                        self._record_token(w.slot_reqs[i],
-                                           int(toks[k, i, j]))
+                        self._record_token(reqs[i], int(toks[k, i, j]))
         return item
 
     def _step_async(self):
-        """One overlapped boundary: harvest the trailing window once two
-        are in flight, then merge + dispatch the next."""
+        """One overlapped boundary: harvest the trailing window once the
+        pipeline is full (``pipeline_depth`` windows in flight), merge
+        staged admissions and refills into the leading carry, then
+        dispatch the next window."""
         t0 = time.perf_counter()
-        if len(self._inflight) >= 2:
+        if len(self._inflight) >= self.pipeline_depth:
             self._harvest_trailing()
-        if not self._dispatch_window() and self._inflight:
-            # nothing to decode by the host's (possibly stale) view:
-            # drain a window — its harvest may retire slots and unblock
-            # the queue for the next boundary
-            self._harvest_trailing()
+        self._ensure_dev_state()
+        t1 = time.perf_counter()
+        self._admit_overlap()
+        self._refill_async()
+        t2 = time.perf_counter()
+        self._prof_add("admission_stage", t1, t2 - t1)
+        dispatched = self._dispatch_window()
+        t3 = time.perf_counter()
+        self._prof_add("dispatch", t2, t3 - t2)
+        if not dispatched:
+            if self._inflight:
+                # nothing to decode by the host's (possibly stale) view:
+                # drain a window — its harvest may retire slots and
+                # unblock the queue for the next boundary
+                self._harvest_trailing()
+            elif (self._admission is not None
+                  and (self._admission.busy
+                       or self.scheduler.queue_depth > 0)):
+                # nothing on device, but admission work is pending or
+                # mid-prefill on the worker: block (bounded) for its
+                # wave instead of spinning the idle guard down
+                self._admission.wait(timeout=1.0)
         self._run_seconds += time.perf_counter() - t0
+
+    def _prof_add(self, stage: str, t0: float, dur: float):
+        with self._mlock:
+            self._prof[stage] += dur
+            if self.profile and len(self._prof_events) < 100_000:
+                self._prof_events.append(
+                    {"stage": stage, "t": t0 - self._prof_t0, "dur": dur})
+
+    def _timed(self, fn, stage: str):
+        """Wrap a backlog work item so its wall-clock accrues to the
+        named profiler stage (on whichever thread runs it)."""
+        def run():
+            t0 = time.perf_counter()
+            try:
+                fn()
+            finally:
+                self._prof_add(stage, t0, time.perf_counter() - t0)
+        return run
 
     def flush(self):
         """Drain the pipeline: harvest every in-flight window and block
@@ -1316,8 +2019,10 @@ class Engine:
         self._run_seconds += time.perf_counter() - t0
 
     def close(self):
-        """Flush and join the backlog worker.  Idempotent; the engine
+        """Flush and join the worker threads.  Idempotent; the engine
         remains usable for sync inspection (metrics, finished) after."""
+        if self._admission is not None:
+            self._admission.close()
         self.flush()
         if self._backlog is not None:
             self._backlog.close()
@@ -1362,19 +2067,20 @@ class Engine:
         acc = prop = None
         if self.draft_cache is not None:
             (self.cache, self.draft_cache, state, toks, emits, acc,
-             prop) = self._window(self.params, self.draft_params,
-                                  self.cache, self.draft_cache, state)
+             prop, n_act) = self._window(self.params, self.draft_params,
+                                         self.cache, self.draft_cache,
+                                         state)
         elif self.spec_depth > 0:
-            self.cache, state, toks, emits, acc, prop = self._window(
-                self.params, self.cache, state)
+            (self.cache, state, toks, emits, acc, prop,
+             n_act) = self._window(self.params, self.cache, state)
         else:
-            self.cache, state, toks, emits = self._window(
+            self.cache, state, toks, emits, n_act = self._window(
                 self.params, self.cache, state)
-        self._harvest(state, toks, emits, occ, qd, acc, prop)
+        self._harvest(state, toks, emits, occ, qd, acc, prop, n_act)
         self._run_seconds += time.perf_counter() - t0
 
     def _harvest(self, state, toks, emits, occ: int, qd: int,
-                 acc=None, prop=None):
+                 acc=None, prop=None, n_act=None):
         toks = np.asarray(toks)                 # (K, B) or (K, B, S)
         emits = np.asarray(emits)
         if toks.ndim == 2:                      # non-speculative window
@@ -1388,9 +2094,16 @@ class Engine:
         self.tokens_emitted += int(emits.sum())
         self._occupancy_sum += occ
         self._queue_depth_sum += qd
+        if n_act is not None:
+            self._act_iters += int(np.asarray(n_act).sum())
         if acc is not None:
             self.draft_accepted += int(np.asarray(acc).sum())
             self.draft_proposed += int(np.asarray(prop).sum())
+            if self.adaptive_spec:
+                self._adaptive_update(
+                    np.ones(self.B, bool), self._st["act"],
+                    np.asarray(acc).sum(axis=0).reshape(-1),
+                    np.asarray(prop).sum(axis=0).reshape(-1), set())
         slot_req = self.scheduler.slot_req
         for k in range(toks.shape[0]):
             for j in range(toks.shape[2]):
@@ -1460,6 +2173,14 @@ class Engine:
             draft_accepted = self.draft_accepted
         w = max(self.windows, 1)
         pool = self._pages
+        with self._mlock:
+            prof = dict(self._prof)
+        if self._admission is not None:
+            prof["admission_worker"] = self._admission.prepare_seconds
+        ptotal = sum(prof.values())
+        profile = {"seconds": prof,
+                   "shares": {k: (v / ptotal if ptotal else 0.0)
+                              for k, v in prof.items()}}
         return {
             "tokens": tokens,
             "windows": self.windows,
@@ -1494,10 +2215,21 @@ class Engine:
             "queue_depth_mean": self._queue_depth_sum / w,
             "overlap": self.overlap,
             "aot": self.aot,
+            "pipeline_depth": self.pipeline_depth if self.overlap else 0,
+            "continuous": self.continuous,
+            "admission_thread": self.admission_thread,
             "window_overlap": (self._overlapped_windows
                                / max(self._dispatch_index, 1)
                                if self.overlap else 0.0),
             "windows_idle": windows_idle,
+            "slot_swaps": self.slot_swaps,
+            "occupancy_device_mean":
+                self._act_iters / (w * self.sync_every),
+            "adaptive_spec": self.adaptive_spec,
+            "spec_degraded": self.spec_degraded,
+            "pin_prefixes": self.pin_prefixes,
+            "pages_pinned": 0 if pool is None else pool.pinned,
+            "profile": profile,
             "ttft_s": ttft,
             "prefix_resurrections": (0 if pool is None
                                      else pool.prefix_resurrections),

@@ -16,9 +16,10 @@ Invariants the allocator maintains (property-tested in test_pages.py):
   * physical page 0 is the NULL page — never allocated, never written;
     unmapped page-table entries point at it and its ``pos`` stays -1, so
     a gathered view of an unmapped slot-page reads as empty ring.
-  * every non-null page is either on the free list (refcount 0) or held
-    by >= 1 slots (refcount = number of holders); the two sets partition
-    the pool, so pages never leak and never double-free.
+  * every non-null page is on the free list (refcount 0), held by >= 1
+    slots (refcount = number of holders), or PARKED (refcount 0 but
+    pinned — resident and exempt from recycling); the three sets
+    partition the pool, so pages never leak and never double-free.
   * a page with refcount >= 2 (a shared prompt prefix) is read-only by
     construction: the engine only shares pages wholly covered by the
     sharer's prefilled prompt region, and post-admission writes land at
@@ -70,6 +71,10 @@ class PagePool:
         # dict-as-ordered-set: insertion order == LRU order, O(1) removal
         # from the middle when a free page is resurrected.
         self._free: dict[int, None] = dict.fromkeys(range(1, n_pages))
+        # pinned pages are exempt from LRU recycling: at refcount 0 they
+        # PARK (off the free list, still resident) instead of joining it,
+        # so a cold-start flood can never evict a pinned prefix.
+        self._pinned: set[int] = set()
         self.share_events = 0          # cumulative retain() calls
         self.cow_forks = 0             # cumulative divergent-page copies
         self.peak_used = 0             # high-water mark of allocated pages
@@ -90,6 +95,14 @@ class PagePool:
     def shared_now(self) -> int:
         """Pages currently held by more than one slot."""
         return sum(1 for r in self._ref if r >= 2)
+
+    @property
+    def pinned(self) -> int:
+        """Pages currently pinned against recycling."""
+        return len(self._pinned)
+
+    def is_pinned(self, page: int) -> bool:
+        return page in self._pinned
 
     def refcount(self, page: int) -> int:
         return self._ref[page]
@@ -119,22 +132,47 @@ class PagePool:
         return pages
 
     def resurrect(self, page: int) -> int:
-        """Revive a refcount-0 page straight off the free list (a prefix
-        registry hit on a retired prompt): its content is still resident
-        because nothing recycled it yet, so the new holder skips the
-        prefill entirely."""
+        """Revive a refcount-0 page (a prefix registry hit on a retired
+        prompt): its content is still resident because nothing recycled
+        it yet, so the new holder skips the prefill entirely.  Works for
+        pages on the free list AND for pinned pages parked off it."""
         if not 0 < page < self.n_pages:
             raise ValueError(
                 f"page {page} out of range 1..{self.n_pages - 1}")
-        if page not in self._free:
+        if page in self._free:
+            del self._free[page]
+        elif not (page in self._pinned and self._ref[page] == 0):
             raise ValueError(
                 f"page {page} is not free (refcount {self._ref[page]}); "
                 f"use retain() to share a live page")
-        del self._free[page]
         self._ref[page] = 1
         self.prefix_resurrections += 1
         self.peak_used = max(self.peak_used, self.used)
         return page
+
+    # -- pinning -------------------------------------------------------------
+
+    def pin(self, page: int):
+        """Exempt ``page`` from LRU recycling.  A pinned page at refcount
+        0 parks off the free list (content resident, never handed out by
+        ``alloc``) until ``unpin`` returns it.  Idempotent."""
+        if not 0 < page < self.n_pages:
+            raise ValueError(
+                f"page {page} out of range 1..{self.n_pages - 1}")
+        if page in self._pinned:
+            return
+        self._pinned.add(page)
+        # already free: pull it off the list so alloc can't recycle it
+        self._free.pop(page, None)
+
+    def unpin(self, page: int):
+        """Lift the recycling exemption; a parked page rejoins the WARM
+        end of the free list (it was hot enough to pin).  Idempotent."""
+        if page not in self._pinned:
+            return
+        self._pinned.discard(page)
+        if self._ref[page] == 0:
+            self._free[page] = None
 
     def retain(self, page: int) -> int:
         """Share an allocated page: one more holder, no copy."""
@@ -156,13 +194,15 @@ class PagePool:
 
     def free(self, page: int) -> bool:
         """Drop one reference; returns True when the page's refcount hit
-        zero and it joined the warm end of the free list.  Registry keys
-        stay valid past this point — the page's content is resident until
-        ``alloc`` recycles it."""
+        zero and it joined the warm end of the free list (or parked, if
+        pinned — a pinned page never rejoins the allocatable pool).
+        Registry keys stay valid past this point — the page's content is
+        resident until ``alloc`` recycles it."""
         self._check_live(page)
         self._ref[page] -= 1
         if self._ref[page] == 0:
-            self._free[page] = None
+            if page not in self._pinned:
+                self._free[page] = None
             return True
         return False
 
@@ -205,6 +245,11 @@ class PrefixRegistry:
             return
         self._page_for[key] = page
         self._key_for[page] = key
+
+    def pages(self):
+        """View of the physical pages currently holding a registered
+        prefix (the pin-ranking universe)."""
+        return self._key_for.keys()
 
     def drop_page(self, page: int):
         key = self._key_for.pop(page, None)

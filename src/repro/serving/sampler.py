@@ -131,6 +131,18 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
     return jax.lax.cond(jnp.all(is_greedy), lambda _: greedy, sampled, None)
 
 
+def split_keys(keys: jax.Array) -> jax.Array:
+    """Advance a batch of per-slot PRNG keys one step: (B, 2) uint32 ->
+    (B, 2, 2) where [:, 0] is the draw key for this step and [:, 1] the
+    chain carried forward.  One helper so the decode window, the
+    speculative window and the admission path derive keys identically —
+    the per-request stream depends only on how many tokens that slot has
+    *emitted*, which is what makes overlapped/staged admission
+    token-for-token equal to the sync engine.  Safe to call from the
+    admission worker thread: pure jax dispatch, no host state."""
+    return jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+
+
 # Jitted admission-time sampler.  Admission used to call sample_tokens
 # eagerly (op-by-op dispatch on the wave's first logits); both the sync
 # and the overlapped engine now share this one jitted entry point so the

@@ -71,6 +71,11 @@ class Scheduler:
         self.slot_shards = slot_shards
         self.queue: deque[Request] = deque()
         self.slot_req: list[Request | None] = [None] * max_slots
+        # requests popped off the queue by the admission worker for
+        # prefill STAGING: no slot yet, but no longer queued.  FIFO is
+        # preserved end-to-end: take_staged pops the queue head, place*
+        # consumes the staged head.
+        self.staged: deque[Request] = deque()
         # un-ingested prompt tail per slot (chunked prefill)
         self._pending: list[np.ndarray | None] = [None] * max_slots
         self.admitted_uids: list[int] = []    # admission order (FIFO audit)
@@ -157,6 +162,46 @@ class Scheduler:
             wave.append((slot, req))
         return wave
 
+    def take_staged(self, max_n: int) -> list[Request]:
+        """Pop up to ``max_n`` queue-head requests into the staged set
+        (the admission worker's input).  Staged requests have been
+        *committed to* in FIFO order — they are prefilled ahead of slot
+        availability and must be placed via ``place``/``place_wave``
+        strictly in this order."""
+        out = []
+        while self.queue and len(out) < max_n:
+            req = self.queue.popleft()
+            self.staged.append(req)
+            out.append(req)
+        return out
+
+    def place(self, slot: int, req: Request):
+        """Bind a previously staged request to a now-free slot.  Must be
+        called in staged (FIFO) order — the head-of-line contract the
+        synchronous ``take_wave`` enforces is preserved by construction."""
+        if self.slot_req[slot] is not None:
+            raise RuntimeError(
+                f"slot {slot} is occupied by uid="
+                f"{self.slot_req[slot].uid}; release it first")
+        if not self.staged or self.staged[0] is not req:
+            raise RuntimeError(
+                f"place(uid={req.uid}) out of staged FIFO order "
+                f"(head is uid={self.staged[0].uid if self.staged else None})")
+        self.staged.popleft()
+        self.slot_req[slot] = req
+        self.admitted_uids.append(req.uid)
+
+    def place_wave(self, reqs: list[Request]) -> list[tuple[int, Request]]:
+        """Bind a FIFO run of staged requests to free slots, shard-aware
+        like ``take_wave`` (the overlapped engine's boundary merge)."""
+        free = self._wave_slot_order(len(reqs))
+        placed = []
+        for req in reqs:
+            slot = free.pop(0)
+            self.place(slot, req)
+            placed.append((slot, req))
+        return placed
+
     def first_chunk_len(self, req: Request) -> int:
         """Prompt tokens the admission wave prefill covers for ``req``."""
         if self.prefill_chunk is None:
@@ -188,7 +233,9 @@ class Scheduler:
 
     @property
     def queue_depth(self) -> int:
-        return len(self.queue)
+        """Requests waiting for a slot: still queued or staged (popped
+        for prefill by the admission worker but not yet placed)."""
+        return len(self.queue) + len(self.staged)
 
     @property
     def occupancy(self) -> int:
@@ -196,4 +243,5 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.slot_req)
+        return (bool(self.queue) or bool(self.staged)
+                or any(r is not None for r in self.slot_req))

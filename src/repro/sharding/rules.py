@@ -312,14 +312,31 @@ def slot_stacked_spec(n_slots: int, mesh: Mesh, lead_dims: int = 1) -> P:
     return P(*([None] * lead_dims), dp)
 
 
+def stage_shardings(mesh: Mesh, carry, stage_cache=None):
+    """NamedSharding tree for the continuous-batching staging queue
+    ``{"seq", "rows"[, "cache"]}``: the per-row carry states shard like
+    the carry itself (slot dim 0 over batch axes — stage row q feeds
+    slot rows, so keeping both on the same layout makes the in-scan
+    install a gather/scatter XLA already knows how to move), the tiny
+    seq keys replicate, and a ring-layout stage cache follows
+    CACHE_RULES exactly like the resident cache it is copied into."""
+    repl = NamedSharding(mesh, P())
+    sh = {"seq": repl, "rows": to_named(carry_specs(carry, mesh), mesh)}
+    if stage_cache is not None:
+        sh["cache"] = to_named(cache_specs(stage_cache, mesh), mesh)
+    return sh
+
+
 def window_shardings(mesh: Mesh, params, cache, carry,
                      grains: dict[str, int] | None = None, *,
                      param_shardings=None, cache_shardings=None,
                      draft_params=None, draft_cache=None,
                      draft_param_shardings=None,
-                     draft_cache_shardings=None, spec_outputs=False):
+                     draft_cache_shardings=None, spec_outputs=False,
+                     stage=None):
     """(in_shardings, out_shardings) for the serving engine's fused decode
-    window ``window(params, cache, carry) -> (cache, carry, toks, emits)``.
+    window ``window(params, cache, carry) -> (cache, carry, toks, emits,
+    n_active)``.
 
     Arguments may be arrays, numpy arrays, or ShapeDtypeStructs — only
     shape/dtype are read.  Params follow PARAM_RULES (TP heads / FSDP,
@@ -327,18 +344,24 @@ def window_shardings(mesh: Mesh, params, cache, carry,
     sequence), carry leaves follow carry_specs (slot axis — the
     speculative accept mask, key chain and fed-token history are ordinary
     slot-sharded leaves here); the stacked (steps, B[, S]) token/emit
-    outputs shard their slot dim.  Callers that already derived the
-    param/cache NamedSharding trees (the engine does, for device_put)
-    pass them via ``param_shardings``/``cache_shardings`` so the jit's
-    in_shardings cannot diverge from actual placement.
+    outputs shard their slot dim and the per-iteration active-slot count
+    replicates.  Callers that already derived the param/cache
+    NamedSharding trees (the engine does, for device_put) pass them via
+    ``param_shardings``/``cache_shardings`` so the jit's in_shardings
+    cannot diverge from actual placement.
 
     Speculative windows reuse the same rules: ``spec_outputs`` appends
     the stacked accepted/proposed counters, and a layer-fraction draft
     (``draft_params``/``draft_cache``) threads a second param/cache pair
     through — window(params, draft_params, cache, draft_cache, carry) ->
-    (cache, draft_cache, carry, toks, emits, accepted, proposed).  No new
-    collective patterns: the draft trees follow PARAM_RULES/CACHE_RULES
-    verbatim."""
+    (cache, draft_cache, carry, toks, emits, accepted, proposed,
+    n_active).  No new collective patterns: the draft trees follow
+    PARAM_RULES/CACHE_RULES verbatim.
+
+    ``stage`` (the continuous-batching staging tree, see
+    :func:`stage_shardings`) appends a 4th input and splices the carried
+    swap bookkeeping — window(..., carry, stage) -> (cache, carry, seq,
+    swap_slot, swap_iter, toks, emits, [acc, prop,] n_active)."""
     ps = (param_shardings if param_shardings is not None
           else to_named(param_specs(params, mesh, grains=grains), mesh))
     cs = (cache_shardings if cache_shardings is not None
@@ -346,16 +369,26 @@ def window_shardings(mesh: Mesh, params, cache, carry,
     ss = to_named(carry_specs(carry, mesh), mesh)
     n_slots = jax.tree.leaves(carry)[0].shape[0]
     ts = NamedSharding(mesh, slot_stacked_spec(n_slots, mesh))
+    repl = NamedSharding(mesh, P())
     if draft_cache is not None:
         dps = (draft_param_shardings if draft_param_shardings is not None
                else to_named(param_specs(draft_params, mesh, grains=grains),
                              mesh))
         dcs = (draft_cache_shardings if draft_cache_shardings is not None
                else to_named(cache_specs(draft_cache, mesh), mesh))
-        return (ps, dps, cs, dcs, ss), (cs, dcs, ss, ts, ts, ts, ts)
-    if spec_outputs:
-        return (ps, cs, ss), (cs, ss, ts, ts, ts, ts)
-    return (ps, cs, ss), (cs, ss, ts, ts)
+        if stage is not None:
+            raise ValueError(
+                "continuous batching does not support the layer-fraction "
+                "draft (its ring has no staged twin)")
+        return ((ps, dps, cs, dcs, ss),
+                (cs, dcs, ss, ts, ts, ts, ts, repl))
+    outs = (ts, ts, ts, ts) if spec_outputs else (ts, ts)
+    if stage is not None:
+        stage_sh = stage_shardings(
+            mesh, carry, stage_cache=stage.get("cache"))
+        return ((ps, cs, ss, stage_sh),
+                (cs, ss, repl, repl, repl) + outs + (repl,))
+    return (ps, cs, ss), (cs, ss) + outs + (repl,)
 
 
 def batch_specs(batch, mesh: Mesh):

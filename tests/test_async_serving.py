@@ -1,9 +1,11 @@
 """Overlapped-pipeline parity and lifecycle.
 
-The overlapped engine (``overlap=True``) keeps two decode windows in
-flight, admits concurrently with in-flight decode, and hands token
-harvesting to a backlog worker thread — none of which may change a
-single emitted token.  Every test here pins the async engine's streams
+The overlapped engine (``overlap=True``) keeps ``pipeline_depth``
+decode windows in flight, admits concurrently with in-flight decode
+(staging prefill on a worker thread), hands token harvesting to a
+backlog worker thread, and — with ``continuous=True`` — installs staged
+requests into freed slots INSIDE the fused scan — none of which may
+change a single emitted token.  Every test here pins the async engine's streams
 TOKEN-FOR-TOKEN to the blocking engine's across cache variants,
 backends, layouts, speculation, and (in the `mesh` CI job) a forced
 (2, 4) host mesh, and checks the structural contracts the pipeline adds:
@@ -159,6 +161,176 @@ class TestAsyncStreamParity:
         assert m["tokens_per_s"] > 0.0
 
 
+class TestContinuousBatching:
+    """continuous=True: staged requests install into freed slots INSIDE
+    the fused scan (device-side mid-window slot swap), at any pipeline
+    depth, with admission prefill staged on a worker thread — all of it
+    stream-invariant against the blocking engine."""
+
+    @pytest.mark.parametrize("depth,continuous", [
+        (2, False), (3, False), (2, True), (3, True),
+    ])
+    def test_depth_and_swap_parity(self, depth, continuous):
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts)
+        got, eng = _serve(cfg, params, prompts, overlap=True,
+                          pipeline_depth=depth, continuous=continuous)
+        assert got == ref, (depth, continuous)
+        m = eng.metrics()
+        assert m["pipeline_depth"] == depth
+        assert m["continuous"] is continuous
+        assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m
+
+    @pytest.mark.parametrize("case,backend", [
+        ("dense", "einsum"), ("int8_latent", "einsum"),
+        ("latent", "pallas"),
+    ])
+    def test_variant_backend_parity(self, case, backend):
+        cfg, params = _model(case)
+        cfg = dataclasses.replace(cfg, attn_backend=backend)
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts)
+        got, _ = _serve(cfg, params, prompts, overlap=True,
+                        pipeline_depth=3, continuous=True)
+        assert got == ref, (case, backend)
+
+    @pytest.mark.parametrize("spec_depth", [0, 2])
+    def test_paged_continuous_matches_sync_ring(self, spec_depth):
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts)
+        got, eng = _serve(cfg, params, prompts, overlap=True,
+                          pipeline_depth=3, continuous=True,
+                          cache_layout="paged", spec_depth=spec_depth,
+                          draft="ngram" if spec_depth else None)
+        assert got == ref, spec_depth
+        assert eng.metrics()["slot_swaps"] > 0
+
+    def test_chunked_mixed_lengths_match_sync(self):
+        """Chunked prefill + staggered budgets: slots free and refill
+        mid-window while other slots are still ingesting prompt chunks."""
+        cfg, params = _model("latent")
+        g = np.random.default_rng(23)
+        reqs = [(g.integers(0, cfg.vocab_size,
+                            int(g.integers(3, 30))).astype(np.int32),
+                 4 + i % 5) for i in range(8)]
+
+        def serve(**kw):
+            eng = Engine(cfg, params, max_slots=4, max_len=40,
+                         prefill_chunk=6, sync_every=4, **kw)
+            for i, (pr, mn) in enumerate(reqs):
+                eng.submit(Request(uid=i, prompt=pr.copy(),
+                                   max_new_tokens=mn))
+            done = eng.run()
+            eng.close()
+            return {r.uid: r.out_tokens for r in done}
+
+        assert serve(overlap=True, pipeline_depth=3,
+                     continuous=True) == serve()
+
+    def test_inline_admission_matches_threaded(self):
+        """admission_thread=False stages on the dispatch loop instead of
+        the worker — ordering (and therefore streams) cannot differ."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg, n=8)
+        ref, et = _serve(cfg, params, prompts, overlap=True,
+                         pipeline_depth=3, continuous=True)
+        got, ei = _serve(cfg, params, prompts, overlap=True,
+                         pipeline_depth=3, continuous=True,
+                         admission_thread=False)
+        assert got == ref
+        assert et.metrics()["admission_thread"] is True
+        assert ei.metrics()["admission_thread"] is False
+        for eng in (et, ei):
+            m = eng.metrics()
+            assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m
+
+    def test_saturating_load_swaps_in_scan(self):
+        """More requests than slots: continuation requests install via
+        the device-side staging queue, not boundary placement — the swap
+        counter and the sampled-stream parity prove the install path."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg, n=10)
+        ref, _ = _serve(cfg, params, prompts, sampling=SAMPLED)
+        got, eng = _serve(cfg, params, prompts, sampling=SAMPLED,
+                          overlap=True, pipeline_depth=3, continuous=True)
+        assert got == ref
+        m = eng.metrics()
+        assert m["slot_swaps"] > 0
+        assert m["occupancy_device_mean"] > 0.0
+        assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m
+
+    def test_profile_records_stage_timeline(self):
+        cfg, params = _model("latent")
+        _, eng = _serve(cfg, params, _prompts(cfg), overlap=True,
+                        pipeline_depth=3, continuous=True, profile=True)
+        prof = eng.metrics()["profile"]
+        for stage in ("dispatch", "harvest", "bookkeep",
+                      "admission_stage", "backlog_drain",
+                      "admission_worker"):
+            assert stage in prof["seconds"], prof
+            assert prof["seconds"][stage] >= 0.0
+        assert sum(prof["shares"].values()) == pytest.approx(1.0)
+        assert eng._prof_events                   # profile=True: timeline on
+        assert all(set(e) == {"stage", "t", "dur"}
+                   for e in eng._prof_events)
+        # always-on aggregate, opt-in timeline: no profile, no events
+        _, eng2 = _serve(cfg, params, _prompts(cfg, n=2), overlap=True)
+        assert eng2.metrics()["profile"]["seconds"]["dispatch"] >= 0.0
+        assert not eng2._prof_events
+
+    def test_bad_configs_rejected(self):
+        cfg, params = _model("latent")
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            Engine(cfg, params, max_slots=2, max_len=40, overlap=True,
+                   pipeline_depth=0)
+        with pytest.raises(ValueError):
+            Engine(cfg, params, max_slots=2, max_len=40,
+                   pipeline_depth=3)            # depth needs overlap
+        with pytest.raises(ValueError):
+            Engine(cfg, params, max_slots=2, max_len=40, continuous=True)
+        with pytest.raises(ValueError, match="layer"):
+            Engine(cfg, params, max_slots=2, max_len=40, overlap=True,
+                   continuous=True, spec_depth=2, draft="layers:2")
+
+
+class TestAdaptiveSpec:
+    """adaptive_spec=True: a slot whose draft acceptance stays under the
+    floor after enough proposals is degraded to plain decode at a window
+    boundary — output streams are invariant (verification would have
+    rejected those drafts anyway)."""
+
+    def test_streams_invariant_and_degrades_cold_drafts(self):
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts, max_new=16)
+        # layers:2 over random-init weights: acceptance ~0, so every slot
+        # crosses ADAPTIVE_MIN_PROPOSED with a sub-floor accept rate
+        got, eng = _serve(cfg, params, prompts, max_new=16, spec_depth=2,
+                          draft="layers:2", adaptive_spec=True)
+        assert got == ref
+        m = eng.metrics()
+        assert m["adaptive_spec"] is True
+        assert m["spec_degraded"] > 0, m
+
+    def test_overlap_continuous_parity_and_metric(self):
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg, n=8)
+        ref, _ = _serve(cfg, params, prompts, max_new=12)
+        got, eng = _serve(cfg, params, prompts, max_new=12, overlap=True,
+                          pipeline_depth=3, continuous=True, spec_depth=2,
+                          draft="ngram", adaptive_spec=True)
+        assert got == ref
+        assert eng.metrics()["spec_degraded"] >= 0
+
+    def test_requires_speculation(self):
+        cfg, params = _model("latent")
+        with pytest.raises(ValueError, match="spec_depth"):
+            Engine(cfg, params, max_slots=2, max_len=40,
+                   adaptive_spec=True)
+
+
 class TestAOT:
     def test_aot_no_retrace_and_stream_parity(self):
         """AOT compiles the window exactly once and every prefill bucket
@@ -179,6 +351,26 @@ class TestAOT:
         eng.close()
         assert {r.uid: r.out_tokens for r in done} == ref
         assert eng.trace_counts == compiled, "serving retraced an executable"
+
+    def test_aot_continuous_depth3_no_retrace(self):
+        """The continuous window (carry + staging-queue signature) AOT-
+        compiles once; a full depth-3 continuous serve — staging
+        scatters, in-scan installs, gen-guarded refills — must not trace
+        anything new."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg, n=8)
+        ref, _ = _serve(cfg, params, prompts)
+        eng = Engine(cfg, params, max_slots=4, max_len=40, overlap=True,
+                     aot=True, pipeline_depth=3, continuous=True)
+        compiled = dict(eng.trace_counts)
+        assert compiled["window"] == 1
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=6))
+        done = eng.run()
+        eng.close()
+        assert {r.uid: r.out_tokens for r in done} == ref
+        assert eng.trace_counts == compiled, "serving retraced an executable"
+        assert eng.metrics()["slot_swaps"] > 0
 
     def test_aot_sync_engine_matches(self):
         """aot is orthogonal to overlap: the blocking engine driven off
@@ -323,6 +515,121 @@ class TestTokenBacklog:
         with pytest.raises(RuntimeError, match="closed"):
             bl.put(lambda: None)
 
+    def test_worker_error_reraises_on_put(self):
+        """A crash surfaces on the NEXT put too, not only flush/close —
+        the dispatch loop must fail fast instead of queueing into a dead
+        worker forever."""
+        from repro.serving.pipeline import TokenBacklog
+        bl = TokenBacklog(name="bl-put-err")
+        bl.put(lambda: 1 / 0)
+        bl._q.join()                         # item processed, error latched
+        with pytest.raises(RuntimeError, match="bl-put-err"):
+            bl.put(lambda: None)
+        bl.close()
+
+    def test_worker_error_reraises_on_close(self):
+        from repro.serving.pipeline import TokenBacklog
+        bl = TokenBacklog(name="bl-close-err")
+        bl.put(lambda: 1 / 0)
+        with pytest.raises(RuntimeError, match="bl-close-err"):
+            bl.close()
+        bl.close()                           # still idempotent after raise
+
+    def test_error_skips_rest_but_preserves_liveness(self):
+        """Items queued after a crash are not executed (the drain guard),
+        and the worker still joins cleanly."""
+        from repro.serving.pipeline import TokenBacklog
+        ran = []
+        bl = TokenBacklog(name="bl-skip")
+        bl.put(lambda: ran.append(0))
+        bl.put(lambda: 1 / 0)
+        bl.put(lambda: ran.append(1))        # enqueued before error latched
+        with pytest.raises(RuntimeError, match="bl-skip"):
+            bl.flush()
+        assert ran == [0]                    # post-crash item skipped
+        bl.close()
+        assert not bl.alive
+
+    def test_close_during_flush_from_another_thread(self):
+        """flush() on one thread + close() on another: both return, every
+        item runs exactly once, the worker joins."""
+        import time
+        from repro.serving.pipeline import TokenBacklog
+        ran = []
+        bl = TokenBacklog(name="bl-race")
+        for i in range(20):
+            bl.put(lambda i=i: (time.sleep(0.005), ran.append(i)))
+        flusher = threading.Thread(target=bl.flush)
+        flusher.start()
+        bl.close()
+        flusher.join(timeout=10)
+        assert not flusher.is_alive()
+        assert ran == list(range(20))
+        assert not bl.alive
+
+    def test_fifo_under_slow_consumers(self):
+        """Strict put() order even when item durations vary wildly — the
+        single-worker FIFO is what keeps overlapped streams identical to
+        sync streams."""
+        import time
+        from repro.serving.pipeline import TokenBacklog
+        g = np.random.default_rng(5)
+        delays = g.uniform(0.0, 0.004, 50)
+        out = []
+        bl = TokenBacklog()
+        for i, d in enumerate(delays):
+            bl.put(lambda i=i, d=d: (time.sleep(d), out.append(i)))
+        bl.flush()
+        assert out == list(range(50))
+        bl.close()
+
+
+class TestAdmissionWorker:
+    """The admission-prefill worker primitive (repro.serving.pipeline):
+    capacity-gated take/prepare off-thread, crash re-raise on poll."""
+
+    def test_prepares_waves_up_to_capacity(self):
+        import collections
+        from repro.serving.pipeline import AdmissionWorker
+        queue = collections.deque(range(10))
+
+        def take(n):
+            return [queue.popleft() for _ in range(min(n, len(queue)))]
+
+        w = AdmissionWorker(take, lambda reqs: ("wave", list(reqs)),
+                            name="adm-test")
+        w.kick(3)
+        assert w.wait(timeout=5.0)
+        waves = w.poll()
+        assert waves == [("wave", [0, 1, 2])]
+        assert len(queue) == 7               # capacity bounded the take
+        w.close()
+
+    def test_crash_reraises_on_poll_once(self):
+        from repro.serving.pipeline import AdmissionWorker
+
+        def boom(reqs):
+            raise RuntimeError("prefill exploded")
+
+        w = AdmissionWorker(lambda n: [1], boom, name="adm-crash")
+        w.kick(1)
+        assert w.wait(timeout=5.0)           # crash counts as "ready"
+        with pytest.raises(RuntimeError, match="adm-crash"):
+            w.poll()
+        assert w.poll() == []                # raised once, then drained
+        w.close()
+
+    def test_wait_times_out_when_nothing_upstream(self):
+        import time
+        from repro.serving.pipeline import AdmissionWorker
+        w = AdmissionWorker(lambda n: [], lambda reqs: reqs,
+                            name="adm-idle")
+        w.kick(4)
+        t0 = time.perf_counter()
+        assert not w.wait(timeout=0.2)       # empty take: no wave, no hang
+        assert time.perf_counter() - t0 < 5.0
+        w.close()
+
 
 class TestAsyncMesh:
     """The overlapped pipeline over a (2, 4) mesh (runs in the `mesh` CI
@@ -359,3 +666,17 @@ class TestAsyncMesh:
                           mesh=mesh24)
         assert got == ref
         assert eng.trace_counts["window"] == 1
+
+    def test_continuous_depth3_on_mesh(self, mesh24):
+        """The staging queue + in-scan install under shard_map: stage
+        rows shard with the cache pool, the swap scatter stays mode="drop"
+        dataflow — streams still equal the single-device sync engine."""
+        cfg, params = _model("latent")
+        prompts = _prompts(cfg)
+        ref, _ = _serve(cfg, params, prompts)
+        got, eng = _serve(cfg, params, prompts, overlap=True, mesh=mesh24,
+                          pipeline_depth=3, continuous=True)
+        assert got == ref
+        m = eng.metrics()
+        assert m["slot_swaps"] > 0
+        assert m["host_syncs"] == m["windows"] + m["admission_syncs"], m

@@ -1,6 +1,6 @@
 """The serving perf-regression gate: row matching on (variant, backend,
-mesh, spec_depth, draft, cache_layout, page_size, workload,
-overlap), threshold
+mesh, spec_depth, draft, cache_layout, page_size, workload, overlap,
+pipeline_depth, continuous), threshold
 semantics, and the skip paths (no prior artifact / changed bench
 identity) that keep CI bootstrappable."""
 
@@ -40,7 +40,7 @@ class TestCompareEntries:
         new = _entry([_row(tps=15.0)])          # -25%
         rep = compare_entries(prev, new, threshold=0.2)
         assert len(rep["regressions"]) == 1
-        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-/ring/0/-/False"
+        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-/ring/0/-/False/2/False"
         assert rep["regressions"][0]["drop"] == pytest.approx(0.25)
 
     def test_spec_rows_match_on_depth_and_draft(self):
@@ -54,7 +54,7 @@ class TestCompareEntries:
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["compared"] == 2
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2/ring/0/-/False"]
+        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2/ring/0/-/False/2/False"]
 
     def test_mesh_rows_distinct(self):
         prev = _entry([_row(mesh="1x1", tps=20.0),
@@ -63,7 +63,7 @@ class TestCompareEntries:
                       _row(mesh="2x4", tps=3.0)])       # -25% on the mesh
         rep = compare_entries(prev, new)
         assert [r["row"] for r in rep["regressions"]] == \
-            ["latent/einsum/2x4/-/-/ring/0/-/False"]
+            ["latent/einsum/2x4/-/-/ring/0/-/False/2/False"]
 
     def test_changed_bench_identity_skips(self):
         prev = _entry([_row(tps=20.0)])
@@ -94,7 +94,33 @@ class TestCompareEntries:
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["compared"] == 1
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/-/-/ring/0/-/True"]
+        assert rep["only_new"] == ["latent/einsum/1x1/-/-/ring/0/-/True/2/False"]
+
+    def test_old_overlap_rows_match_depth2_baselines(self):
+        """The classic double buffer IS pipeline_depth=2: rows written
+        before the depth knob existed must keep matching today's
+        explicit depth-2 rows, and non-continuous rows match rows
+        predating the continuous flag."""
+        old = _row(tps=20.0, overlap=True)
+        new = _row(tps=20.0, overlap=True, pipeline_depth=2,
+                   continuous=False)
+        assert row_key(old) == row_key(new)
+
+    def test_depth3_and_continuous_rows_are_new_identities(self):
+        """A deeper pipeline or the mid-window slot swap changes what is
+        being measured — those rows never compare against the depth-2
+        boundary-only baseline."""
+        prev = _entry([_row(tps=100.0, overlap=True)])
+        new = _entry([_row(tps=100.0, overlap=True),
+                      _row(tps=40.0, overlap=True, pipeline_depth=3),
+                      _row(tps=40.0, overlap=True, pipeline_depth=3,
+                           continuous=True)])
+        rep = compare_entries(prev, new, threshold=0.2)
+        assert rep["compared"] == 1
+        assert rep["regressions"] == []
+        assert rep["only_new"] == [
+            "latent/einsum/1x1/-/-/ring/0/-/True/3/False",
+            "latent/einsum/1x1/-/-/ring/0/-/True/3/True"]
 
     def test_paged_rows_distinct_from_ring(self):
         prev = _entry([_row(tps=20.0)])
@@ -102,7 +128,7 @@ class TestCompareEntries:
                       _row(tps=1.0, cache_layout="paged", page_size=8)])
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/-/-/paged/8/-/False"]
+        assert rep["only_new"] == ["latent/einsum/1x1/-/-/paged/8/-/False/2/False"]
 
 
 class TestMainCLI:

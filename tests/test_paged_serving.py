@@ -168,6 +168,67 @@ def test_shared_system_prompt_shares_pages():
     assert m["pages_peak"] < unshared
 
 
+def test_pin_prefixes_survive_pool_churn():
+    """pin_prefixes=K: the hottest registered prefix pages park at
+    refcount 0 instead of joining the free list, so a flood of disjoint
+    prompts cannot recycle them — a later request with the same system
+    prompt resurrects the pinned pages instead of re-prefilling."""
+    cfg, params = _model("latent")
+    r = np.random.RandomState(11)
+    sysp = r.randint(1, cfg.vocab_size, size=(16,)).astype(np.int32)
+
+    def shared_load(uids):
+        return [Request(uid=u, prompt=np.concatenate(
+            [sysp, r.randint(1, cfg.vocab_size, size=(3,)).astype(np.int32)]),
+            max_new_tokens=4) for u in uids]
+
+    eng = Engine(cfg, params, max_slots=4, max_len=48, cache_layout="paged",
+                 page_size=8, pin_prefixes=2)
+    for q in shared_load(range(2)):          # register + hit -> pinned
+        eng.submit(q)
+    eng.run()
+    m = eng.metrics()
+    assert m["pin_prefixes"] == 2
+    assert m["pages_pinned"] == 2            # the 16-token prefix = 2 pages
+    # flood with disjoint prompts sized to churn the whole free list
+    flood = [Request(uid=100 + i,
+                     prompt=r.randint(1, cfg.vocab_size,
+                                      size=(20,)).astype(np.int32),
+                     max_new_tokens=4) for i in range(8)]
+    for q in flood:
+        eng.submit(q)
+    eng.run()
+    res_before = eng.metrics()["prefix_resurrections"]
+    for q in shared_load(range(200, 202)):   # prefix still resident
+        eng.submit(q)
+    eng.run()
+    m = eng.metrics()
+    assert m["prefix_resurrections"] > res_before, m
+    assert m["pages_pinned"] == 2
+
+    # token parity: pinning is an allocator policy, never a stream change
+    def drive(**kw):
+        e = Engine(cfg, params, max_slots=4, max_len=48,
+                   cache_layout="paged", page_size=8, **kw)
+        for q in shared_load(range(4)):
+            e.submit(q)
+        return {q.uid: q.out_tokens for q in e.run()}
+
+    r = np.random.RandomState(11)            # replay the same tails
+    ref = drive()
+    r = np.random.RandomState(11)
+    assert drive(pin_prefixes=2) == ref
+
+
+def test_pin_prefixes_requires_paged_layout():
+    cfg, params = _model("latent")
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, params, max_slots=2, max_len=MAX_LEN, pin_prefixes=2)
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_slots=2, max_len=MAX_LEN,
+               cache_layout="paged", pin_prefixes=-1)
+
+
 def test_page_budget_gates_admission():
     cfg, params = _model("latent")
     prompts = _prompts(cfg, n=4)

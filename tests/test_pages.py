@@ -127,6 +127,88 @@ def test_resurrect_pulls_from_middle_of_free_list():
         pool.alloc(1)                        # victim is held, pool is dry
 
 
+# -- pinning ------------------------------------------------------------------
+
+def test_pinned_page_survives_alloc_flood():
+    pool = PagePool(6)
+    (pg,) = pool.alloc(1)
+    pool.pin(pg)
+    pool.free(pg)                            # refcount 0: parks, not freed
+    assert pool.pinned == 1
+    assert pool.is_pinned(pg)
+    # a flood that drains the whole free list never recycles the pin
+    flood = pool.alloc(pool.free_count)
+    assert pg not in flood
+    with pytest.raises(RuntimeError):
+        pool.alloc(1)                        # dry, yet the pin still parked
+    assert pool.resurrect(pg) == pg          # content stayed resident
+    pool.free(pg)
+    for p in flood:
+        pool.free(p)
+
+
+def test_pin_free_page_pulls_it_off_free_list():
+    pool = PagePool(4)
+    (pg,) = pool.alloc(1)
+    pool.free(pg)                            # on the free list
+    free_before = pool.free_count
+    pool.pin(pg)                             # pin-after-free: parks it
+    assert pool.free_count == free_before - 1
+    assert pg not in pool.alloc(pool.free_count)
+
+
+def test_unpin_returns_parked_page_to_free_list():
+    pool = PagePool(4)
+    (pg,) = pool.alloc(1)
+    pool.pin(pg)
+    pool.free(pg)
+    free_before = pool.free_count
+    pool.unpin(pg)
+    assert pool.free_count == free_before + 1
+    assert not pool.is_pinned(pg)
+    assert pg in pool.alloc(pool.free_count)  # recyclable again
+
+
+def test_unpin_live_page_keeps_it_allocated():
+    pool = PagePool(4)
+    (pg,) = pool.alloc(1)
+    pool.pin(pg)
+    pool.unpin(pg)                           # still refcount 1
+    assert pool.refcount(pg) == 1
+    assert pool.free(pg)                     # normal lifecycle afterwards
+
+
+def test_pin_unpin_idempotent_and_range_checked():
+    pool = PagePool(4)
+    (pg,) = pool.alloc(1)
+    pool.pin(pg)
+    pool.pin(pg)
+    assert pool.pinned == 1
+    pool.unpin(pg)
+    pool.unpin(pg)
+    assert pool.pinned == 0
+    with pytest.raises(ValueError):
+        pool.pin(NULL_PAGE)
+    with pytest.raises(ValueError):
+        pool.pin(99)
+
+
+def test_pinned_page_counts_stay_consistent():
+    """A parked pinned page is resident, so it counts as used (it is off
+    the free list) — used + free always partitions the allocatable pool,
+    pins included."""
+    pool = PagePool(8)
+    pages = pool.alloc(3)
+    pool.pin(pages[0])
+    pool.free(pages[0])                      # parked: resident, not free
+    assert pool.refcount(pages[0]) == 0
+    assert pool.used == 3                    # 2 live + 1 parked
+    assert pool.used + pool.free_count == pool.n_pages - 1
+    pool.unpin(pages[0])                     # rejoins the free list
+    assert pool.used == 2
+    assert pool.used + pool.free_count == pool.n_pages - 1
+
+
 # -- prefix registry ----------------------------------------------------------
 
 def test_prefix_key_depends_on_full_prefix():

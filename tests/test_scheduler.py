@@ -218,6 +218,65 @@ class TestShardAwareWaves:
             Scheduler(4, 32, slot_shards=3)
 
 
+class TestStagedAdmission:
+    """The staged set between queue and slots (the admission worker's
+    input): ``take_staged`` commits to queue-head requests in FIFO
+    order, ``place``/``place_wave`` bind them to slots later — and the
+    head-of-line contract survives the indirection."""
+
+    @staticmethod
+    def _req(uid):
+        return Request(uid=uid, prompt=np.array([1, 2, 3], np.int32))
+
+    def test_take_staged_pops_queue_head_fifo(self):
+        s = Scheduler(4, 32)
+        for i in range(5):
+            s.submit(self._req(i))
+        got = s.take_staged(3)
+        assert [r.uid for r in got] == [0, 1, 2]
+        assert [r.uid for r in s.staged] == [0, 1, 2]
+        assert [r.uid for r in s.queue] == [3, 4]
+        assert s.queue_depth == 5            # staged still count as waiting
+        assert s.has_work
+
+    def test_place_binds_staged_head_and_frees_it(self):
+        s = Scheduler(4, 32)
+        s.submit(self._req(0))
+        (req,) = s.take_staged(1)
+        s.place(2, req)
+        assert s.slot_req[2] is req
+        assert not s.staged
+        assert s.admitted_uids == [0]
+
+    def test_place_out_of_staged_order_raises(self):
+        s = Scheduler(4, 32)
+        s.submit(self._req(0))
+        s.submit(self._req(1))
+        a, b = s.take_staged(2)
+        with pytest.raises(RuntimeError, match="out of staged FIFO"):
+            s.place(0, b)
+        s.place(0, a)                        # head still placeable
+        s.place(1, b)
+
+    def test_place_into_occupied_slot_raises(self):
+        s = Scheduler(4, 32)
+        s.slot_req[1] = self._req(99)
+        s.submit(self._req(0))
+        (req,) = s.take_staged(1)
+        with pytest.raises(RuntimeError, match="occupied"):
+            s.place(1, req)
+
+    def test_place_wave_is_shard_aware_like_take_wave(self):
+        s = Scheduler(4, 32, slot_shards=2)
+        s.slot_req[0] = self._req(99)        # group 0: [1]; group 1: [2, 3]
+        for i in range(2):
+            s.submit(self._req(i))
+        reqs = s.take_staged(2)
+        placed = s.place_wave(reqs)
+        assert [sl for sl, _ in placed] == [2, 3]
+        assert [r.uid for _, r in placed] == [0, 1]
+
+
 class TestMetricsWindowBoundary:
     def test_metrics_consistent_between_windows(self, model):
         """Regression: occupancy/queue-depth counters must advance
