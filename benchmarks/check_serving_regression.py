@@ -26,18 +26,21 @@ DEFAULT_THRESHOLD = 0.20
 
 # identity of a row within an entry; everything else is measurement.
 # cache_layout/page_size/workload default for rows predating the paged
-# cache, overlap for rows predating the overlapped pipeline, and
+# cache, overlap for rows predating the overlapped pipeline,
 # pipeline_depth/continuous for rows predating the N-deep continuous-
 # batching pipeline (the classic double buffer IS depth 2, so old
-# overlap rows keep matching their depth-2 descendants), so old
+# overlap rows keep matching their depth-2 descendants), and
+# policy/lazy_pages for rows predating the pluggable admission layer
+# (fifo without lazy reservation IS the old hardcoded behavior), so old
 # baselines keep matching new rows of the same identity while brand-new
 # identities (paged, shared-prefix workloads, overlap, depth-3
-# continuous) skip cleanly as only_new.
+# continuous, non-fifo policies) skip cleanly as only_new.
 ROW_KEY = ("variant", "backend", "mesh", "spec_depth", "draft",
            "cache_layout", "page_size", "workload", "overlap",
-           "pipeline_depth", "continuous")
+           "pipeline_depth", "continuous", "policy", "lazy_pages")
 _KEY_DEFAULTS = {"cache_layout": "ring", "page_size": 0, "overlap": False,
-                 "pipeline_depth": 2, "continuous": False}
+                 "pipeline_depth": 2, "continuous": False,
+                 "policy": "fifo", "lazy_pages": False}
 
 
 def row_key(row: dict) -> tuple:

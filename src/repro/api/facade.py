@@ -113,9 +113,15 @@ def serve(artifact: CompressionArtifact | str, *, max_slots: int,
     knobs ``overlap`` / ``aot`` / ``pipeline_depth`` / ``continuous`` /
     ``admission_thread`` (N-deep window pipeline, device-side mid-window
     slot swap, threaded admission prefill, AOT-compiled executables),
-    plus ``adaptive_spec``, ``pin_prefixes`` and ``profile``; token
-    streams are invariant to all of these) pass through to the
-    Engine."""
+    the admission-policy trio ``policy`` / ``lazy_pages`` /
+    ``staging_depth`` — ``policy`` picks the admission order ("fifo",
+    "prefix-affinity", "reach-packing", or an ``AdmissionPolicy``
+    instance), ``lazy_pages`` allocates cache pages as generation
+    reaches them (preempting a policy-chosen victim on pool
+    exhaustion), ``staging_depth`` bounds the admission worker's
+    look-ahead — plus ``adaptive_spec``, ``pin_prefixes`` and
+    ``profile``; token streams are invariant to all of these) pass
+    through to the Engine."""
     from repro.serving.engine import Engine  # local: engine imports api too
 
     if isinstance(artifact, str):

@@ -98,6 +98,23 @@ def main(argv=None):
                     action=argparse.BooleanOptionalAction, default=None,
                     help="stage admission prefill on a worker thread "
                          "(default: on whenever --overlap is)")
+    ap.add_argument("--policy", default=None,
+                    choices=("fifo", "prefix-affinity", "reach-packing"),
+                    help="admission policy: 'fifo' (default, strict "
+                         "head-of-line), 'prefix-affinity' (group shared-"
+                         "prefix requests into one wave and skip their "
+                         "prefill via resident pages; paged only), "
+                         "'reach-packing' (admit short requests past a "
+                         "blocked long one, bounded bypass)")
+    ap.add_argument("--lazy-pages", action="store_true",
+                    help="lazy page reservation: allocate cache pages as "
+                         "generation reaches them instead of worst-case "
+                         "up front, preempting a policy-chosen victim on "
+                         "pool exhaustion (paged only; streams are "
+                         "identical)")
+    ap.add_argument("--staging-depth", type=int, default=None,
+                    help="max requests staged ahead by the admission "
+                         "worker (default 2x --slots)")
     ap.add_argument("--pin-prefixes", type=int, default=0,
                     help="pin the K hottest registered prefix pages "
                          "against pool recycling (paged layout only)")
@@ -138,6 +155,8 @@ def main(argv=None):
                  continuous=args.continuous,
                  admission_thread=args.admission_thread,
                  pin_prefixes=args.pin_prefixes,
+                 policy=args.policy, lazy_pages=args.lazy_pages,
+                 staging_depth=args.staging_depth,
                  adaptive_spec=args.adaptive_spec, profile=args.profile)
     spec = (f", spec_depth={args.spec_depth} ({eng.metrics()['draft']})"
             if args.spec_depth else "")
@@ -185,6 +204,12 @@ def main(argv=None):
         print(f"[serve] pages: peak {m['pages_peak']}/{m['pages_total']}, "
               f"{m['pages_shared']} shares, {m['cow_forks']} COW forks, "
               f"{m['prefix_resurrections']} prefix resurrections")
+        print(f"[serve] admission: policy={m['policy']}, "
+              f"{m['prefill_calls']} prefill calls "
+              f"({m['prefill_calls_saved']} saved), "
+              f"{m['preemptions']} preemptions"
+              + (f", {m['pages_parked']} pages parked"
+                 if m['pages_parked'] else ""))
     if eng.unfinished["queued"] or eng.unfinished["in_flight"]:
         print(f"[serve] WARNING unfinished: {eng.unfinished}")
     return finished

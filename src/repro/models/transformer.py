@@ -743,6 +743,44 @@ def swap_cache_slot(caches: Params, stage: Params, slot: jax.Array,
     }
 
 
+def wipe_pages(caches: Params, pages: jax.Array) -> Params:
+    """Reset the ``pos`` stamps of physical ``pages`` (1-D int32) of a
+    page-major cache pool to -1 (empty).  Position masking is the pool's
+    ONLY validity mechanism — a recycled page still holds its previous
+    holder's pos values, which ``_decode_mask`` would read as valid for
+    any new holder whose ``cur`` has passed them — so every page that is
+    mapped into a slot WITHOUT being covered by a prefill scatter (lazy
+    page reservation allocating ahead of ``cur``) must be wiped first.
+    Content leaves are left as-is: garbage latents under pos = -1 are
+    unreadable.  Padding ``pages`` with the null page 0 is harmless (its
+    pos is already -1 and nothing ever reads it as non-empty)."""
+    def one(path, leaf):
+        if getattr(path[-1], "key", None) != "pos":
+            return leaf
+        # scanned blocks carry a leading (n_per,) layer axis before the
+        # page axis; prefix/suffix leaves are page-major directly
+        if getattr(path[0], "key", None) == "blocks":
+            return leaf.at[:, pages].set(-1)
+        return leaf.at[pages].set(-1)
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def preempt_slot(st: dict, slot: int) -> dict:
+    """Evict serving-slot row ``slot`` from a fused-window carry: the
+    slot goes inactive (no further decode steps, no cache writes) and,
+    under continuous batching, its generation counter bumps so any
+    in-flight host scatter or harvested status targeting the old
+    occupant is redirected/stale-ified by the existing gen guards.  The
+    evicted request's sampling state was snapshotted host-side before
+    this call (see the engine's preemption path); everything else about
+    the row is dead until a new occupant installs over it."""
+    out = dict(st)
+    out["act"] = st["act"].at[slot].set(False)
+    if "gen" in st:
+        out["gen"] = st["gen"].at[slot].add(1)
+    return out
+
+
 def decode_loop(cfg: ModelConfig, params: Params, caches: Params,
                 tokens: jax.Array, cur: jax.Array, steps: int, *,
                 active: jax.Array | None = None, rng: jax.Array | None = None,

@@ -4,7 +4,12 @@ device-resident decode loop)."""
 
 from repro.serving.draft import DraftSpec
 from repro.serving.engine import Engine
+from repro.serving.policy import (AdmissionPolicy, FifoPolicy,
+                                  PrefixAffinityPolicy, ReachPackingPolicy,
+                                  get_policy)
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["DraftSpec", "Engine", "Request", "SamplingParams", "Scheduler"]
+__all__ = ["AdmissionPolicy", "DraftSpec", "Engine", "FifoPolicy",
+           "PrefixAffinityPolicy", "ReachPackingPolicy", "Request",
+           "SamplingParams", "Scheduler", "get_policy"]

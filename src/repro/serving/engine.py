@@ -79,7 +79,9 @@ from repro.serving import sampler as S
 from repro.serving.draft import DraftSpec
 from repro.serving.pages import PagePool, PrefixRegistry, prefix_key
 from repro.serving.pipeline import (AdmissionWorker, InflightWindow,
-                                    StagedEntry, StagedWave, TokenBacklog)
+                                    PreemptedRecord, StagedEntry, StagedWave,
+                                    TokenBacklog)
+from repro.serving.policy import AdmissionPolicy, get_policy
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Request, Scheduler
 from repro.sharding import rules as R
@@ -208,7 +210,10 @@ class Engine:
                  admission_thread: bool | None = None,
                  pin_prefixes: int = 0,
                  adaptive_spec: bool = False,
-                 profile: bool = False):
+                 profile: bool = False,
+                 policy: str | AdmissionPolicy | None = None,
+                 lazy_pages: bool = False,
+                 staging_depth: int | None = None):
         if backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=backend)
         if sync_every < 1:
@@ -288,6 +293,30 @@ class Engine:
         if pin_prefixes > 0 and cache_layout != "paged":
             raise ValueError("pin_prefixes pins page-pool prefixes; it "
                              "needs cache_layout='paged'")
+        resolved_policy = get_policy(policy)
+        if resolved_policy.groups_by_prefix and cache_layout != "paged":
+            raise ValueError(
+                f"policy={resolved_policy.name!r} groups admissions by "
+                f"shared prompt prefix; it needs cache_layout='paged' "
+                f"(the prefix registry lives in the page pool)")
+        if lazy_pages:
+            if cache_layout != "paged":
+                raise ValueError("lazy_pages defers page reservation; it "
+                                 "needs cache_layout='paged'")
+            if continuous:
+                raise ValueError(
+                    "lazy_pages is incompatible with continuous batching: "
+                    "the in-scan installer hands slots over mid-window, so "
+                    "boundary-granular page top-up/preemption cannot tell "
+                    "whose reach it is covering")
+            parsed = DraftSpec.parse(draft)
+            if parsed is not None and parsed.kind == "layers":
+                raise ValueError(
+                    "lazy_pages is incompatible with the layer-fraction "
+                    "draft: the draft's slot-major ring is not paged, so "
+                    "a preempted slot's draft state cannot be rebuilt")
+        if staging_depth is not None and staging_depth < 1:
+            raise ValueError("staging_depth must be >= 1")
         if spec_depth < 0:
             raise ValueError("spec_depth must be >= 0")
         if spec_depth > 0:
@@ -342,7 +371,17 @@ class Engine:
             n_slot_shards = 1
         self.scheduler = Scheduler(max_slots, max_len,
                                    prefill_chunk=prefill_chunk,
-                                   slot_shards=n_slot_shards)
+                                   slot_shards=n_slot_shards,
+                                   policy=resolved_policy)
+        self.policy = self.scheduler.policy
+        self.policy.configure(
+            page_size=self.page_size,
+            registry=self._prefixes if self._pages is not None else None)
+        self.lazy_pages = bool(lazy_pages)
+        # staging look-ahead: how many requests may sit prefilled-but-
+        # unmerged ahead of free slots (satellite: decoupled from B)
+        self.staging_depth = (int(staging_depth) if staging_depth is not None
+                              else 2 * max_slots)
         # Mesh-native placement: params by PARAM_RULES (TP heads / FSDP),
         # the pooled cache rings by CACHE_RULES (slot x sequence).
         param_shardings = R.to_named(
@@ -437,6 +476,10 @@ class Engine:
         self._mlock = threading.Lock()
         self._ttft_sum = 0.0         # summed submit -> first-token latency
         self._ttft_n = 0
+        self.preemptions = 0         # slots evicted by lazy reservation
+        self.prefill_calls = 0       # admission wave-prefill dispatches
+        self.prefill_calls_saved = 0  # admissions served without a prefill
+        self._preempted: deque[PreemptedRecord] = deque()
 
         # -- overlapped-pipeline state (inert when overlap=False) --------
         self.overlap = bool(overlap)
@@ -614,7 +657,8 @@ class Engine:
         cap = self.max_len - 1                  # submit() prompt cap
         if self.scheduler.prefill_chunk is not None:
             cap = min(cap, self.scheduler.prefill_chunk)
-        waves = sorted({_bucket(n, self.B) for n in range(1, self.B + 1)})
+        wcap = max(self.B, self.staging_depth)
+        waves = sorted({_bucket(n, wcap) for n in range(1, wcap + 1)})
         plens = sorted({_bucket(n, self.max_len) for n in range(1, cap + 1)})
         for w in waves:
             for p in plens:
@@ -988,7 +1032,10 @@ class Engine:
                       admission_thread: bool | None = None,
                       pin_prefixes: int = 0,
                       adaptive_spec: bool = False,
-                      profile: bool = False) -> "Engine":
+                      profile: bool = False,
+                      policy: str | AdmissionPolicy | None = None,
+                      lazy_pages: bool = False,
+                      staging_depth: int | None = None) -> "Engine":
         """Boot an engine straight from a saved compression artifact —
         the compress-offline / serve-forever workflow across processes.
         ``overlap``/``aot``/``pipeline_depth``/``continuous`` select the
@@ -1005,7 +1052,8 @@ class Engine:
                    pipeline_depth=pipeline_depth, continuous=continuous,
                    admission_thread=admission_thread,
                    pin_prefixes=pin_prefixes, adaptive_spec=adaptive_spec,
-                   profile=profile)
+                   profile=profile, policy=policy, lazy_pages=lazy_pages,
+                   staging_depth=staging_depth)
 
     # -- back-compat conveniences -------------------------------------------
 
@@ -1040,19 +1088,23 @@ class Engine:
 
     def _staging_capacity(self) -> int:
         """How many MORE requests admission may pull off the queue right
-        now: free device stage rows (continuous) or free slots, minus
-        what is already staged upstream but not yet merged."""
+        now: ``staging_depth`` bounds the prefilled-but-unmerged look-
+        ahead (default 2x the slot count, decoupled from ``max_slots``).
+        Pulling a deeper run per kick is what batches N staged prompts
+        into ONE bucketed wave prefill instead of N separate calls; the
+        stage-row / free-slot / page-budget bounds are enforced at the
+        boundary merge, where prepared waves wait head-of-line."""
         with self._sched_lock:
-            staged = len(self.scheduler.staged)
-            if self.continuous:
-                in_rows = sum(e is not None for e in self._stage_tab)
-                budget = self.B - in_rows
-                return max(0, budget - (staged - in_rows))
-            return max(0, len(self.scheduler.free_slots()) - staged)
+            return max(0, self.staging_depth - len(self.scheduler.staged))
 
     def _take_staged_locked(self, max_n: int) -> list[Request]:
         with self._sched_lock:
             return self.scheduler.take_staged(max_n)
+
+    def _count_prefill(self):
+        """One admission wave-prefill dispatch (any thread)."""
+        with self._mlock:
+            self.prefill_calls += 1
 
     def _record_token(self, req: Request, tok: int):
         """Credit one emitted token to a request: append, stamp ttft on
@@ -1099,6 +1151,103 @@ class Engine:
         reach = min(len(req.prompt) + req.max_new_tokens, self.max_len)
         return -(-reach // self.page_size)
 
+    @property
+    def _headroom(self) -> int:
+        """Tokens a slot can advance past its last boundary-visible
+        ``cur`` before the next lazy top-up runs: every window that can
+        be in flight when one is dispatched (the trailing harvest lags
+        by up to ``pipeline_depth`` windows, plus the new one) times the
+        worst per-iteration advance (one fed/sampled token plus up to
+        ``spec_depth`` accepted draft tokens)."""
+        per_window = self.sync_every * (self.spec_depth + 1)
+        depth = (self.pipeline_depth + 1) if self.overlap else 1
+        return per_window * depth
+
+    def _admit_need(self, req: Request, first_len: int) -> int:
+        """Pages admission must map up front.  Eager (default): the full
+        worst-case reach, so the device loop can never fault.  Lazy:
+        just the admitted coverage plus one top-up interval's headroom —
+        ``_lazy_topup`` grows the mapping at window boundaries as
+        ``cur`` approaches it, preempting a victim when the pool runs
+        dry."""
+        if not self.lazy_pages:
+            return self._pages_needed(req)
+        reach = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        return -(-min(first_len + self._headroom, reach) // self.page_size)
+
+    def _probe_prefix_len(self, req: Request) -> int:
+        """READ-ONLY registry probe: how many leading prompt tokens are
+        covered by resident pages right now, capped one page short of
+        the whole prompt (at least one prompt token must flow through
+        the decode loop so the first generated token has a step to be
+        sampled in when the prefill is skipped).  Heuristic — worker-
+        thread safe; the authoritative lookup+retain happens at the
+        boundary merge (``_map_shared_pages``), which may see more or
+        fewer resident pages and is correct either way."""
+        ps = self.page_size
+        hit = 0
+        for j in range((len(req.prompt) - 1) // ps):
+            if self._prefixes.lookup(prefix_key(req.prompt, j, ps)) is None:
+                break
+            hit += 1
+        return hit * ps
+
+    def _skip_prefill(self, req: Request) -> bool:
+        """Prefill-skip gate (prefix-affinity): admit with NO prefill
+        row when resident registry pages cover all but at most one
+        page's worth of the prompt — the remainder streams through the
+        ingest buffer, which is cheap only when it is short."""
+        if self._pages is None or not self.policy.groups_by_prefix:
+            return False
+        hit = self._probe_prefix_len(req)
+        return hit > 0 and len(req.prompt) - hit <= self.page_size
+
+    def _map_shared_pages(self, req: Request):
+        """Skip-path page mapping (no prefill row): the longest resident
+        registry prefix is retained/resurrected; the remainder is
+        freshly allocated and POS-WIPED on device, because no prefill
+        scatter covers it and a recycled page's stale positions would
+        otherwise read as valid cache (position masking is the paged
+        reader's validity mechanism).  Content for the wiped pages
+        arrives via the decode loop's ingest/generation writes, so they
+        are never registered.  Returns (mapping, hit_len)."""
+        ps = self.page_size
+        shared: list[int] = []
+        for j in range((len(req.prompt) - 1) // ps):
+            pg = self._prefixes.lookup(prefix_key(req.prompt, j, ps))
+            if pg is None:
+                break
+            shared.append(pg)
+        for pg in shared:
+            self._note_prefix_hit(pg)
+            if self._pages.refcount(pg) == 0:
+                self._pages.resurrect(pg)
+            else:
+                self._pages.retain(pg)
+        hit_len = len(shared) * ps
+        n_need = max(self._admit_need(req, hit_len), len(shared))
+        own = self._pages.alloc(n_need - len(shared))
+        for pg in own:
+            self._prefixes.drop_page(pg)
+            self._prefix_hits.pop(pg, None)
+        if own:
+            self.cache = T.wipe_pages(self.cache,
+                                      jnp.asarray(own, jnp.int32))
+        self._update_pins()
+        return shared + own, hit_len
+
+    def _assign_shared_pages(self, slot: int, req: Request) -> int:
+        """_map_shared_pages plus the slot bindings (page list + ptab
+        row); returns the shared coverage — the admitted ``cur``."""
+        mapping, hit_len = self._map_shared_pages(req)
+        self._slot_pages[slot] = list(mapping)
+        row = self._st["ptab"][slot]
+        row[:] = 0
+        row[: len(mapping)] = mapping
+        with self._mlock:
+            self.prefill_calls_saved += 1
+        return hit_len
+
     def _map_pages(self, req: Request, first_len: int):
         """Map ``req``'s logical pages to physical ones: longest
         registry-hit prefix is *retained* (refcount++, no copy), the rest
@@ -1115,7 +1264,7 @@ class Engine:
         the "copy" is free.  Generation never touches shared pages
         (writes start at first_len >= shared run end)."""
         ps = self.page_size
-        n_need = self._pages_needed(req)
+        n_need = self._admit_need(req, first_len)
         shared: list[int] = []
         lim = min(n_need, first_len // ps)
         for j in range(lim):
@@ -1184,60 +1333,109 @@ class Engine:
             elif self._pages.is_pinned(pg):
                 self._pages.unpin(pg)
 
+    def _page_fits(self):
+        """Page-budget admission gate: reserve each request's admission
+        need up front against a running budget (head-of-line under fifo;
+        other policies document their own skipping).  Conservative —
+        ignores prefix sharing, so a fitting wave always has real pages
+        even if every registry lookup misses.  Under lazy reservation
+        the need shrinks to coverage + headroom, but a request whose
+        worst-case reach exceeds the whole pool never fits: the top-up
+        path must be able to finish it once the pool is all hers."""
+        budget = self._pages.free_count
+
+        def fits(req: Request) -> bool:
+            nonlocal budget
+            if (self.lazy_pages
+                    and self._pages_needed(req) > self.n_pages - 1):
+                return False
+            need = self._admit_need(req, self.scheduler.first_chunk_len(req))
+            if need > budget:
+                return False
+            budget -= need
+            return True
+
+        return fits
+
+    def _skip_rows(self, reqs) -> tuple[list[int], int]:
+        """Prefill-row assignment for an admission run: request i rides
+        prefill row rows[i], or -1 when its prefill is skipped (resident
+        prefix pages).  Returns (rows, prefill-row count)."""
+        rows, w = [], 0
+        for r in reqs:
+            if self._skip_prefill(r):
+                rows.append(-1)
+            else:
+                rows.append(w)
+                w += 1
+        return rows, w
+
+    def _bucket_prompts(self, reqs, first_lens, rows, w):
+        """Pack the prefill members of an admission run into one
+        power-of-two (rows, prompt-len) bucket so a stream of ragged
+        admissions reuses O(log) jit traces.  The row cap is the staging
+        look-ahead (staged runs batch past the slot count); the length
+        cap is max_len (padding past the ring would silently drop a
+        fittable prompt prefix)."""
+        pf = [fl for fl, ri in zip(first_lens, rows) if ri >= 0]
+        # row cap: staged runs may batch up to staging_depth prompts in
+        # one wave — past the cap _bucket degenerates to the raw count,
+        # which would mint a fresh shape (and an AOT retrace) per run
+        W = _bucket(w, max(self.B, self.staging_depth))
+        P = _bucket(max(pf), self.max_len)
+        toks = np.zeros((W, P), np.int32)
+        lens = np.zeros((W,), np.int32)
+        for i, r in enumerate(reqs):
+            if rows[i] < 0:
+                continue
+            toks[rows[i], : first_lens[i]] = r.prompt[: first_lens[i]]
+            lens[rows[i]] = first_lens[i]
+        return toks, lens
+
     def _admission_wave(self):
-        """Host half of admission: take a wave off the queue and build
-        its shape-bucketed prefill inputs.  Shared by the sync and the
-        overlapped paths — the scheduler bookkeeping must be identical
-        for the parity contract to hold."""
+        """Host half of admission: take a wave off the queue (policy
+        order) and build its shape-bucketed prefill inputs.  Shared by
+        the sync and the overlapped paths — the scheduler bookkeeping
+        must be identical for the parity contract to hold."""
         if self._pages is None:
             wave = self.scheduler.take_wave()
         else:
-            # page-budget admission: reserve each request's worst-case
-            # reach up front (head-of-line FIFO — see take_wave).  The
-            # budget is conservative (ignores prefix sharing); actual
-            # allocation below may use fewer pages via retained prefixes.
-            budget = self._pages.free_count
-
-            def fits(req: Request) -> bool:
-                nonlocal budget
-                need = self._pages_needed(req)
-                if need > budget:
-                    return False
-                budget -= need
-                return True
-
-            wave = self.scheduler.take_wave(fits)
+            wave = self.scheduler.take_wave(self._page_fits())
         if not wave:
             return None
         first_lens = [self.scheduler.first_chunk_len(r) for _, r in wave]
-        # Bucket the wave to power-of-two (rows, prompt-len) shapes so a
-        # stream of ragged admissions reuses O(log) jit traces.  The row
-        # cap is the slot count; the length cap is max_len (padding past
-        # the ring would silently drop a fittable prompt prefix).
-        W = _bucket(len(wave), self.B)
-        P = _bucket(max(first_lens), self.max_len)
-        toks = np.zeros((W, P), np.int32)
-        lens = np.zeros((W,), np.int32)
-        for i, (_, r) in enumerate(wave):
-            toks[i, : first_lens[i]] = r.prompt[: first_lens[i]]
-            lens[i] = first_lens[i]
-        return wave, first_lens, toks, lens
+        rows, w = self._skip_rows([r for _, r in wave])
+        if w == 0:
+            return wave, first_lens, rows, None, None
+        toks, lens = self._bucket_prompts([r for _, r in wave],
+                                          first_lens, rows, w)
+        return wave, first_lens, rows, toks, lens
 
-    def _admit_prefill(self, wave, first_lens, toks, lens):
-        """Dispatch the wave prefill and chain the slot merges onto the
-        current cache futures.  Never blocks: the returned logits are a
-        (W, V) device future."""
-        tj, lj = self._prefill_args(toks, lens)
-        logits, new_cache = self._prefill(self.params, tj, lj)
-        slots = jnp.asarray([s for s, _ in wave])
+    def _admit_prefill(self, wave, first_lens, rows, toks, lens):
+        """Dispatch the wave prefill (when any row needs one) and chain
+        the slot merges onto the current cache futures.  Skip members
+        (rows[i] == -1) bind resident registry pages instead, mutating
+        ``first_lens`` in place to their shared coverage.  Never blocks:
+        the returned logits are a (W, V) device future, or None for an
+        all-skip wave."""
+        logits = new_cache = None
+        if toks is not None:
+            self._count_prefill()
+            tj, lj = self._prefill_args(toks, lens)
+            logits, new_cache = self._prefill(self.params, tj, lj)
         if self._pages is None:
+            # ring layout never skips (the gate needs the page registry)
+            slots = jnp.asarray([s for s, _ in wave])
             self.cache = _merge_slot(self.cache, new_cache, slots)
         else:
-            rows, cols, phys = [], [], []
+            rws, cols, phys = [], [], []
             for i, (slot, r) in enumerate(wave):
+                if rows[i] < 0:
+                    first_lens[i] = self._assign_shared_pages(slot, r)
+                    continue
                 mapping, scat = self._assign_pages(slot, r, first_lens[i])
                 for j in scat:
-                    rows.append(i)
+                    rws.append(rows[i])
                     cols.append(j)
                     phys.append(mapping[j])
             if phys:
@@ -1245,13 +1443,20 @@ class Engine:
                 # resident and must not be rewritten (their tail slots in
                 # new_cache hold pos=-1 filler, same as fresh pages get)
                 self.cache = _merge_slot_paged(
-                    self.cache, new_cache, jnp.asarray(rows),
+                    self.cache, new_cache, jnp.asarray(rws),
                     jnp.asarray(cols), jnp.asarray(phys), self.page_size)
-        if self.draft_cache is not None:
+        if self.draft_cache is not None and toks is not None:
             # the layer draft consumes the same wave so its ring tracks
-            # the target's (its logits here are irrelevant)
+            # the target's (its logits here are irrelevant).  A skip
+            # member's draft ring keeps stale content: its proposals are
+            # garbage until overwritten, which costs acceptance rate but
+            # never correctness (streams are invariant to proposals).
             _, dnew = self._draft_prefill(self.draft_params, tj, lj)
-            self.draft_cache = _merge_slot(self.draft_cache, dnew, slots)
+            dslots = [s for (s, _), ri in zip(wave, rows) if ri >= 0]
+            drows = [ri for ri in rows if ri >= 0]
+            self.draft_cache = _merge_slot(self.draft_cache, dnew,
+                                           jnp.asarray(dslots),
+                                           rows=jnp.asarray(drows))
         return logits
 
     def _admit_sample_first(self, reqs, first_lens, logits):
@@ -1325,30 +1530,40 @@ class Engine:
             st["left"][slot] = r.max_new_tokens
 
     def _admit(self):
-        """Synchronous admission: wave prefill, first-token sample, one
-        host sync, mirror writes."""
+        """Synchronous admission: wave prefill (skip members ride
+        resident registry pages instead), first-token sample for the
+        prefill rows, at most one host sync, mirror writes.  An all-skip
+        wave admits with ZERO device syncs — its first tokens come from
+        the decode loop's ingest steps."""
         taken = self._admission_wave()
         if taken is None:
             return
-        wave, first_lens, toks, lens = taken
-        logits = self._admit_prefill(wave, first_lens, toks, lens)
-        specs, keys0, eos, full, ks, first_dev = self._admit_sample_first(
-            [r for _, r in wave], first_lens, logits)
-        first = np.asarray(first_dev)
-        ks = np.asarray(ks)
-        self.host_syncs += 1
-        self.admission_syncs += 1
+        wave, first_lens, rows, toks, lens = taken
+        logits = self._admit_prefill(wave, first_lens, rows, toks, lens)
+        full = ks = first = None
+        if logits is not None:
+            preqs = [r for (_, r), ri in zip(wave, rows) if ri >= 0]
+            pflens = [fl for fl, ri in zip(first_lens, rows) if ri >= 0]
+            _, _, _, full, ks, first_dev = self._admit_sample_first(
+                preqs, pflens, logits)
+            first = np.asarray(first_dev)
+            ks = np.asarray(ks)
+            self.host_syncs += 1
+            self.admission_syncs += 1
         st = self._st
         for i, (slot, r) in enumerate(wave):
-            self._admit_bookkeep(slot, r, specs[i], first_lens[i], eos[i])
-            st["keys"][slot] = keys0[i]
-            if full[i]:
+            sp = r.sampling or self.sampling
+            eos_id = -1 if r.eos_id is None else r.eos_id
+            self._admit_bookkeep(slot, r, sp, first_lens[i], eos_id)
+            st["keys"][slot] = sp.slot_key(r.uid)
+            ri = rows[i]
+            if ri >= 0 and full[ri]:
                 # whole prompt prefilled: emit the first generated token
                 # right away (as the seed engine did) and advance the key
-                st["keys"][slot] = ks[i, 0]
-                st["tok"][slot] = first[i]
+                st["keys"][slot] = ks[ri, 0]
+                st["tok"][slot] = first[ri]
                 self._admit_tokens += 1
-                self._record_token(r, int(first[i]))
+                self._record_token(r, int(first[ri]))
                 if r.done:
                     self._finish(slot)
 
@@ -1368,6 +1583,249 @@ class Engine:
                     and st["bpos"][slot] >= st["avail"][slot]
                     and self.scheduler.pending_len(slot) > 0):
                 self._load_chunk(slot)
+
+    # -- lazy page reservation + preemption -----------------------------------
+    #
+    # With lazy_pages=True admission maps only the admitted coverage plus
+    # one top-up interval's headroom instead of the worst-case reach; at
+    # every window boundary _lazy_topup extends each active slot's
+    # mapping to stay ahead of ``cur``.  When the pool runs dry the
+    # admission policy picks a running victim to PREEMPT: its carry row,
+    # pages, and alloc stamps are snapshotted, its fully-written prompt
+    # pages are registered (so sharers or its own resurrection can find
+    # them), and its pages are freed.  Re-admission (_readmit_preempted,
+    # boundary priority over fresh admissions) resurrects surviving
+    # pages and rebuilds recycled ones by re-prefilling the fed history
+    # over just the lost page columns — streams are token-for-token
+    # identical to an un-preempted run because the carry row (keys, cur,
+    # left, ingest buffer) is restored verbatim.
+
+    def _lazy_topup(self):
+        """Boundary half of lazy reservation: extend every active slot's
+        page mapping to cover ``cur + headroom`` (capped at its reach),
+        position-wiping the fresh pages on device — nothing prefills
+        them, and a recycled page's stale positions would otherwise read
+        as valid cache."""
+        if not self.lazy_pages:
+            return
+        st = self._st
+        ps = self.page_size
+        H = self._headroom
+        for slot, r in enumerate(list(self.scheduler.slot_req)):
+            if r is None or not st["act"][slot]:
+                continue
+            reach = min(len(r.prompt) + r.max_new_tokens, self.max_len)
+            tgt = -(-min(int(st["cur"][slot]) + H, reach) // ps)
+            have = len(self._slot_pages[slot])
+            if tgt <= have:
+                continue
+            own = self._alloc_with_preemption(slot, tgt - have)
+            if own is None:
+                continue              # the slot itself was parked
+            for pg in own:
+                self._prefixes.drop_page(pg)
+                self._prefix_hits.pop(pg, None)
+            self._slot_pages[slot].extend(own)
+            row = st["ptab"][slot]
+            row[have: have + len(own)] = own
+            self.cache = T.wipe_pages(self.cache,
+                                      jnp.asarray(own, jnp.int32))
+            if self.overlap:
+                self._ensure_dev_state()
+                self._scatter_rows(np.array([slot], np.int32),
+                                   {"ptab": row[None]}, {})
+        self._update_pins()
+
+    def _alloc_with_preemption(self, slot: int, need: int):
+        """Allocate ``need`` pages for a running slot, preempting policy-
+        chosen victims while the pool is short.  Returns the pages, or
+        None when the slot itself had to be parked (no other victim
+        could cover it — admission's solo-servability check guarantees
+        it can be re-seated once the pool drains)."""
+        tried = {slot}
+        while not self._pages.can_alloc(need):
+            cands = self._victim_candidates(tried)
+            if not cands:
+                self._preempt_slot(slot)
+                return None
+            victim = self.policy.pick_victim(cands)
+            tried.add(victim)
+            self._preempt_slot(victim)
+        return self._pages.alloc(need)
+
+    def _victim_candidates(self, exclude):
+        """Active slots in admission order, oldest first — the universe
+        ``policy.pick_victim`` chooses from (the default evicts the
+        youngest, minimizing wasted work)."""
+        pos = {}
+        for i, uid in enumerate(self.scheduler.admitted_uids):
+            pos[uid] = i
+        cands = sorted(
+            (pos.get(r.uid, -1), slot)
+            for slot, r in enumerate(self.scheduler.slot_req)
+            if (r is not None and slot not in exclude
+                and self._st["act"][slot]))
+        return [(slot, self.scheduler.slot_req[slot])
+                for _, slot in cands]
+
+    def _preempt_slot(self, slot: int) -> bool:
+        """Evict a running slot: snapshot its carry row, register its
+        fully-written prompt pages, free everything, park the request.
+        Under overlap this is the pipeline's one deliberate full sync —
+        reading the leading carry's row waits for every dispatched
+        window, so the snapshot includes all their effects (their token
+        emissions still reach the stream in dispatch order through the
+        backlog).  Returns False when the slot turns out to have
+        finished on device already (its retirement settles at harvest;
+        its pages free there)."""
+        if self.overlap:
+            self._ensure_dev_state()
+            row = {k: np.asarray(v[slot])
+                   for k, v in self._st_dev.items()}
+        else:
+            row = {k: np.array(v[slot]) for k, v in self._st.items()}
+        if not bool(row["act"]):
+            return False
+        if self.overlap:
+            # deactivate on the leading carry so windows dispatched from
+            # here on ignore the slot; epoch-gate in-flight statuses
+            self._st_dev = T.preempt_slot(self._st_dev, slot)
+            self._slot_epoch[slot] = self._dispatch_index
+            self._buf_epoch[slot] = self._dispatch_index
+        st = self._st
+        st["act"][slot] = False
+        st["avail"][slot] = 0
+        st["bpos"][slot] = 0
+        st["more"][slot] = False
+        st["left"][slot] = 0
+        with self._sched_lock:
+            req, pending = self.scheduler.preempt(slot)
+        ps = self.page_size
+        cur = int(row["cur"])
+        pages = list(self._slot_pages[slot])
+        stamps = [self._pages.alloc_stamp(pg) for pg in pages]
+        for j, pg in enumerate(pages):
+            # fully-written prompt pages stay discoverable: a prefix
+            # sharer — or this request's own resurrection — can pull
+            # them back while they survive in the free list
+            if (j + 1) * ps <= min(cur, len(req.prompt)):
+                self._prefixes.register(prefix_key(req.prompt, j, ps), pg)
+        for pg in pages:
+            self._pages.free(pg)
+        self._slot_pages[slot] = []
+        st["ptab"][slot] = 0
+        self._preempted.append(PreemptedRecord(
+            req=req, host_row=row, pending=pending, pages=pages,
+            stamps=stamps, cur=cur, keys0=np.array(row["keys"])))
+        with self._mlock:
+            self.preemptions += 1
+        return True
+
+    def _readmit_preempted(self):
+        """Re-seat parked requests, oldest first, when a slot and pages
+        are available (boundary priority over fresh admissions).  Pages
+        whose alloc stamp is unchanged still hold the victim's content:
+        resurrect at refcount 0, retain when a prefix sharer took them.
+        Recycled pages are rebuilt — content pages by re-prefilling the
+        fed history over just those columns, ahead-of-cur pages by a
+        position wipe.  A zero-rebuild resurrection costs no prefill."""
+        pool = self._pages
+        while self._preempted:
+            rec = self._preempted[0]
+            with self._sched_lock:
+                free = self.scheduler._wave_slot_order(1)
+            if not free:
+                return
+            surv = [pool.alloc_stamp(pg) == stp
+                    for pg, stp in zip(rec.pages, rec.stamps)]
+            lost = [j for j, s in enumerate(surv) if not s]
+            # surviving refcount-0 unpinned pages leave the free list on
+            # resurrect, so the lost replacements must fit AFTER them
+            surv_free = sum(
+                1 for pg, s in zip(rec.pages, surv)
+                if s and pool.refcount(pg) == 0 and not pool.is_pinned(pg))
+            if pool.free_count - surv_free < len(lost):
+                return
+            slot = free[0]
+            with self._sched_lock:
+                self.scheduler.place(slot, rec.req)
+            # claim every survivor FIRST (pulling it off the free list)
+            # — allocating a lost page's replacement earlier could
+            # recycle a survivor out from under its stale surv flag
+            mapping = [None] * len(rec.pages)
+            for j, (pg, ok_) in enumerate(zip(rec.pages, surv)):
+                if ok_:
+                    if pool.refcount(pg) == 0:
+                        pool.resurrect(pg)
+                    else:
+                        pool.retain(pg)
+                    mapping[j] = pg
+            wipe, rebuild = [], []
+            for j in lost:
+                npg = pool.alloc(1)[0]
+                self._prefixes.drop_page(npg)
+                self._prefix_hits.pop(npg, None)
+                mapping[j] = npg
+                if j * self.page_size < rec.cur:
+                    rebuild.append(j)
+                else:
+                    wipe.append(npg)
+            if wipe:
+                self.cache = T.wipe_pages(self.cache,
+                                          jnp.asarray(wipe, jnp.int32))
+            if rebuild:
+                self._rebuild_pages(rec, mapping, rebuild)
+            else:
+                with self._mlock:
+                    self.prefill_calls_saved += 1
+            self._slot_pages[slot] = list(mapping)
+            st = self._st
+            for k, v in rec.host_row.items():
+                st[k][slot] = v
+            row = st["ptab"][slot]
+            row[:] = 0
+            row[: len(mapping)] = mapping
+            with self._sched_lock:
+                self.scheduler.set_pending(
+                    slot, np.asarray(rec.pending, np.int32))
+            if self.overlap:
+                self._ensure_dev_state()
+                rows_all = {k: np.asarray(st[k][slot])[None] for k in st}
+                self._scatter_rows(np.array([slot], np.int32),
+                                   rows_all, {})
+                self._slot_epoch[slot] = self._dispatch_index
+                self._buf_epoch[slot] = self._dispatch_index
+            self._update_pins()
+            self._preempted.popleft()
+
+    def _rebuild_pages(self, rec: PreemptedRecord, mapping, rebuild):
+        """Recompute recycled pages' cache content: prefill the tokens
+        the victim had FED (cache content at position t is a pure
+        function of the token fed at t) and scatter just the lost page
+        columns.  Uses the spec hist leaf when present — it IS the fed
+        history — else the prompt plus the settled out_tokens (the
+        backlog is flushed first so the generated history is whole)."""
+        cur = rec.cur
+        if "hist" in rec.host_row:
+            fed = np.asarray(rec.host_row["hist"][:cur], np.int32)
+        else:
+            if self._backlog is not None and self._backlog.started:
+                self._backlog.flush()
+            prompt = np.asarray(rec.req.prompt, np.int32)
+            P = len(prompt)
+            gen = (np.asarray(rec.req.out_tokens[: cur - P], np.int32)
+                   if cur > P else np.zeros((0,), np.int32))
+            fed = np.concatenate([prompt[: min(cur, P)], gen])
+        toks = np.zeros((1, _bucket(cur, self.max_len)), np.int32)
+        toks[0, :cur] = fed
+        lens = np.array([cur], np.int32)
+        self._count_prefill()
+        tj, lj = self._prefill_args(toks, lens)
+        _, new_cache = self._prefill(self.params, tj, lj)
+        self.cache = _merge_slot_paged(
+            self.cache, new_cache, jnp.asarray([0] * len(rebuild)),
+            jnp.asarray(rebuild),
+            jnp.asarray([mapping[j] for j in rebuild]), self.page_size)
 
     # -- overlapped pipeline --------------------------------------------------
     #
@@ -1419,24 +1877,37 @@ class Engine:
         worker thread can run it concurrently with boundary work.  All
         merging happens later, on the main thread, at a boundary."""
         first_lens = [self.scheduler.first_chunk_len(r) for r in reqs]
-        W = _bucket(len(reqs), self.B)
-        P = _bucket(max(first_lens), self.max_len)
-        toks = np.zeros((W, P), np.int32)
-        lens = np.zeros((W,), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, : first_lens[i]] = r.prompt[: first_lens[i]]
-            lens[i] = first_lens[i]
-        tj, lj = self._prefill_args(toks, lens)
-        logits, new_cache = self._prefill(self.params, tj, lj)
-        draft_new = None
-        if self.draft_cache is not None:
-            _, draft_new = self._draft_prefill(self.draft_params, tj, lj)
-        specs, keys0, eos, full, ks, first = self._admit_sample_first(
-            reqs, first_lens, logits)
+        # skip decision from a read-only registry probe (worker-thread
+        # safe); the boundary merge re-resolves pages authoritatively,
+        # and either direction of drift is correct (the remainder just
+        # streams through ingest from wherever coverage actually ends)
+        rows, w = self._skip_rows(reqs)
+        specs = [r.sampling or self.sampling for r in reqs]
+        keys0 = np.zeros((len(reqs), 2), np.uint32)
+        eos = np.full(len(reqs), -1, np.int32)
+        full = np.zeros(len(reqs), bool)
+        for i, (sp, r) in enumerate(zip(specs, reqs)):
+            keys0[i] = sp.slot_key(r.uid)
+            if r.eos_id is not None:
+                eos[i] = r.eos_id
+            full[i] = rows[i] >= 0 and first_lens[i] == len(r.prompt)
+        ks = first = new_cache = draft_new = None
+        if w:
+            toks, lens = self._bucket_prompts(reqs, first_lens, rows, w)
+            self._count_prefill()
+            tj, lj = self._prefill_args(toks, lens)
+            logits, new_cache = self._prefill(self.params, tj, lj)
+            if self.draft_cache is not None:
+                _, draft_new = self._draft_prefill(self.draft_params,
+                                                   tj, lj)
+            preqs = [r for r, ri in zip(reqs, rows) if ri >= 0]
+            pflens = [fl for fl, ri in zip(first_lens, rows) if ri >= 0]
+            _, _, _, _, ks, first = self._admit_sample_first(
+                preqs, pflens, logits)
         return StagedWave(reqs=list(reqs), first_lens=first_lens,
                           specs=specs, keys0=keys0, eos=eos, full=full,
                           ks=ks, first=first, new_cache=new_cache,
-                          draft_new_cache=draft_new)
+                          draft_new_cache=draft_new, rows=rows)
 
     def _admit_overlap(self):
         """Boundary admission for the overlapped engine: collect prepared
@@ -1476,13 +1947,11 @@ class Engine:
                 free = len(self.scheduler.free_slots())
             n = min(len(todo), free)
             if self._pages is not None:
-                budget = self._pages.free_count
+                fits = self._page_fits()
                 fit = 0
                 for r in todo[:n]:
-                    need = self._pages_needed(r)
-                    if need > budget:
+                    if not fits(r):
                         break
-                    budget -= need
                     fit += 1
                 n = fit
             if n == 0:
@@ -1505,18 +1974,25 @@ class Engine:
         first-token emission — the device half of what _admit does
         synchronously, expressed as dataflow on the leading carry."""
         st = self._st
-        slots = jnp.asarray([s for s, _ in placed])
-        rows_ix = jnp.asarray(idx)
+        prow = ((lambda i: i) if wv.rows is None
+                else (lambda i: wv.rows[i]))
         if self._pages is None:
+            # ring layout never skips: rows is the identity mapping
+            slots = jnp.asarray([s for s, _ in placed])
             self.cache = _merge_slot(self.cache, wv.new_cache, slots,
-                                     rows=rows_ix)
+                                     rows=jnp.asarray(idx))
         else:
             rws, cols, phys = [], [], []
             for i, (slot, r) in zip(idx, placed):
+                if prow(i) < 0:
+                    # authoritative skip-path binding; the probe's guess
+                    # is replaced by the coverage actually resident now
+                    wv.first_lens[i] = self._assign_shared_pages(slot, r)
+                    continue
                 mapping, scat = self._assign_pages(slot, r,
                                                    wv.first_lens[i])
                 for j in scat:
-                    rws.append(i)
+                    rws.append(prow(i))
                     cols.append(j)
                     phys.append(mapping[j])
             if phys:
@@ -1524,9 +2000,12 @@ class Engine:
                     self.cache, wv.new_cache, jnp.asarray(rws),
                     jnp.asarray(cols), jnp.asarray(phys), self.page_size)
         if wv.draft_new_cache is not None:
-            self.draft_cache = _merge_slot(self.draft_cache,
-                                           wv.draft_new_cache, slots,
-                                           rows=rows_ix)
+            dslots = [s for i, (s, _) in zip(idx, placed) if prow(i) >= 0]
+            drows = [prow(i) for i in idx if prow(i) >= 0]
+            if dslots:
+                self.draft_cache = _merge_slot(
+                    self.draft_cache, wv.draft_new_cache,
+                    jnp.asarray(dslots), rows=jnp.asarray(drows))
         for i, (slot, r) in zip(idx, placed):
             self._admit_bookkeep(slot, r, wv.specs[i], wv.first_lens[i],
                                  wv.eos[i])
@@ -1553,23 +2032,36 @@ class Engine:
         pad_ix = np.zeros(Wb, np.int64)
         pad_ix[:n] = idx
         sel = jnp.asarray(pad_ix)
-        full_d = jnp.asarray(wv.full)[sel]
-        eos_d = jnp.asarray(wv.eos)[sel]
-        first_sel = wv.first[sel]
-        left_d = jnp.asarray(np.array(
-            [wv.reqs[i].max_new_tokens - 1 for i in idx] + [0] * (Wb - n),
-            np.int32))
-        dev_rows = {
-            "tok": jnp.where(full_d, first_sel, 0),
-            # a full-prompt row can die at its very first token (eos, or
-            # an exhausted budget) — the same checks the window applies
-            "act": jnp.where(full_d, (first_sel != eos_d) & (left_d > 0),
-                             True),
-            "keys": jnp.where(full_d[:, None], wv.ks[sel][:, 0],
-                              jnp.asarray(wv.keys0)[sel]),
-        }
+        if wv.first is None:
+            # all-skip wave: no sampled first tokens; every row starts
+            # active with its base key, feeding from the ingest buffer
+            dev_rows = {
+                "tok": jnp.zeros(Wb, jnp.int32),
+                "act": jnp.ones(Wb, bool),
+                "keys": jnp.asarray(wv.keys0)[sel],
+            }
+        else:
+            prow_ix = np.zeros(Wb, np.int64)
+            prow_ix[:n] = [max(prow(i), 0) for i in idx]
+            rsel = jnp.asarray(prow_ix)      # per-prefill-row gathers
+            full_d = jnp.asarray(wv.full)[sel]
+            eos_d = jnp.asarray(wv.eos)[sel]
+            first_sel = wv.first[rsel]
+            left_d = jnp.asarray(np.array(
+                [wv.reqs[i].max_new_tokens - 1 for i in idx]
+                + [0] * (Wb - n), np.int32))
+            dev_rows = {
+                "tok": jnp.where(full_d, first_sel, 0),
+                # a full-prompt row can die at its very first token (eos,
+                # or an exhausted budget) — the checks the window applies
+                "act": jnp.where(full_d, (first_sel != eos_d)
+                                 & (left_d > 0), True),
+                "keys": jnp.where(full_d[:, None], wv.ks[rsel][:, 0],
+                                  jnp.asarray(wv.keys0)[sel]),
+            }
         self._scatter_rows(slots_pad, host_rows, dev_rows)
-        entries = [(r, i) for i, (_, r) in zip(idx, placed) if wv.full[i]]
+        entries = [(r, prow(i)) for i, (_, r) in zip(idx, placed)
+                   if wv.full[i]]
         if entries:
             self._backlog.put(self._timed(
                 self._admit_item(wv.first, entries), "backlog_drain"))
@@ -1596,7 +2088,10 @@ class Engine:
             row["left"][...] = r.max_new_tokens - 1
             pending = np.zeros((0,), np.int32)
         else:
-            width = self.scheduler.prefill_chunk or int(rest.shape[0])
+            # the ingest buffer row is W = prefill_chunk-or-1 wide; a
+            # pending tail with no configured chunk (prefill-skip) must
+            # stream one token per iteration like the sync path does
+            width = self.scheduler.prefill_chunk or 1
             chunk, pending = rest[:width], rest[width:]
             row["buf"][: chunk.shape[0]] = chunk
             row["avail"][...] = chunk.shape[0]
@@ -1638,46 +2133,67 @@ class Engine:
         the scan's installer FIFOs on, and the prefilled cache content
         (stage cache row for ring, pool pages for paged)."""
         r = wv.reqs[i]
-        row, pending = self._stage_bookkeep(r, wv.specs[i],
-                                            wv.first_lens[i], wv.eos[i])
-        pages = None
+        ri = i if wv.rows is None else wv.rows[i]
+        pages = mapping = None
         if self._pages is not None:
-            mapping, scat = self._map_pages(r, wv.first_lens[i])
+            if ri < 0:
+                # prefill-skip: bind resident registry pages now (the
+                # authoritative walk) and stage from their coverage
+                mapping, hit_len = self._map_shared_pages(r)
+                wv.first_lens[i] = hit_len
+                with self._mlock:
+                    self.prefill_calls_saved += 1
+            else:
+                mapping, scat = self._map_pages(r, wv.first_lens[i])
+                rws = [ri] * len(scat)
+                cols = list(scat)
+                phys = [mapping[j] for j in scat]
+                if phys:
+                    # freshly-allocated (refcount-1) pages only, chained
+                    # on the LATEST cache future: no in-flight window
+                    # reads them, and the window that can see this seq
+                    # key sees the pages
+                    self.cache = _merge_slot_paged(
+                        self.cache, wv.new_cache, jnp.asarray(rws),
+                        jnp.asarray(cols), jnp.asarray(phys),
+                        self.page_size)
             pages = list(mapping)
-            row["ptab"][: len(mapping)] = mapping
-            rws = [i] * len(scat)
-            cols = list(scat)
-            phys = [mapping[j] for j in scat]
-            if phys:
-                # freshly-allocated (refcount-1) pages only, chained on
-                # the LATEST cache future: no in-flight window reads them,
-                # and the window that can see this seq key sees the pages
-                self.cache = _merge_slot_paged(
-                    self.cache, wv.new_cache, jnp.asarray(rws),
-                    jnp.asarray(cols), jnp.asarray(phys), self.page_size)
         else:
             self._stage_dev = {
                 **self._stage_dev,
                 "cache": _merge_slot(self._stage_dev["cache"],
                                      wv.new_cache, jnp.asarray([q]),
-                                     rows=jnp.asarray([i])),
+                                     rows=jnp.asarray([ri])),
             }
+        row, pending = self._stage_bookkeep(r, wv.specs[i],
+                                            wv.first_lens[i], wv.eos[i])
+        if mapping is not None:
+            row["ptab"][: len(mapping)] = mapping
         seq_val = self._stage_seq_next
         self._stage_seq_next += 1
         ent = StagedEntry(req=r, host_row=row, pending=pending,
                           pages=pages, seq=seq_val, keys0=wv.keys0[i],
                           full=bool(wv.full[i]))
-        full_d = jnp.asarray(bool(wv.full[i]))
-        eos_d = jnp.int32(int(wv.eos[i]))
-        left0 = jnp.int32(r.max_new_tokens - 1)
-        first_i = wv.first[i]
-        dev_row = {
-            "tok": jnp.where(full_d, first_i, 0),
-            "act": jnp.where(full_d, (first_i != eos_d) & (left0 > 0),
-                             True),
-            "keys": jnp.where(full_d, wv.ks[i, 0],
-                              jnp.asarray(ent.keys0)),
-        }
+        if ri < 0:
+            # skip member: no sampled first token; it starts feeding
+            # from the ingest buffer with its base key
+            dev_row = {
+                "tok": jnp.zeros((), jnp.int32),
+                "act": jnp.asarray(True),
+                "keys": jnp.asarray(ent.keys0),
+            }
+        else:
+            full_d = jnp.asarray(bool(wv.full[i]))
+            eos_d = jnp.int32(int(wv.eos[i]))
+            left0 = jnp.int32(r.max_new_tokens - 1)
+            first_i = wv.first[ri]
+            dev_row = {
+                "tok": jnp.where(full_d, first_i, 0),
+                "act": jnp.where(full_d, (first_i != eos_d) & (left0 > 0),
+                                 True),
+                "keys": jnp.where(full_d, wv.ks[ri, 0],
+                                  jnp.asarray(ent.keys0)),
+            }
         rows_dev = dict(self._stage_dev["rows"])
         for k, v in row.items():
             if k in ("tok", "act", "keys"):
@@ -1698,7 +2214,7 @@ class Engine:
             # carrying this request's later tokens — backlog FIFO does it
             self._admit_tokens += 1
             self._backlog.put(self._timed(
-                self._admit_item(wv.first, [(r, i)]), "backlog_drain"))
+                self._admit_item(wv.first, [(r, ri)]), "backlog_drain"))
 
     def _admit_item(self, first, entries):
         def item():
@@ -1777,7 +2293,8 @@ class Engine:
         # pack the harvest-critical pieces into ONE 1-D array at dispatch
         # so the trailing-boundary block is a single small transfer; the
         # harvest parses it positionally by the same layout
-        parts = [st2["act"].astype(jnp.int32), st2["bpos"].astype(jnp.int32)]
+        parts = [st2["act"].astype(jnp.int32), st2["bpos"].astype(jnp.int32),
+                 st2["cur"].astype(jnp.int32)]
         if self.continuous:
             parts.append(st2["gen"])
         if self.adaptive_spec:
@@ -1814,7 +2331,8 @@ class Engine:
         B = self.B
         act = status[:B].astype(bool)
         bpos = status[B: 2 * B]
-        off = 2 * B
+        cur = status[2 * B: 3 * B]
+        off = 3 * B
         accs = props = sw_seq = sw_slot = None
         if self.continuous:
             off += B                      # gen leaf: mirrored per install
@@ -1849,6 +2367,7 @@ class Engine:
             self._adaptive_update(ok, act, accs, props,
                                   {s for _, s, _, _ in installs})
         self._st["act"][ok] = act[ok]
+        self._st["cur"][ok] = cur[ok]
         bok = ok & (self._buf_epoch <= w.index)
         self._st["bpos"][bok] = bpos[bok]
         self._backlog.put(self._timed(item, "backlog_drain"))
@@ -1967,8 +2486,10 @@ class Engine:
             self._harvest_trailing()
         self._ensure_dev_state()
         t1 = time.perf_counter()
+        self._readmit_preempted()
         self._admit_overlap()
         self._refill_async()
+        self._lazy_topup()
         t2 = time.perf_counter()
         self._prof_add("admission_stage", t1, t2 - t1)
         dispatched = self._dispatch_window()
@@ -2049,8 +2570,10 @@ class Engine:
         if self.overlap:
             return self._step_async()
         t0 = time.perf_counter()
+        self._readmit_preempted()
         self._admit()
         self._refill()
+        self._lazy_topup()
         st = self._st
         if not st["act"].any():
             return
@@ -2171,6 +2694,9 @@ class Engine:
             ttft = self._ttft_sum / self._ttft_n if self._ttft_n else 0.0
             draft_proposed = self.draft_proposed
             draft_accepted = self.draft_accepted
+            preemptions = self.preemptions
+            prefill_calls = self.prefill_calls
+            prefill_calls_saved = self.prefill_calls_saved
         w = max(self.windows, 1)
         pool = self._pages
         with self._mlock:
@@ -2188,7 +2714,12 @@ class Engine:
             "cache_layout": self.cache_layout,
             "page_size": self.page_size or 0,
             "pages_total": 0 if pool is None else self.n_pages,
+            # pages_free counts the allocatable free list only; pinned
+            # pages at refcount 0 are PARKED (resident, not allocatable)
+            # and reported separately so free + held + parked + null
+            # partitions pages_total
             "pages_free": 0 if pool is None else pool.free_count,
+            "pages_parked": 0 if pool is None else pool.parked,
             "pages_shared": 0 if pool is None else pool.share_events,
             "pages_peak": 0 if pool is None else pool.peak_used,
             "cow_forks": 0 if pool is None else pool.cow_forks,
@@ -2229,6 +2760,12 @@ class Engine:
             "spec_degraded": self.spec_degraded,
             "pin_prefixes": self.pin_prefixes,
             "pages_pinned": 0 if pool is None else pool.pinned,
+            "policy": self.policy.name,
+            "lazy_pages": self.lazy_pages,
+            "staging_depth": self.staging_depth,
+            "preemptions": preemptions,
+            "prefill_calls": prefill_calls,
+            "prefill_calls_saved": prefill_calls_saved,
             "profile": profile,
             "ttft_s": ttft,
             "prefix_resurrections": (0 if pool is None

@@ -79,6 +79,13 @@ class PagePool:
         self.cow_forks = 0             # cumulative divergent-page copies
         self.peak_used = 0             # high-water mark of allocated pages
         self.prefix_resurrections = 0  # refcount-0 pages revived by a hit
+        # monotone allocation stamps: a page's stamp changes when alloc()
+        # RECYCLES it (content destroyed) — not on resurrect/retain,
+        # which preserve content — so a preempted slot can tell on
+        # re-admission whether its old pages still hold its content
+        # (stamp unchanged) or were overwritten meanwhile.
+        self._alloc_seq = 0
+        self._last_alloc = [0] * n_pages
 
     # -- introspection -------------------------------------------------------
 
@@ -100,6 +107,36 @@ class PagePool:
     def pinned(self) -> int:
         """Pages currently pinned against recycling."""
         return len(self._pinned)
+
+    @property
+    def parked(self) -> int:
+        """Pinned pages at refcount 0: resident, off the free list, not
+        held by any slot.  ``used`` counts them as allocated (they are
+        not allocatable), so gauges that want live holders should read
+        ``used - parked``."""
+        return sum(1 for pg in self._pinned if self._ref[pg] == 0)
+
+    def alloc_stamp(self, page: int) -> int:
+        """Monotone stamp of the page's latest recycle by ``alloc``.
+        Two reads returning the same stamp bracket a window in which the
+        page's content was never destroyed (resurrect/retain preserve
+        content and do not bump the stamp)."""
+        return self._last_alloc[page]
+
+    def assert_consistent(self):
+        """Every non-null page is in exactly one of {free list,
+        refcount>0, parked}; the three partition the pool.  Cheap enough
+        to call from property tests after every operation."""
+        held = sum(1 for pg in range(1, self.n_pages) if self._ref[pg] > 0)
+        parked = self.parked
+        assert not (self._pinned & set(self._free)), \
+            f"pinned pages on the free list: {self._pinned & set(self._free)}"
+        for pg in self._free:
+            assert self._ref[pg] == 0, \
+                f"free page {pg} has refcount {self._ref[pg]}"
+        assert len(self._free) + held + parked == self.n_pages - 1, (
+            f"pool partition broken: free={len(self._free)} held={held} "
+            f"parked={parked} != {self.n_pages - 1} allocatable")
 
     def is_pinned(self, page: int) -> bool:
         return page in self._pinned
@@ -127,6 +164,8 @@ class PagePool:
             pg = next(iter(self._free))
             del self._free[pg]
             self._ref[pg] = 1
+            self._alloc_seq += 1
+            self._last_alloc[pg] = self._alloc_seq
             pages.append(pg)
         self.peak_used = max(self.peak_used, self.used)
         return pages

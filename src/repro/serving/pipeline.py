@@ -39,8 +39,8 @@ import queue
 import threading
 from typing import Any, Callable
 
-__all__ = ["AdmissionWorker", "InflightWindow", "StagedEntry",
-           "StagedWave", "TokenBacklog"]
+__all__ = ["AdmissionWorker", "InflightWindow", "PreemptedRecord",
+           "StagedEntry", "StagedWave", "TokenBacklog"]
 
 _STOP = object()
 
@@ -84,17 +84,26 @@ class StagedWave:
     the free slots (or page budget) merges across several boundaries,
     head-of-line FIFO throughout."""
 
-    reqs: list                      # FIFO run of staged Requests
+    reqs: list                      # policy-ordered run of staged Requests
     first_lens: list                # wave-prefill coverage per request
     specs: list                     # resolved SamplingParams per request
-    keys0: Any                      # (W, 2) uint32 base PRNG keys (host)
-    eos: Any                        # (W,) int32 eos ids (host)
-    full: Any                       # (W,) bool whole-prompt-prefilled
+    keys0: Any                      # (n, 2) uint32 base PRNG keys (host)
+    eos: Any                        # (n,) int32 eos ids (host)
+    full: Any                       # (n,) bool whole-prompt-prefilled
     ks: Any                         # (W, 2, 2) split keys (device)
     first: Any                      # (W,) first sampled tokens (device)
     new_cache: Any                  # slot-major prefill cache (device)
     draft_new_cache: Any = None     # layer-draft twin (device)
     merged: int = 0                 # leading reqs already merged
+    # prefill-skip (prefix-affinity): request i rides prefill row
+    # rows[i] of the W-bucketed arrays, or rows[i] == -1 when its whole
+    # first chunk is covered by resident registry pages and it admits
+    # with ZERO prefill — cur starts at the shared coverage and the
+    # prompt remainder streams through the decode loop's ingest buffer.
+    # keys0/eos/full/specs are per-request (length n); ks/first/
+    # new_cache are per-prefill-row (width W <= n).  None rows => all
+    # requests prefill (one row each, pre-refactor layout).
+    rows: list | None = None
 
 
 @dataclasses.dataclass
@@ -111,6 +120,25 @@ class StagedEntry:
     seq: int                        # staging sequence number (device key)
     keys0: Any                      # (2,) uint32 mirror placeholder
     full: bool                      # whole prompt covered by the prefill
+
+
+@dataclasses.dataclass
+class PreemptedRecord:
+    """Everything needed to resurrect a preempted slot: the carry row as
+    it stood at eviction (sampling state, cur, ring buffer columns), the
+    un-ingested prompt tail, and the pages it held with their alloc
+    stamps.  On re-admission, pages whose stamp is unchanged still hold
+    the victim's content (resurrect/retain); recycled ones are rebuilt
+    by re-prefilling the already-fed token history over just those
+    pages."""
+
+    req: Any
+    host_row: dict                  # carry-leaf name -> per-slot row (np)
+    pending: Any                    # un-ingested prompt tail (np) or None
+    pages: list                     # physical pages held at eviction
+    stamps: list                    # pool alloc stamp per page at eviction
+    cur: int                        # fed-token count at eviction
+    keys0: Any                      # (2,) uint32 base PRNG key (mirror)
 
 
 class TokenBacklog:

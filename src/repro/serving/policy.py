@@ -1,0 +1,219 @@
+"""Pluggable admission policies for the serving scheduler.
+
+Admission used to be one hardcoded loop inside ``Scheduler.take_wave``:
+strict head-of-line FIFO, one non-fitting request blocking everything
+behind it.  Now that pages (not slots) are the scarce resource — the
+paged latent pool is what ReCalKV's compression buys — the *order* work
+enters the device is a real scheduling lever, so it lives here as a
+policy object the scheduler consults:
+
+  ``fifo``            today's behavior, bit-identical: requests admit in
+                      submission order and the first one that does not
+                      fit ends the wave.  The default everywhere.
+  ``prefix-affinity`` group queued requests by their shared-prefix
+                      registry key (the first-page ``prefix_key``) so
+                      one wave prefills a recurring system prompt once
+                      and every sharer retains/resurrects its pages via
+                      the existing COW path.  Requires the paged layout.
+                      Fairness: the queue head is always admitted first;
+                      only requests sharing a key with an
+                      already-selected request jump the line, and a
+                      non-fitting head still ends the wave.
+  ``reach-packing``   admit short requests past a blocked long one (an
+                      explicit opt-out of strict FIFO).  Fairness bound:
+                      a blocked request may be bypassed in at most
+                      ``max_bypass`` selection rounds; after that it
+                      becomes a hard barrier no later request passes, so
+                      its worst-case extra wait is ``max_bypass``
+                      admission rounds, never unbounded.
+
+Policies also choose the *victim* under lazy page reservation: when the
+pool exhausts mid-stream, ``pick_victim`` names the slot the engine
+preempts back to the staging queue (see ``Engine`` / ``lazy_pages``).
+
+``select`` mutates the queue it is given (popping what it admits) and
+must respect ``fits`` — a stateful engine-provided closure that debits a
+resource budget on success, so a policy must call it at most once per
+selected request and only for requests it actually admits.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import TYPE_CHECKING, Callable
+
+from repro.serving.pages import prefix_key
+
+if TYPE_CHECKING:                      # scheduler imports us at runtime
+    from repro.serving.scheduler import Request
+
+__all__ = ["AdmissionPolicy", "FifoPolicy", "PrefixAffinityPolicy",
+           "ReachPackingPolicy", "get_policy"]
+
+
+class AdmissionPolicy:
+    """Interface: admission order + preemption victim choice.
+
+    ``configure`` is called once by the engine with the layout facts a
+    policy may key on (page size, the prefix registry).  ``select`` pops
+    up to ``limit`` requests off ``queue`` in admission order;
+    ``pick_victim`` names a slot from ``candidates`` (admission order,
+    oldest first) when the engine must preempt."""
+
+    name = "base"
+    #: set by policies that reorder admission using first-page prefix
+    #: keys; the engine gates the prefill-skip fast path on it.
+    groups_by_prefix = False
+
+    def __init__(self):
+        self.page_size: int | None = None
+        self.registry = None
+
+    def configure(self, *, page_size: int | None = None, registry=None):
+        self.page_size = page_size
+        self.registry = registry
+
+    def select(self, queue: deque, limit: int,
+               fits: Callable[[Request], bool] | None = None
+               ) -> list[Request]:
+        raise NotImplementedError
+
+    def pick_victim(self, candidates: list[tuple[int, Request]]) -> int:
+        """Default victim: the YOUNGEST admission (last in admission
+        order) — it has the least sunk prefill/decode work to redo and
+        the oldest requests keep their latency promise."""
+        return candidates[-1][0]
+
+
+class FifoPolicy(AdmissionPolicy):
+    """Strict head-of-line FIFO — the pre-policy behavior, preserved
+    bit-identically: pop the head while it fits; the first request that
+    does not fit ends the wave (later smaller requests never starve an
+    earlier large one)."""
+
+    name = "fifo"
+
+    def select(self, queue, limit, fits=None):
+        out: list[Request] = []
+        while queue and len(out) < limit:
+            if fits is not None and not fits(queue[0]):
+                break
+            out.append(queue.popleft())
+        return out
+
+
+class PrefixAffinityPolicy(AdmissionPolicy):
+    """FIFO with shared-prefix pull-forward: after each pick, queued
+    requests whose first-page prefix key matches an already-selected
+    request (or a prefix already resident in the registry) are pulled
+    into the same wave, so the shared pages prefill once and every
+    sharer retains them at its own admission.  The queue head is never
+    bypassed — when no sharer is pending, selection IS FIFO."""
+
+    name = "prefix-affinity"
+    groups_by_prefix = True
+
+    def _key(self, req: Request):
+        ps = self.page_size
+        if ps is None or len(req.prompt) < ps:
+            return None
+        return prefix_key(req.prompt, 0, ps)
+
+    def select(self, queue, limit, fits=None):
+        out: list[Request] = []
+        keys: set = set()
+        while queue and len(out) < limit:
+            pick = 0
+            if keys:
+                for i, r in enumerate(queue):
+                    k = self._key(r)
+                    if k is not None and k in keys:
+                        pick = i
+                        break
+            req = queue[pick]
+            if fits is not None and not fits(req):
+                # conservative: a non-fitting pick ends the wave whether
+                # it was the head or a pulled-forward sharer — partial
+                # groups admit, the remainder rides the next wave
+                break
+            del queue[pick]
+            out.append(req)
+            k = self._key(req)
+            if k is not None:
+                keys.add(k)
+                if self.registry is not None:
+                    # seed affinity from residency too: sharers of a
+                    # prefix some RETIRED request left in the registry
+                    # group even when the holder is long gone
+                    keys.add(k)
+        return out
+
+
+class ReachPackingPolicy(AdmissionPolicy):
+    """Opt-out of strict FIFO: a request that does not fit is bypassed
+    and later, smaller requests may admit past it.
+
+    Fairness bound (documented contract): each request counts the
+    selection rounds in which it was passed over; once that count
+    reaches ``max_bypass`` the request becomes a BARRIER — nothing
+    behind it admits until it does.  A blocked request therefore waits
+    at most ``max_bypass`` admission rounds longer than strict FIFO
+    would have made it wait, never unboundedly."""
+
+    name = "reach-packing"
+
+    def __init__(self, max_bypass: int = 4):
+        super().__init__()
+        if max_bypass < 0:
+            raise ValueError("max_bypass must be >= 0")
+        self.max_bypass = max_bypass
+        self._bypassed: dict[int, int] = {}      # uid -> rounds passed over
+
+    def select(self, queue, limit, fits=None):
+        out: list[Request] = []
+        if fits is None:
+            # no resource gate: nothing can block, selection is FIFO
+            while queue and len(out) < limit:
+                out.append(queue.popleft())
+            return out
+        skipped_this_round: list[int] = []
+        i = 0
+        while i < len(queue) and len(out) < limit:
+            req = queue[i]
+            if fits(req):
+                del queue[i]
+                out.append(req)
+                self._bypassed.pop(req.uid, None)
+                continue
+            if self._bypassed.get(req.uid, 0) >= self.max_bypass:
+                break                             # barrier: stop the scan
+            skipped_this_round.append(req.uid)
+            i += 1
+        if out:
+            # only rounds that admitted someone *past* a blocked request
+            # count against the bound — an empty wave starves nobody
+            for uid in skipped_this_round:
+                self._bypassed[uid] = self._bypassed.get(uid, 0) + 1
+        return out
+
+
+_POLICIES = {
+    "fifo": FifoPolicy,
+    "prefix-affinity": PrefixAffinityPolicy,
+    "reach-packing": ReachPackingPolicy,
+}
+
+
+def get_policy(policy: str | AdmissionPolicy | None) -> AdmissionPolicy:
+    """Resolve a policy name (or pass through an instance).  ``None``
+    means ``fifo``."""
+    if policy is None:
+        return FifoPolicy()
+    if isinstance(policy, AdmissionPolicy):
+        return policy
+    try:
+        return _POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown admission policy {policy!r}: expected one of "
+            f"{sorted(_POLICIES)}") from None

@@ -22,6 +22,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.serving.policy import AdmissionPolicy, get_policy
 from repro.serving.sampler import SamplingParams
 
 
@@ -51,10 +52,14 @@ class Request:
 
 
 class Scheduler:
-    """FIFO admission + slot lifecycle + chunked-prefill bookkeeping."""
+    """Policy-driven admission + slot lifecycle + chunked-prefill
+    bookkeeping.  Admission *order* is delegated to an
+    ``AdmissionPolicy`` (default ``fifo``, bit-identical to the old
+    hardcoded head-of-line loop); slot *choice* stays shard-aware here."""
 
     def __init__(self, max_slots: int, max_len: int,
-                 prefill_chunk: int | None = None, slot_shards: int = 1):
+                 prefill_chunk: int | None = None, slot_shards: int = 1,
+                 policy: str | AdmissionPolicy | None = None):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         if slot_shards < 1 or max_slots % slot_shards:
@@ -69,8 +74,13 @@ class Scheduler:
         # packs a wave into as few shards as possible so the wave-prefill
         # scatter touches few shards' rows instead of gathering the pool.
         self.slot_shards = slot_shards
+        self.policy = get_policy(policy)
         self.queue: deque[Request] = deque()
         self.slot_req: list[Request | None] = [None] * max_slots
+        # preempted requests awaiting re-admission (lazy page reservation
+        # evicted them mid-stream); they count as waiting work but are
+        # re-placed by the engine's resurrection path, not the queue.
+        self.parked: list[Request] = []
         # requests popped off the queue by the admission worker for
         # prefill STAGING: no slot yet, but no longer queued.  FIFO is
         # preserved end-to-end: take_staged pops the queue head, place*
@@ -141,48 +151,53 @@ class Scheduler:
         return [s for g in by_size for s in g]
 
     def take_wave(self, fits=None) -> list[tuple[int, Request]]:
-        """Admit queued requests into free slots, strictly FIFO by request
-        (slot choice is shard-aware, see ``_wave_slot_order``).
+        """Admit queued requests into free slots in the order the
+        admission policy chooses (slot choice is shard-aware, see
+        ``_wave_slot_order``; the default ``fifo`` policy reproduces the
+        old head-of-line loop bit-identically).
 
         ``fits(req) -> bool``, when given, gates each admission on a
-        resource check beyond free slots (the paged engine's page budget).
-        Admission stays head-of-line FIFO: the first request that does not
-        fit ends the wave rather than being skipped — later smaller
-        requests never starve an earlier large one."""
+        resource check beyond free slots (the paged engine's page
+        budget).  Under ``fifo`` the first request that does not fit
+        ends the wave rather than being skipped — later smaller requests
+        never starve an earlier large one; other policies document their
+        own fairness contracts."""
         wave = []
         free = self._wave_slot_order(min(len(self.free_slots()),
                                          len(self.queue)))
-        while free and self.queue:
-            if fits is not None and not fits(self.queue[0]):
-                break
+        for req in self.policy.select(self.queue, len(free), fits):
             slot = free.pop(0)
-            req = self.queue.popleft()
             self.slot_req[slot] = req
             self.admitted_uids.append(req.uid)
             wave.append((slot, req))
         return wave
 
-    def take_staged(self, max_n: int) -> list[Request]:
-        """Pop up to ``max_n`` queue-head requests into the staged set
-        (the admission worker's input).  Staged requests have been
-        *committed to* in FIFO order — they are prefilled ahead of slot
-        availability and must be placed via ``place``/``place_wave``
-        strictly in this order."""
-        out = []
-        while self.queue and len(out) < max_n:
-            req = self.queue.popleft()
-            self.staged.append(req)
-            out.append(req)
+    def take_staged(self, max_n: int, fits=None) -> list[Request]:
+        """Pop up to ``max_n`` queued requests (policy order) into the
+        staged set (the admission worker's input).  Staged requests have
+        been *committed to* in admission order — they are prefilled
+        ahead of slot availability and must be placed via
+        ``place``/``place_wave`` strictly in this order."""
+        out = self.policy.select(self.queue, max_n, fits)
+        self.staged.extend(out)
         return out
 
     def place(self, slot: int, req: Request):
         """Bind a previously staged request to a now-free slot.  Must be
-        called in staged (FIFO) order — the head-of-line contract the
-        synchronous ``take_wave`` enforces is preserved by construction."""
+        called in staged (admission) order — the ordering contract the
+        synchronous ``take_wave`` enforces is preserved by construction.
+        A *parked* (preempted) request may also be placed: it was already
+        admitted once, so it re-binds outside the staged order."""
         if self.slot_req[slot] is not None:
             raise RuntimeError(
                 f"slot {slot} is occupied by uid="
                 f"{self.slot_req[slot].uid}; release it first")
+        for i, p in enumerate(self.parked):
+            if p is req:                  # identity, not __eq__ (arrays)
+                self.parked.pop(i)
+                self.slot_req[slot] = req
+                self.admitted_uids.append(req.uid)
+                return
         if not self.staged or self.staged[0] is not req:
             raise RuntimeError(
                 f"place(uid={req.uid}) out of staged FIFO order "
@@ -216,11 +231,15 @@ class Scheduler:
         return 0 if p is None else int(p.shape[0])
 
     def next_chunk(self, slot: int) -> np.ndarray:
-        """Pop the next <= prefill_chunk pending prompt tokens for a slot."""
+        """Pop the next <= prefill_chunk pending prompt tokens for a slot.
+        Without a configured chunk the ingest buffer is one column wide
+        (W = prefill_chunk or 1 in the engine), so chunks cap at 1 —
+        pending tails only exist un-chunked on the prefill-skip and
+        preemption-restore paths."""
         p = self._pending[slot]
         if p is None:
             return np.zeros((0,), np.int32)
-        width = self.prefill_chunk or p.shape[0]
+        width = self.prefill_chunk or 1
         chunk, rest = p[:width], p[width:]
         self._pending[slot] = rest if rest.size else None
         return chunk
@@ -231,11 +250,28 @@ class Scheduler:
         self.slot_req[slot] = None
         self._pending[slot] = None
 
+    def preempt(self, slot: int) -> tuple[Request, np.ndarray]:
+        """Evict a running slot's request into the parked set (lazy page
+        reservation ran the pool dry and the policy picked this victim).
+        Returns the request and its un-ingested prompt tail; the engine
+        snapshots both into its resurrection record and re-binds via
+        ``place`` when pages free up."""
+        req = self.slot_req[slot]
+        if req is None:
+            raise RuntimeError(f"preempt({slot}): slot is empty")
+        pending = self._pending[slot]
+        self.slot_req[slot] = None
+        self._pending[slot] = None
+        self.parked.append(req)
+        return req, (pending if pending is not None
+                     else np.zeros((0,), np.int32))
+
     @property
     def queue_depth(self) -> int:
-        """Requests waiting for a slot: still queued or staged (popped
-        for prefill by the admission worker but not yet placed)."""
-        return len(self.queue) + len(self.staged)
+        """Requests waiting for a slot: still queued, staged (popped
+        for prefill by the admission worker but not yet placed), or
+        parked (preempted, awaiting re-admission)."""
+        return len(self.queue) + len(self.staged) + len(self.parked)
 
     @property
     def occupancy(self) -> int:
@@ -243,5 +279,5 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return (bool(self.queue) or bool(self.staged)
+        return (bool(self.queue) or bool(self.staged) or bool(self.parked)
                 or any(r is not None for r in self.slot_req))

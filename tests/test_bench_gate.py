@@ -40,7 +40,7 @@ class TestCompareEntries:
         new = _entry([_row(tps=15.0)])          # -25%
         rep = compare_entries(prev, new, threshold=0.2)
         assert len(rep["regressions"]) == 1
-        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-/ring/0/-/False/2/False"
+        assert rep["regressions"][0]["row"] == "latent/einsum/1x1/-/-/ring/0/-/False/2/False/fifo/False"
         assert rep["regressions"][0]["drop"] == pytest.approx(0.25)
 
     def test_spec_rows_match_on_depth_and_draft(self):
@@ -54,7 +54,7 @@ class TestCompareEntries:
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["compared"] == 2
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2/ring/0/-/False/2/False"]
+        assert rep["only_new"] == ["latent/einsum/1x1/2/layers:2/ring/0/-/False/2/False/fifo/False"]
 
     def test_mesh_rows_distinct(self):
         prev = _entry([_row(mesh="1x1", tps=20.0),
@@ -63,7 +63,7 @@ class TestCompareEntries:
                       _row(mesh="2x4", tps=3.0)])       # -25% on the mesh
         rep = compare_entries(prev, new)
         assert [r["row"] for r in rep["regressions"]] == \
-            ["latent/einsum/2x4/-/-/ring/0/-/False/2/False"]
+            ["latent/einsum/2x4/-/-/ring/0/-/False/2/False/fifo/False"]
 
     def test_changed_bench_identity_skips(self):
         prev = _entry([_row(tps=20.0)])
@@ -94,7 +94,7 @@ class TestCompareEntries:
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["compared"] == 1
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/-/-/ring/0/-/True/2/False"]
+        assert rep["only_new"] == ["latent/einsum/1x1/-/-/ring/0/-/True/2/False/fifo/False"]
 
     def test_old_overlap_rows_match_depth2_baselines(self):
         """The classic double buffer IS pipeline_depth=2: rows written
@@ -119,8 +119,8 @@ class TestCompareEntries:
         assert rep["compared"] == 1
         assert rep["regressions"] == []
         assert rep["only_new"] == [
-            "latent/einsum/1x1/-/-/ring/0/-/True/3/False",
-            "latent/einsum/1x1/-/-/ring/0/-/True/3/True"]
+            "latent/einsum/1x1/-/-/ring/0/-/True/3/False/fifo/False",
+            "latent/einsum/1x1/-/-/ring/0/-/True/3/True/fifo/False"]
 
     def test_paged_rows_distinct_from_ring(self):
         prev = _entry([_row(tps=20.0)])
@@ -128,7 +128,7 @@ class TestCompareEntries:
                       _row(tps=1.0, cache_layout="paged", page_size=8)])
         rep = compare_entries(prev, new, threshold=0.2)
         assert rep["regressions"] == []
-        assert rep["only_new"] == ["latent/einsum/1x1/-/-/paged/8/-/False/2/False"]
+        assert rep["only_new"] == ["latent/einsum/1x1/-/-/paged/8/-/False/2/False/fifo/False"]
 
 
 class TestMainCLI:

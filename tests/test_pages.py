@@ -244,6 +244,7 @@ def _check_invariants(pool: PagePool, holders: dict[int, int],
     assert pool.used == len(live)
     assert pool.used + pool.free_count == n_pages - 1   # null page apart
     assert NULL_PAGE not in live
+    pool.assert_consistent()
 
 
 def _run_ops(n_pages: int, ops: list[tuple[int, int]]):

@@ -1,0 +1,361 @@
+"""Pluggable admission policies + lazy page reservation.
+
+Admission order is a scheduling lever, not a semantic one: every policy
+(``fifo`` / ``prefix-affinity`` / ``reach-packing``) and the lazy
+page-reservation path (including forced preemption on pool exhaustion)
+must leave each request's token stream TOKEN-FOR-TOKEN identical to the
+eager FIFO engine — per-uid seeded sampling makes streams independent
+of admission order, prefill batching, and preempt/readmit round-trips.
+On top of parity this file pins the policy-layer contracts: FIFO stops
+at the first non-fit, prefix-affinity admits one prefill per shared
+system prompt across waves (``prefill_calls_saved``), reach-packing's
+bypass is bounded (``max_bypass`` rounds, then a barrier), and
+preemption under a deliberately tiny pool round-trips through
+park/resurrect/rebuild without corrupting a single stream.
+"""
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.models import transformer as T
+from repro.serving import (Engine, FifoPolicy, PrefixAffinityPolicy,
+                           ReachPackingPolicy, Request, SamplingParams,
+                           get_policy)
+
+KEY = jax.random.PRNGKey(0)
+
+SAMPLED = SamplingParams(temperature=0.9, top_k=32, top_p=0.9, seed=11)
+
+_MODEL = None
+
+
+def _model():
+    """Latent (recalkv) smoke model, cached — every test reuses it."""
+    global _MODEL
+    if _MODEL is None:
+        cfg = get_config("qwen3-4b", smoke=True, recalkv_ratio=0.5)
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+        _MODEL = (cfg, T.init_params(cfg, KEY))
+    return _MODEL
+
+
+def _prompts(cfg, n=6, seed=3, base=5):
+    g = np.random.default_rng(seed)
+    return [g.integers(0, cfg.vocab_size, base + 2 * i).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve(cfg, params, prompts, *, sampling=None, max_new=6, mesh=None,
+           **kw):
+    eng = Engine(cfg, params, max_slots=4, max_len=40, sampling=sampling,
+                 mesh=mesh, **kw)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=pr.copy(), max_new_tokens=max_new))
+    done = eng.run()
+    eng.close()
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+def _req(uid, n=8, seed=None):
+    g = np.random.default_rng(uid if seed is None else seed)
+    return Request(uid=uid, prompt=g.integers(0, 99, n).astype(np.int32),
+                   max_new_tokens=4)
+
+
+# -- policy unit tests: selection order, no engine ---------------------------
+
+class TestPolicySelection:
+
+    def test_get_policy_resolves_names_and_instances(self):
+        assert get_policy(None).name == "fifo"
+        assert get_policy("prefix-affinity").groups_by_prefix
+        assert not get_policy("reach-packing").groups_by_prefix
+        inst = ReachPackingPolicy(max_bypass=1)
+        assert get_policy(inst) is inst
+        with pytest.raises(ValueError, match="unknown admission policy"):
+            get_policy("round-robin")
+
+    def test_fifo_first_nonfit_ends_wave(self):
+        """Strict head-of-line: a blocked head starves nobody behind it
+        out of ORDER — the wave just ends."""
+        q = deque(_req(i) for i in range(4))
+        got = FifoPolicy().select(q, 4, fits=lambda r: r.uid != 2)
+        assert [r.uid for r in got] == [0, 1]
+        assert [r.uid for r in q] == [2, 3]       # untouched, in order
+
+    def test_fifo_respects_limit(self):
+        q = deque(_req(i) for i in range(5))
+        got = FifoPolicy().select(q, 3, fits=None)
+        assert [r.uid for r in got] == [0, 1, 2]
+
+    def test_prefix_affinity_pulls_sharers_forward(self):
+        """Sharers of an already-selected first page join its wave;
+        non-sharers keep FIFO order among themselves."""
+        pol = PrefixAffinityPolicy()
+        pol.configure(page_size=4)
+        sys_p = np.arange(4, dtype=np.int32)
+        mk = lambda uid, pr: Request(uid=uid, prompt=pr, max_new_tokens=4)
+        a1 = mk(0, np.concatenate([sys_p, [7]]).astype(np.int32))
+        b = mk(1, (sys_p + 50).astype(np.int32))
+        a2 = mk(2, np.concatenate([sys_p, [9]]).astype(np.int32))
+        q = deque([a1, b, a2])
+        got = pol.select(q, 3)
+        assert [r.uid for r in got] == [0, 2, 1]
+
+    def test_prefix_affinity_head_never_bypassed(self):
+        """With no sharer pending, selection IS FIFO — and a non-fitting
+        pick ends the wave exactly like fifo."""
+        pol = PrefixAffinityPolicy()
+        pol.configure(page_size=4)
+        q = deque(_req(i, n=8, seed=100 + i) for i in range(4))
+        got = pol.select(q, 4, fits=lambda r: r.uid < 2)
+        assert [r.uid for r in got] == [0, 1]
+        assert [r.uid for r in q] == [2, 3]
+
+    def test_reach_packing_admits_past_blocked_head(self):
+        pol = ReachPackingPolicy(max_bypass=4)
+        q = deque([_req(0, n=30), _req(1, n=4), _req(2, n=4)])
+        got = pol.select(q, 4, fits=lambda r: len(r.prompt) < 10)
+        assert [r.uid for r in got] == [1, 2]
+        assert [r.uid for r in q] == [0]           # blocked head stays
+
+    def test_reach_packing_barrier_after_max_bypass(self):
+        """A request passed over ``max_bypass`` times becomes a hard
+        barrier: nothing behind it admits until it does."""
+        pol = ReachPackingPolicy(max_bypass=2)
+        big = _req(0, n=30)
+        fits = lambda r: len(r.prompt) < 10
+        for round_ in range(2):                    # bypassed twice
+            q = deque([big, _req(10 + round_, n=4)])
+            assert [r.uid for r in pol.select(q, 4, fits)] == [10 + round_]
+        q = deque([big, _req(20, n=4)])
+        assert pol.select(q, 4, fits) == []        # barrier holds
+        assert [r.uid for r in q] == [0, 20]
+        # once the barrier admits, its bypass count resets
+        got = pol.select(q, 4, fits=lambda r: True)
+        assert [r.uid for r in got] == [0, 20]
+        assert pol._bypassed == {}
+
+    def test_reach_packing_empty_waves_dont_count(self):
+        """Rounds that admitted nobody never charge the bound — an empty
+        wave starves nobody."""
+        pol = ReachPackingPolicy(max_bypass=1)
+        big = _req(0, n=30)
+        fits = lambda r: False
+        for _ in range(5):
+            q = deque([big])
+            assert pol.select(q, 4, fits) == []
+        assert pol._bypassed == {}
+
+    def test_pick_victim_is_youngest_admission(self):
+        cands = [(3, _req(0)), (1, _req(1)), (5, _req(2))]
+        assert FifoPolicy().pick_victim(cands) == 5
+
+
+# -- engine validation + metrics surface -------------------------------------
+
+class TestPolicyConfigSurface:
+
+    def test_prefix_affinity_requires_paged(self):
+        cfg, params = _model()
+        with pytest.raises(ValueError, match="paged"):
+            Engine(cfg, params, max_slots=2, max_len=40,
+                   policy="prefix-affinity")
+
+    def test_lazy_pages_requires_paged(self):
+        cfg, params = _model()
+        with pytest.raises(ValueError, match="paged"):
+            Engine(cfg, params, max_slots=2, max_len=40, lazy_pages=True)
+
+    def test_lazy_pages_rejects_continuous(self):
+        cfg, params = _model()
+        with pytest.raises(ValueError, match="continuous"):
+            Engine(cfg, params, max_slots=2, max_len=40,
+                   cache_layout="paged", page_size=8, n_pages=17,
+                   lazy_pages=True, overlap=True, continuous=True)
+
+    def test_metrics_report_policy_layer(self):
+        cfg, params = _model()
+        got, eng = _serve(cfg, params, _prompts(cfg, n=2),
+                          cache_layout="paged", page_size=8, n_pages=33,
+                          policy="reach-packing", staging_depth=7)
+        m = eng.metrics()
+        assert m["policy"] == "reach-packing"
+        assert m["staging_depth"] == 7
+        assert m["lazy_pages"] is False
+        assert m["preemptions"] == 0
+        assert m["prefill_calls"] > 0
+        assert m["prefill_calls_saved"] == 0
+        # pages_free / pages_parked partition residency with pages_used
+        assert m["pages_parked"] >= 0
+
+    def test_staging_depth_defaults_to_twice_slots(self):
+        cfg, params = _model()
+        eng = Engine(cfg, params, max_slots=4, max_len=40)
+        try:
+            assert eng.metrics()["staging_depth"] == 8
+            assert eng.metrics()["policy"] == "fifo"
+        finally:
+            eng.close()
+
+
+# -- stream parity: every policy is stream-invariant -------------------------
+
+_REF = {}
+
+
+def _ref_streams(sampling=None):
+    """Ring-layout eager-FIFO streams — the one reference every policy
+    and layout must reproduce bit-for-bit."""
+    key = "sampled" if sampling else "greedy"
+    if key not in _REF:
+        cfg, params = _model()
+        _REF[key], _ = _serve(cfg, params, _prompts(cfg),
+                              sampling=sampling)
+    return _REF[key]
+
+
+class TestPolicyStreamParity:
+
+    @pytest.mark.parametrize("policy", ["fifo", "prefix-affinity",
+                                        "reach-packing"])
+    @pytest.mark.parametrize("overlap", [False, True])
+    def test_paged_policy_matches_ring_fifo(self, policy, overlap):
+        cfg, params = _model()
+        got, eng = _serve(cfg, params, _prompts(cfg), cache_layout="paged",
+                          page_size=8, n_pages=33, policy=policy,
+                          overlap=overlap)
+        assert eng.metrics()["policy"] == policy
+        assert got == _ref_streams(), (policy, overlap)
+
+    def test_explicit_fifo_continuous_matches(self):
+        """policy="fifo" through the continuous-batching in-scan swap
+        path is the hardcoded admission loop, bit-identical."""
+        cfg, params = _model()
+        got, _ = _serve(cfg, params, _prompts(cfg), cache_layout="paged",
+                        page_size=8, n_pages=33, policy="fifo",
+                        overlap=True, continuous=True)
+        assert got == _ref_streams()
+
+    @pytest.mark.parametrize("policy", ["prefix-affinity", "reach-packing"])
+    def test_sampled_streams_match(self, policy):
+        cfg, params = _model()
+        got, _ = _serve(cfg, params, _prompts(cfg), sampling=SAMPLED,
+                        cache_layout="paged", page_size=8, n_pages=33,
+                        policy=policy)
+        assert got == _ref_streams(SAMPLED), policy
+
+    def test_policy_on_mesh_matches_single_device(self):
+        """(2, 4) mesh (mesh CI job; skips below 8 devices): reordered
+        admission + sharded paged pool still bit-match the reference."""
+        mesh = make_test_mesh(2, 4, skip=True)
+        cfg, params = _model()
+        got, eng = _serve(cfg, params, _prompts(cfg), mesh=mesh,
+                          cache_layout="paged", page_size=8, n_pages=33,
+                          policy="prefix-affinity", overlap=True)
+        assert eng.mesh_str == "2x4"
+        assert got == _ref_streams()
+
+
+# -- prefix-affinity: one prefill per shared system prompt -------------------
+
+class TestPrefixAffinitySharing:
+
+    def _shared_load(self, cfg, n=8, sys_len=16, seed=5):
+        g = np.random.default_rng(seed)
+        sys_p = g.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+        return [np.concatenate(
+            [sys_p, g.integers(0, cfg.vocab_size, 3).astype(np.int32)])
+            for _ in range(n)]
+
+    def test_shared_sysprompt_prefills_once_across_waves(self):
+        """8 sharers through 4 slots = two admission waves.  FIFO
+        prefills the system prompt in both; affinity's second wave rides
+        the registry-resident pages (``prefill_calls_saved``) — with
+        streams identical to FIFO's."""
+        cfg, params = _model()
+        share = self._shared_load(cfg)
+        kw = dict(cache_layout="paged", page_size=4, n_pages=65)
+        aff, ea = _serve(cfg, params, share, policy="prefix-affinity", **kw)
+        fifo, ef = _serve(cfg, params, share, **kw)
+        ma, mf = ea.metrics(), ef.metrics()
+        assert aff == fifo
+        assert ma["prefill_calls"] < mf["prefill_calls"], (ma, mf)
+        assert ma["prefill_calls_saved"] >= 1
+        assert mf["prefill_calls_saved"] == 0
+
+    def test_intra_wave_sharing_still_cow(self):
+        """Sharers landing in ONE wave share via the existing COW path:
+        a single prefill call, no cross-wave skips to count."""
+        cfg, params = _model()
+        share = self._shared_load(cfg, n=4, sys_len=24, seed=7)
+        got, eng = _serve(cfg, params, share, cache_layout="paged",
+                          page_size=8, n_pages=33, policy="prefix-affinity")
+        m = eng.metrics()
+        assert m["prefill_calls"] == 1
+        assert all(len(v) == 6 for v in got.values())
+
+
+# -- lazy reservation + preemption round-trip --------------------------------
+
+class TestLazyPreemption:
+    """page_size=4, n_pages=13 against reaches of ~23-37 tokens forces
+    the pool dry mid-decode: the policy picks a victim, the engine parks
+    it (prefix pages pinned in the registry), and re-admission
+    resurrects surviving pages / rebuilds lost ones from fed history.
+    None of that may change a token vs the ample-pool engine."""
+
+    AMPLE = dict(cache_layout="paged", page_size=4, n_pages=65)
+    TINY = dict(cache_layout="paged", page_size=4, n_pages=13,
+                lazy_pages=True)
+
+    def _run(self, sampling=None, **kw):
+        cfg, params = _model()
+        return _serve(cfg, params, _prompts(cfg, seed=5, base=7),
+                      sampling=sampling, max_new=16, sync_every=2, **kw)
+
+    def test_lazy_ample_pool_never_preempts(self):
+        ref, _ = self._run(**self.AMPLE)
+        got, eng = self._run(**dict(self.AMPLE, lazy_pages=True))
+        m = eng.metrics()
+        assert got == ref
+        assert m["preemptions"] == 0
+        assert m["lazy_pages"] is True
+
+    def test_preemption_round_trip_sync(self):
+        ref, _ = self._run(**self.AMPLE)
+        got, eng = self._run(**self.TINY)
+        m = eng.metrics()
+        assert m["preemptions"] > 0, "pool not tight enough to preempt"
+        assert got == ref, "preemption corrupted a stream"
+
+    def test_preemption_round_trip_overlap(self):
+        ref, _ = self._run(**self.AMPLE)
+        got, eng = self._run(overlap=True, **self.TINY)
+        assert eng.metrics()["preemptions"] > 0
+        assert got == ref
+
+    def test_preemption_round_trip_sampled(self):
+        """Per-uid seeded key chains make sampled streams invariant to
+        the park/resurrect round-trip too."""
+        ref, _ = self._run(sampling=SAMPLED, **self.AMPLE)
+        got, eng = self._run(sampling=SAMPLED, **self.TINY)
+        assert eng.metrics()["preemptions"] > 0
+        assert got == ref
+
+    def test_pool_stays_consistent_under_preemption(self):
+        _, eng = self._run(**self.TINY)
+        pool = eng._pages
+        pool.assert_consistent()
+        m = eng.metrics()
+        # parked pages are resident (counted used), never on the free
+        # list: used + free partitions the allocatable pool
+        assert pool.used + m["pages_free"] == m["pages_total"] - 1
+        assert m["pages_parked"] <= pool.used
